@@ -1,0 +1,73 @@
+//! Quickstart: the whole three-layer pipeline in one minute.
+//!
+//!   1. train the `tiny` preset for a few dozen steps through the AOT'd
+//!      PJRT train step (L2 artifacts, rust-driven),
+//!   2. load the exported checkpoint into the rust inference engine,
+//!   3. run the same prompt through the dense FFN baseline and the
+//!      paper's two-kernel TwELL pipeline and check they agree,
+//!   4. report the sparsity the model picked up.
+//!
+//! Run: `cargo run --release --example quickstart` (after `make artifacts`).
+
+use repro::config::{default_paths, TrainConfig};
+use repro::coordinator::{ckpt::Checkpoint, Trainer};
+use repro::data::corpus::CorpusSpec;
+use repro::model::{FfnBackend, Model};
+use repro::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let paths = default_paths();
+    let mut rt = Runtime::cpu()?;
+    println!("PJRT platform: {}", rt.platform());
+
+    // -- 1. a short sparse training run ---------------------------------
+    let cfg = TrainConfig {
+        steps: 48,
+        l1_coeff: 0.3, // mild regularization (scaled grid; EXPERIMENTS.md)
+        warmup_steps: 8,
+        log_every: 16,
+        ..TrainConfig::default()
+    };
+    let mut tr = Trainer::new(&paths, &mut rt, "tiny", cfg, "quickstart")?;
+    let corpus = CorpusSpec { n_docs: 400, ..CorpusSpec::default() };
+    let res = tr.run(&corpus)?;
+    println!(
+        "trained tiny preset: loss {:.3} -> {:.3} ({:.0} tok/s)",
+        res.records.first().map(|r| r.loss).unwrap_or(0.0),
+        res.records.last().map(|r| r.loss).unwrap_or(0.0),
+        res.tokens_per_s
+    );
+
+    // -- 2. load the checkpoint into the rust engine --------------------
+    let ck = Checkpoint::load(&res.run_dir.join("checkpoint.bin"))?;
+    let dense = Model::from_checkpoint(&ck, FfnBackend::Dense)?;
+    let sparse = Model::from_checkpoint(&ck, FfnBackend::Twell)?;
+
+    // -- 3. dense vs TwELL parity on a real prompt ----------------------
+    let bpe = repro::data::bpe::Bpe::from_json(
+        &repro::util::json::Json::read_file(
+            &res.run_dir.join("tokenizer.json"),
+        )?,
+    )?;
+    let prompt = bpe.encode("topic geography : the river");
+    let (ld, sd) = dense.forward(&prompt, 1, prompt.len());
+    let (ls, ss) = sparse.forward(&prompt, 1, prompt.len());
+    println!(
+        "dense vs TwELL logits rel err: {:.2e} (must be ~0)",
+        ls.rel_err(&ld)
+    );
+    assert!(ls.rel_err(&ld) < 1e-3);
+
+    // -- 4. the sparsity the model learned -------------------------------
+    for l in 0..sparse.cfg.n_layers {
+        println!(
+            "layer {l}: avg gate nnz {:.1} / {} neurons",
+            ss.avg_nnz(l),
+            sparse.cfg.d_ff
+        );
+    }
+    let _ = sd;
+    println!("generated: {:?}", bpe.decode(&sparse.generate(&prompt, 12)));
+    println!("quickstart OK");
+    Ok(())
+}

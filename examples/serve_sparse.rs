@@ -1,0 +1,77 @@
+//! Serving demo: load a trained checkpoint, start the dynamic-batching
+//! server with the TwELL FFN backend, fire a wave of concurrent requests
+//! and report latency/throughput (the serving-side view of table 1's
+//! forward-execution column).
+//!
+//! Run: cargo run --release --example serve_sparse -- [--run e2e_s]
+//! (trains a quick tiny model if the run does not exist yet)
+
+use std::time::Instant;
+
+use repro::config::{default_paths, Args, TrainConfig};
+use repro::coordinator::{ckpt::Checkpoint, Trainer};
+use repro::data::bpe::Bpe;
+use repro::data::corpus::CorpusSpec;
+use repro::model::{FfnBackend, Model};
+use repro::runtime::Runtime;
+use repro::serve::{BatchPolicy, ServeMetrics, Server};
+use repro::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let run = args.get_or("run", "serve_demo");
+    let n_requests = args.get_usize("requests", 24)?;
+    let max_new = args.get_usize("max-new", 12)?;
+    let paths = default_paths();
+    let dir = paths.run_dir(&run);
+    if !dir.join("checkpoint.bin").exists() {
+        println!("run {run:?} missing — training a quick tiny model ...");
+        let mut rt = Runtime::cpu()?;
+        let cfg = TrainConfig { steps: 48, l1_coeff: 0.3, warmup_steps: 8,
+                                ..TrainConfig::default() };
+        Trainer::new(&paths, &mut rt, "tiny", cfg, &run)?
+            .run(&CorpusSpec { n_docs: 400, ..CorpusSpec::default() })?;
+    }
+    let ck = Checkpoint::load(&dir.join("checkpoint.bin"))?;
+    let bpe = Bpe::from_json(&Json::read_file(&dir.join("tokenizer.json"))?)?;
+
+    for (label, backend) in
+        [("dense", FfnBackend::Dense), ("twell", FfnBackend::Twell)]
+    {
+        let model = Model::from_checkpoint(&ck, backend)?;
+        let server = Server::start(model, BatchPolicy::default());
+        let prompts = [
+            "topic geography : the river",
+            "topic chemistry : the acid reacts",
+            "source : www nih",
+            "topic history : the empire",
+        ];
+        let t0 = Instant::now();
+        let rxs: Vec<_> = (0..n_requests)
+            .map(|i| {
+                server
+                    .submit(bpe.encode(prompts[i % prompts.len()]), max_new)
+                    .1
+            })
+            .collect();
+        let mut metrics = ServeMetrics::default();
+        for rx in rxs {
+            metrics.record(rx.recv()?);
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        println!(
+            "{label:>6}: {n_requests} reqs, p50 {:.1} ms, p99 {:.1} ms, \
+             {:.0} tok/s",
+            metrics.p50_ms(),
+            metrics.p99_ms(),
+            metrics.throughput_tok_s(wall)
+        );
+        if label == "twell" {
+            let sample = &metrics.completions[0];
+            println!("   sample completion: {:?}",
+                     bpe.decode(&sample.tokens));
+        }
+        server.shutdown();
+    }
+    Ok(())
+}

@@ -1,0 +1,41 @@
+//! Sparsity analysis driver (figures 6 & 7): per-layer nnz statistics,
+//! per-layer sparse-vs-dense FFN speedup attribution with Pearson
+//! correlation, and token/position sparsity profiles, on a trained run.
+//!
+//! Run: cargo run --release --example sparsity_analysis -- [--run e2e_s]
+//! (trains a quick tiny model if the run does not exist yet)
+
+use repro::config::{default_paths, Args, TrainConfig};
+use repro::coordinator::{ckpt::Checkpoint, Trainer};
+use repro::data::bpe::Bpe;
+use repro::data::corpus::CorpusSpec;
+use repro::runtime::{ModelBundle, Runtime, TrainState};
+use repro::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let run = args.get_or("run", "analysis_demo");
+    let paths = default_paths();
+    let dir = paths.run_dir(&run);
+    let mut rt = Runtime::cpu()?;
+    if !dir.join("checkpoint.bin").exists() {
+        println!("run {run:?} missing — training a quick sparse tiny model");
+        let cfg = TrainConfig { steps: 64, l1_coeff: 0.5, warmup_steps: 8,
+                                ..TrainConfig::default() };
+        Trainer::new(&paths, &mut rt, "tiny", cfg, &run)?
+            .run(&CorpusSpec { n_docs: 600, ..CorpusSpec::default() })?;
+    }
+    let ck = Checkpoint::load(&dir.join("checkpoint.bin"))?;
+    let bundle = ModelBundle::open(&paths.artifacts, &ck.config.name)?;
+    let params: Vec<Vec<f32>> =
+        ck.params.iter().map(|(_, _, d)| d.clone()).collect();
+    let state = TrainState::from_params(&bundle, &params)?;
+    let bpe = Bpe::from_json(&Json::read_file(&dir.join("tokenizer.json"))?)?;
+
+    println!("== figure 6: layer statistics + speedup attribution ==");
+    repro::analysis::analyze_layers(&bundle, &mut rt, &state, &ck, &dir)?;
+    println!("\n== figure 7: token / position sparsity profiles ==");
+    repro::analysis::analyze_tokens(&bundle, &mut rt, &state, &bpe, &dir)?;
+    println!("\nresults saved next to the run: {dir:?}");
+    Ok(())
+}

@@ -1,0 +1,262 @@
+"""AOT compile path: lower the L2 model to HLO *text* artifacts + manifest.
+
+Run once by `make artifacts`; python never appears on the request path.
+Interchange format is HLO text, NOT `.serialize()`: jax >= 0.5 emits
+HloModuleProtos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the rust `xla` crate) rejects; the text parser reassigns ids
+and round-trips cleanly (see /opt/xla-example/README.md).
+
+Per preset this emits:
+    artifacts/<preset>/init.hlo.txt          seed               -> params
+    artifacts/<preset>/train_step.hlo.txt    params,opt,tokens, -> params',
+                                             lr,l1,step            opt',stats
+    artifacts/<preset>/train_step8.hlo.txt   8 microbatches per call
+                                             (lax.scan — amortizes the PJRT
+                                             host round-trip; §Perf L2)
+    artifacts/<preset>/forward.hlo.txt       params,tokens      -> logits
+    artifacts/<preset>/score.hlo.txt         params,tokens      -> logprob,nnz
+    artifacts/<preset>/forward_stats.hlo.txt params,tokens      -> nnz[L,B,S]
+    artifacts/<preset>/reinit.hlo.txt        params,active,seed,lam -> params
+    artifacts/<preset>/manifest.json         io contract for rust
+plus (tiny preset) ffn_twell.hlo.txt — the Pallas TwELL FFN lowered through
+interpret mode, proving the L1 kernel composes through AOT into rust.
+
+`--goldens` additionally dumps reference vectors for the rust sparse-kernel
+tests so the two TwELL/hybrid implementations stay in lockstep.
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .configs import PRESETS, L1_GRID
+from .kernels import ref
+
+SCAN_K = 8  # microbatches fused per train_step8 call
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dtype_name(dt) -> str:
+    return {"float32": "f32", "int32": "i32", "uint32": "u32",
+            "bool": "pred"}[np.dtype(dt).name]
+
+
+def _io_spec(fn, example_args):
+    """Describe the flat input/output avals of `fn` for the manifest."""
+    out = jax.eval_shape(fn, *example_args)
+    flat_out, _ = jax.tree_util.tree_flatten(out)
+    ins = [
+        {"shape": list(a.shape), "dtype": _dtype_name(a.dtype)}
+        for a in jax.tree_util.tree_leaves(example_args)
+    ]
+    outs = [{"shape": list(a.shape), "dtype": _dtype_name(a.dtype)} for a in flat_out]
+    return ins, outs
+
+
+def _lower(fn, example_args, path):
+    text = to_hlo_text(jax.jit(fn, keep_unused=True).lower(*example_args))
+    with open(path, "w") as f:
+        f.write(text)
+    return _io_spec(fn, example_args)
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_step_k(cfg, params, ms, vs, tokens_k, lr_k, l1_coeff, step0):
+    """SCAN_K optimizer steps per PJRT call (host-round-trip amortization)."""
+    n = len(params)
+
+    def body(carry, inp):
+        params, ms, vs, i = carry
+        tokens, lr = inp
+        p, m, v, loss, ce, l1, nnz, active, gnorm = M.train_step(
+            cfg, list(params), list(ms), list(vs), tokens, lr, l1_coeff,
+            step0 + i,
+        )
+        return (tuple(p), tuple(m), tuple(v), i + 1.0), (
+            loss, ce, nnz, active, gnorm,
+        )
+
+    (p, m, v, _), (loss, ce, nnz, active, gnorm) = jax.lax.scan(
+        body, (tuple(params), tuple(ms), tuple(vs), 0.0), (tokens_k, lr_k)
+    )
+    return (list(p), list(m), list(v), loss, ce, nnz,
+            jnp.sum(active, axis=0), gnorm)
+
+
+def build_preset(name: str, outdir: str) -> dict:
+    cfg = PRESETS[name]
+    d = os.path.join(outdir, name)
+    os.makedirs(d, exist_ok=True)
+    specs = M.param_specs(cfg)
+    pspecs = [_spec(s) for _, s in specs]
+    b, s = cfg.train_batch, cfg.seq_len
+    tok_train = _spec((b, s + 1), jnp.int32)
+    tok_fwd = _spec((cfg.score_batch, s), jnp.int32)
+    tok_score = _spec((cfg.score_batch, s + 1), jnp.int32)
+    scalar_f = _spec((), jnp.float32)
+    scalar_i = _spec((), jnp.int32)
+    arts = {}
+
+    def emit(key, fn, args):
+        path = os.path.join(d, f"{key}.hlo.txt")
+        ins, outs = _lower(fn, args, path)
+        arts[key] = {"file": f"{key}.hlo.txt", "inputs": ins, "outputs": outs}
+        print(f"  [{name}] {key}: {len(ins)} in / {len(outs)} out")
+
+    emit("init", lambda seed: M.init_params(cfg, seed), (scalar_i,))
+    n = len(pspecs)
+    emit(
+        "train_step",
+        lambda *a: M.train_step(
+            cfg, list(a[:n]), list(a[n:2 * n]), list(a[2 * n:3 * n]),
+            a[3 * n], a[3 * n + 1], a[3 * n + 2], a[3 * n + 3],
+        ),
+        (*pspecs, *pspecs, *pspecs, tok_train, scalar_f, scalar_f, scalar_f),
+    )
+    emit(
+        "train_step8",
+        lambda *a: train_step_k(
+            cfg, list(a[:n]), list(a[n:2 * n]), list(a[2 * n:3 * n]),
+            a[3 * n], a[3 * n + 1], a[3 * n + 2], a[3 * n + 3],
+        ),
+        (*pspecs, *pspecs, *pspecs,
+         _spec((SCAN_K, b, s + 1), jnp.int32), _spec((SCAN_K,)),
+         scalar_f, scalar_f),
+    )
+    emit(
+        "forward",
+        lambda *a: M.forward(cfg, list(a[:n]), a[n])[0],
+        (*pspecs, tok_fwd),
+    )
+    emit(
+        "score",
+        lambda *a: M.score(cfg, list(a[:n]), a[n]),
+        (*pspecs, tok_score),
+    )
+    emit(
+        "forward_stats",
+        lambda *a: M.forward_stats(cfg, list(a[:n]), a[n]),
+        (*pspecs, tok_fwd),
+    )
+    emit(
+        "reinit",
+        lambda *a: M.reinit_step(cfg, list(a[:n]), a[n], a[n + 1], a[n + 2]),
+        (*pspecs, _spec((cfg.n_layers, cfg.d_ff)), scalar_i, scalar_f),
+    )
+    if name == "tiny":
+        # Pallas TwELL FFN through AOT (integration proof; small shapes —
+        # interpret-mode pallas lowers to sizeable HLO)
+        emit(
+            "ffn_twell",
+            lambda x, wg, wu, wd: M.ffn_twell_demo(cfg, x, wg, wu, wd),
+            (_spec((32, cfg.d_model)), _spec((cfg.d_model, cfg.d_ff)),
+             _spec((cfg.d_model, cfg.d_ff)), _spec((cfg.d_ff, cfg.d_model))),
+        )
+
+    manifest = {
+        "preset": name,
+        "config": cfg.to_dict(),
+        "scan_k": SCAN_K,
+        "l1_grid": L1_GRID,
+        "params": [
+            {"name": nm, "shape": list(sh)} for nm, sh in specs
+        ],
+        "artifacts": arts,
+    }
+    with open(os.path.join(d, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+# ---------------------------------------------------------------------------
+# Golden vectors for the rust sparse kernels
+# ---------------------------------------------------------------------------
+
+def dump_goldens(outdir: str):
+    """Small reference vectors keeping rust's TwELL/hybrid in lockstep with
+    ref.py.  Flat JSON (lists) — parsed by rust/src/util/json.rs."""
+    rng = np.random.default_rng(1234)
+    m_dim, k_dim, n_dim = 24, 16, 64
+    tile_n, comp = 32, 2
+    x = rng.normal(size=(m_dim, k_dim)).astype(np.float32)
+    wg = (rng.normal(size=(k_dim, n_dim)) * 0.2).astype(np.float32)
+    wu = (rng.normal(size=(k_dim, n_dim)) * 0.2).astype(np.float32)
+    wd = (rng.normal(size=(n_dim, k_dim)) * 0.2).astype(np.float32)
+    # bias the gate toward sparsity so packs don't overflow
+    hg = np.maximum(x @ wg - 0.8, 0.0)
+    h_v, h_i, h_nz = ref.twell_pack_slow(hg, tile_n, comp)
+    y_fused = np.zeros((m_dim, k_dim), np.float64)
+    slots = tile_n // comp
+    for mm in range(m_dim):
+        for t in range(h_nz.shape[1]):
+            for c in range(h_nz[mm, t]):
+                j = t * slots + c
+                nn = h_i[mm, j]
+                u = float(x[mm] @ wu[:, nn])
+                y_fused[mm] += float(h_v[mm, j]) * u * wd[nn]
+    hyb = ref.hybrid_partition_slow(hg, 8, 8)
+    w2 = (rng.normal(size=(n_dim, k_dim)) * 0.2).astype(np.float32)
+    y_hyb = ref.hybrid_to_dense_matmul_ref(hyb, w2)
+    golden = {
+        "m": m_dim, "k": k_dim, "n": n_dim, "tile_n": tile_n, "comp": comp,
+        "x": x.flatten().tolist(),
+        "wg": wg.flatten().tolist(),
+        "wu": wu.flatten().tolist(),
+        "wd": wd.flatten().tolist(),
+        "gate_bias": 0.8,
+        "h_v": h_v.flatten().tolist(),
+        "h_i": h_i.flatten().astype(int).tolist(),
+        "h_nz": h_nz.flatten().astype(int).tolist(),
+        "y_fused": y_fused.astype(np.float32).flatten().tolist(),
+        "ell_width": 8,
+        "max_dense_rows": 8,
+        "ell_val": hyb["ell_val"].flatten().tolist(),
+        "ell_col": hyb["ell_col"].flatten().astype(int).tolist(),
+        "row_nnz": hyb["row_nnz"].astype(int).tolist(),
+        "is_dense": [int(v) for v in hyb["is_dense"]],
+        "w2": w2.flatten().tolist(),
+        "y_hybrid": y_hyb.astype(np.float32).flatten().tolist(),
+    }
+    path = os.path.join(outdir, "goldens.json")
+    with open(path, "w") as f:
+        json.dump(golden, f)
+    print(f"  goldens -> {path}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--presets", default="tiny,xs,s,m,l,m-silu,m-nongated")
+    ap.add_argument("--goldens", action="store_true", default=True)
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    for preset in args.presets.split(","):
+        preset = preset.strip()
+        if not preset:
+            continue
+        print(f"lowering preset {preset} ...")
+        build_preset(preset, args.out)
+    if args.goldens:
+        dump_goldens(args.out)
+    print("AOT artifacts complete.")
+
+
+if __name__ == "__main__":
+    main()

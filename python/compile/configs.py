@@ -1,0 +1,78 @@
+"""Model/training preset definitions shared between the python compile path
+and the rust coordinator (via the AOT manifest).
+
+The presets are width-scaled stand-ins for the paper's 0.5B/1B/1.5B/2B
+models (hidden 2048, ffn 5632, layers 8/18/28/38): we keep the exact shape
+ratios (d_ff = 8/3 * d_model gated, 4 * d_model non-gated; head_dim 64 ->
+scaled to 32) and scale width by 1/16.  See DESIGN.md section 5.
+"""
+
+from dataclasses import dataclass, asdict, replace
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab_size: int = 512
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    d_ff: int = 352            # gated: ~8/3 * d_model, multiple of 16
+    gated: bool = True
+    activation: str = "relu"   # "relu" | "silu"
+    rope_theta: float = 10_000.0
+    tied_embeddings: bool = True
+    rmsnorm_eps: float = 1e-5
+    init_std: float = 0.02
+    # static execution shapes baked into the AOT artifacts
+    train_batch: int = 16
+    seq_len: int = 128
+    score_batch: int = 32
+    # TwELL / hybrid kernel parameters (paper section 3; appendix B.2.1)
+    twell_tile_n: int = 32
+    twell_comp: int = 4        # compression factor C; slots per tile = T/C
+    ell_width: int = 128       # hybrid ELL max nnz per row
+    dense_backup_frac: float = 0.125  # dense tail rows = frac * M
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+
+_BASE = ModelConfig(name="base")
+
+# Scale family (stand-ins for the paper's 0.5B/1B/1.5B/2B chinchilla runs).
+PRESETS = {
+    "xs": replace(_BASE, name="xs", n_layers=2),
+    "s": replace(_BASE, name="s", n_layers=4),
+    "m": replace(_BASE, name="m", n_layers=6),
+    "l": replace(_BASE, name="l", n_layers=8),
+    # appendix C variants (on the `m` scale, like the paper's 1.5B studies)
+    "m-silu": replace(_BASE, name="m-silu", n_layers=6, activation="silu"),
+    "m-nongated": replace(
+        _BASE, name="m-nongated", n_layers=6, gated=False, d_ff=512
+    ),
+    # tiny preset for tests and the quickstart example
+    "tiny": replace(
+        _BASE,
+        name="tiny",
+        vocab_size=320,
+        d_model=64,
+        n_layers=2,
+        n_heads=2,
+        d_ff=176,
+        train_batch=4,
+        seq_len=64,
+        score_batch=8,
+        ell_width=64,
+        twell_tile_n=16,
+    ),
+}
+
+# The paper's L1-coefficient grid (section 4.2).  Our scaled models sit in a
+# different loss landscape, so the coordinator rescales this grid by
+# `l1_scale` recorded in EXPERIMENTS.md; the *relative* spacing is kept.
+L1_GRID = [0.0, 5e-6, 1e-5, 1.5e-5, 2e-5, 3e-5, 5e-5, 1e-4]

@@ -1,0 +1,186 @@
+"""Hybrid ELL+dense training format (paper section 3.4/3.5, listing 4).
+
+The hybrid format dynamically routes each activation row either into an
+aggressively compact ELL matrix (nnz <= ELL_WIDTH) or a dense backup tail.
+This module provides:
+
+  * `twell_to_hybrid_kernel` — a Pallas kernel mirroring listing 4: one
+    program per row block, an intra-row prefix scan over the per-tile
+    non-zero counts to compact TwELL tiles into contiguous ELL storage,
+    plus L0/L1 statistics accumulation.
+  * jnp-level hybrid ops (`hybrid_matmul`, `dense_to_hybrid_matmul`) with
+    fixed shapes, used by model-level tests; the throughput-bearing
+    implementations live in rust/src/sparse/hybrid.rs.
+
+Because XLA requires static shapes, the dense tail has a fixed capacity
+(max_dense_rows) and routing is expressed with masks; the semantics
+(including drop-and-flag on overflow, appendix B.2.1) exactly match the
+reference in ref.py and the rust implementation.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True
+
+
+# ---------------------------------------------------------------------------
+# TwELL -> ELL compaction (listing 4's core, as a Pallas kernel)
+# ---------------------------------------------------------------------------
+
+def _twell_to_ell_kernel(
+    hv_ref, hi_ref, hnz_ref, ev_ref, ec_ref, rn_ref, l0_ref, l1_ref,
+    *, tile_n, comp, ell_width,
+):
+    """Compact a block of TwELL rows into contiguous ELL rows.
+
+    CUDA listing 4 gives one warp per row and uses __shfl_up prefix scans;
+    the vector-unit rendering is an exclusive cumsum over per-tile counts.
+    """
+    slots = tile_n // comp
+    hv = hv_ref[...]                  # (T_m, NC)
+    hi = hi_ref[...]
+    hnz = hnz_ref[...]                # (T_m, N_T)
+    # exclusive prefix over tile counts = start offset of each tile's data
+    start = jnp.cumsum(hnz, axis=1) - hnz            # (T_m, N_T)
+    slot = jax.lax.broadcasted_iota(jnp.int32, hv.shape, 1)
+    t = slot // slots
+    c = slot % slots
+    valid = c < jnp.take_along_axis(hnz, t, axis=1)
+    dest = jnp.take_along_axis(start, t, axis=1) + c  # target ELL column
+    # invalid or beyond-ELL_WIDTH entries are dropped (overflow rows are
+    # promoted to the dense tail by the caller; see hybrid_partition)
+    dest = jnp.where(valid & (dest < ell_width), dest, ell_width)
+    rows = jax.lax.broadcasted_iota(jnp.int32, hv.shape, 0)
+    ev = jnp.zeros((hv.shape[0], ell_width), jnp.float32)
+    ec = jnp.zeros((hv.shape[0], ell_width), jnp.int32)
+    ev_ref[...] = ev.at[rows, dest].set(hv, mode="drop")
+    ec_ref[...] = ec.at[rows, dest].set(hi, mode="drop")
+    total = hnz.sum(axis=1, keepdims=True)
+    rn_ref[...] = total                # true occupancy, even when > width
+    # L0/L1 statistics (listing 4 accumulates these for the training loss)
+    l0_ref[...] = total.astype(jnp.float32)
+    l1_ref[...] = jnp.where(valid, hv, 0.0).sum(axis=1, keepdims=True)
+
+
+def twell_to_ell(h_v, h_i, h_nz, *, tile_n=32, comp=4, ell_width=128,
+                 tile_m=8):
+    """Compact TwELL storage into fixed-width ELL rows + stats.
+
+    Returns (ell_val f32[M,W], ell_col i32[M,W], row_nnz i32[M,1],
+    l0 f32[M,1], l1 f32[M,1]).  row_nnz holds the *true* count so callers
+    can detect rows needing dense-tail promotion (row_nnz > W).
+    """
+    m_dim, nc = h_v.shape
+    n_tiles = h_nz.shape[1]
+    grid = (m_dim // tile_m,)
+    return pl.pallas_call(
+        functools.partial(
+            _twell_to_ell_kernel, tile_n=tile_n, comp=comp,
+            ell_width=ell_width,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_m, nc), lambda i: (i, 0)),
+            pl.BlockSpec((tile_m, nc), lambda i: (i, 0)),
+            pl.BlockSpec((tile_m, n_tiles), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_m, ell_width), lambda i: (i, 0)),
+            pl.BlockSpec((tile_m, ell_width), lambda i: (i, 0)),
+            pl.BlockSpec((tile_m, 1), lambda i: (i, 0)),
+            pl.BlockSpec((tile_m, 1), lambda i: (i, 0)),
+            pl.BlockSpec((tile_m, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m_dim, ell_width), jnp.float32),
+            jax.ShapeDtypeStruct((m_dim, ell_width), jnp.int32),
+            jax.ShapeDtypeStruct((m_dim, 1), jnp.int32),
+            jax.ShapeDtypeStruct((m_dim, 1), jnp.float32),
+            jax.ShapeDtypeStruct((m_dim, 1), jnp.float32),
+        ],
+        interpret=INTERPRET,
+    )(h_v, h_i, h_nz)
+
+
+# ---------------------------------------------------------------------------
+# jnp-level hybrid operations (static-shape renderings of algorithm 3)
+# ---------------------------------------------------------------------------
+
+def hybrid_partition(h, *, ell_width=128, max_dense_rows=None):
+    """Dense (M, N) -> hybrid dict with fixed shapes.
+
+    Pure jnp version of the routing rule; matches
+    ref.hybrid_partition_slow bit-for-bit on the ELL component, and stores
+    overflow rows in a fixed-capacity dense tail addressed by a rank
+    computed with a cumulative sum (the jnp rendering of
+    get_or_allocate_dense_row from listing 7).
+    """
+    m_dim, n_dim = h.shape
+    if max_dense_rows is None:
+        max_dense_rows = max(1, m_dim // 8)
+    nz = h != 0.0
+    row_nnz = nz.sum(axis=1).astype(jnp.int32)
+    is_dense = row_nnz > ell_width
+    # ELL compaction for sparse rows
+    pos = jnp.cumsum(nz.astype(jnp.int32), axis=1) - 1
+    dest = jnp.where(nz & ~is_dense[:, None], jnp.minimum(pos, ell_width), ell_width)
+    rows = jax.lax.broadcasted_iota(jnp.int32, h.shape, 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, h.shape, 1)
+    ell_val = jnp.zeros((m_dim, ell_width), h.dtype).at[rows, dest].set(
+        h, mode="drop"
+    )
+    ell_col = jnp.zeros((m_dim, ell_width), jnp.int32).at[rows, dest].set(
+        cols, mode="drop"
+    )
+    # dense tail routing
+    rank = jnp.cumsum(is_dense.astype(jnp.int32)) - 1
+    dense_map = jnp.where(
+        is_dense & (rank < max_dense_rows), rank, -1
+    ).astype(jnp.int32)
+    tail_dest = jnp.where(dense_map >= 0, dense_map, max_dense_rows)
+    dense_tail = jnp.zeros((max_dense_rows, n_dim), h.dtype).at[
+        tail_dest
+    ].set(h, mode="drop")
+    overflow = jnp.any(is_dense & (dense_map < 0))
+    return dict(
+        ell_val=ell_val, ell_col=ell_col, row_nnz=row_nnz,
+        is_dense=is_dense, dense_tail=dense_tail, dense_map=dense_map,
+        overflow=overflow, n_dim=n_dim,
+    )
+
+
+def hybrid_matmul(hyb, w):
+    """C = hybrid(A) @ W (algorithm 3): ELL gather part + dense-tail part."""
+    slot = jax.lax.broadcasted_iota(jnp.int32, hyb["ell_val"].shape, 1)
+    valid = (slot < hyb["row_nnz"][:, None]) & (~hyb["is_dense"][:, None])
+    coeff = jnp.where(valid, hyb["ell_val"], 0.0)
+    w_g = jnp.take(w, hyb["ell_col"], axis=0)      # (M, W, N_out)
+    sparse_part = jnp.einsum("mw,mwn->mn", coeff, w_g)
+    tail = hyb["dense_tail"] @ w                   # (D, N_out)
+    dense_part = jnp.where(
+        (hyb["dense_map"] >= 0)[:, None],
+        jnp.take(tail, jnp.maximum(hyb["dense_map"], 0), axis=0),
+        0.0,
+    )
+    return sparse_part + dense_part
+
+
+def hybrid_densify(hyb):
+    """Materialize the hybrid matrix back to dense (invariant checks)."""
+    m_dim = hyb["row_nnz"].shape[0]
+    slot = jax.lax.broadcasted_iota(jnp.int32, hyb["ell_val"].shape, 1)
+    valid = (slot < hyb["row_nnz"][:, None]) & (~hyb["is_dense"][:, None])
+    rows = jax.lax.broadcasted_iota(jnp.int32, hyb["ell_val"].shape, 0)
+    dest_col = jnp.where(valid, hyb["ell_col"], hyb["n_dim"])
+    out = jnp.zeros((m_dim, hyb["n_dim"]), hyb["ell_val"].dtype)
+    out = out.at[rows, dest_col].set(hyb["ell_val"], mode="drop")
+    dense_rows = jnp.where(
+        (hyb["dense_map"] >= 0)[:, None],
+        jnp.take(hyb["dense_tail"], jnp.maximum(hyb["dense_map"], 0), axis=0),
+        0.0,
+    )
+    return out + dense_rows

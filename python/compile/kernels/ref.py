@@ -1,0 +1,211 @@
+"""Pure-jnp / numpy reference oracles for the sparse kernels.
+
+Everything in this file is deliberately simple (loop-based where that is
+the clearest rendering of the paper's pseudocode) so it can serve as the
+ground truth for:
+  * pytest checks of the Pallas kernels (interpret mode),
+  * golden vectors exported for the rust kernel tests (see aot.py
+    --goldens), keeping the two implementations of TwELL/hybrid in sync.
+
+Shapes follow the paper's notation: x in R^{M x K}, W_g/W_u in R^{K x N},
+W_d in R^{N x K}; TwELL tile width T, compression factor C, slots = T // C.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Dense feed-forward references (paper eq. 1 / eq. 5)
+# ---------------------------------------------------------------------------
+
+def act(z, kind):
+    if kind == "relu":
+        return jnp.maximum(z, 0.0)
+    if kind == "silu":
+        return z * (1.0 / (1.0 + jnp.exp(-z)))
+    raise ValueError(f"unknown activation {kind!r}")
+
+
+def gated_ffn(x, wg, wu, wd, activation="relu"):
+    """y = (sigma(x Wg) * (x Wu)) Wd — the gated block, paper eq. (1)."""
+    hg = act(x @ wg, activation)
+    hu = x @ wu
+    return (hg * hu) @ wd
+
+
+def nongated_ffn(x, wu, wd, activation="relu"):
+    """y = sigma(x Wu) Wd — the original 2-layer block, paper eq. (5)."""
+    return act(x @ wu, activation) @ wd
+
+
+# ---------------------------------------------------------------------------
+# TwELL reference (paper section 3.2, algorithm 1)
+# ---------------------------------------------------------------------------
+
+def twell_pack_slow(h, tile_n, comp):
+    """Reference TwELL pack via plain python loops (algorithm 1 verbatim).
+
+    h: (M, N) dense post-ReLU activations.
+    Returns (h_v, h_i, h_nz) with shapes (M, N // C), (M, N // C), (M, N_T).
+    Overflowing non-zeros (more than T/C in one tile) are dropped, matching
+    the kernels' drop-and-flag semantics; callers choose C so this never
+    happens in practice (paper appendix A.1).
+    """
+    h = np.asarray(h)
+    m_dim, n_dim = h.shape
+    assert n_dim % tile_n == 0
+    n_tiles = n_dim // tile_n
+    slots = tile_n // comp
+    h_v = np.zeros((m_dim, n_dim // comp), dtype=h.dtype)
+    h_i = np.zeros((m_dim, n_dim // comp), dtype=np.int32)
+    h_nz = np.zeros((m_dim, n_tiles), dtype=np.int32)
+    for t in range(n_tiles):
+        n0 = t * tile_n
+        for r in range(m_dim):
+            z = 0
+            for c in range(tile_n):
+                if h[r, n0 + c] > 0:
+                    if z < slots:
+                        h_v[r, t * slots + z] = h[r, n0 + c]
+                        h_i[r, t * slots + z] = n0 + c
+                    z += 1
+            h_nz[r, t] = min(z, slots)
+    return h_v, h_i, h_nz
+
+
+def twell_unpack(h_v, h_i, h_nz, n_dim, tile_n, comp):
+    """Inverse of twell_pack: scatter values back to a dense (M, N)."""
+    h_v = np.asarray(h_v)
+    h_i = np.asarray(h_i)
+    h_nz = np.asarray(h_nz)
+    m_dim = h_v.shape[0]
+    slots = tile_n // comp
+    out = np.zeros((m_dim, n_dim), dtype=h_v.dtype)
+    for r in range(m_dim):
+        for t in range(h_nz.shape[1]):
+            for c in range(h_nz[r, t]):
+                j = t * slots + c
+                out[r, h_i[r, j]] = h_v[r, j]
+    return out
+
+
+def twell_gate_ref(x, wg, tile_n, comp):
+    """Dense gate matmul + ReLU + reference pack (what algorithm 1 fuses)."""
+    hg = np.maximum(np.asarray(x) @ np.asarray(wg), 0.0)
+    return twell_pack_slow(hg, tile_n, comp)
+
+
+def fused_ffn_ref(x, wg, wu, wd, tile_n, comp):
+    """Reference for the fused inference pipeline (algorithms 1+2, eq. 3).
+
+    Computed the honest sparse way (via the packed format), not as the
+    dense formula, so it also exercises the pack/unpack path.
+    """
+    x = np.asarray(x)
+    h_v, h_i, h_nz = twell_gate_ref(x, wg, tile_n, comp)
+    wu = np.asarray(wu)
+    wd = np.asarray(wd)
+    slots = tile_n // comp
+    y = np.zeros((x.shape[0], wd.shape[1]), dtype=np.float64)
+    for m in range(x.shape[0]):
+        for t in range(h_nz.shape[1]):
+            for c in range(h_nz[m, t]):
+                j = t * slots + c
+                n = h_i[m, j]
+                u = float(x[m] @ wu[:, n])            # implicit h_u element
+                y[m] += float(h_v[m, j]) * u * wd[n]  # scaled W_d row
+    return y.astype(x.dtype)
+
+
+def down_ref(h_v, h_i, h_nz, wd, tile_n, comp):
+    """Reference for the non-gated down projection from TwELL (App. A.1)."""
+    h_v = np.asarray(h_v)
+    h_i = np.asarray(h_i)
+    h_nz = np.asarray(h_nz)
+    wd = np.asarray(wd)
+    slots = tile_n // comp
+    m_dim = h_v.shape[0]
+    y = np.zeros((m_dim, wd.shape[1]), dtype=np.float64)
+    for m in range(m_dim):
+        for t in range(h_nz.shape[1]):
+            for c in range(h_nz[m, t]):
+                j = t * slots + c
+                y[m] += float(h_v[m, j]) * wd[h_i[m, j]]
+    return y.astype(h_v.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Hybrid format reference (paper section 3.4, algorithm 3)
+# ---------------------------------------------------------------------------
+
+def hybrid_partition_slow(h, ell_width, max_dense_rows):
+    """Reference hybrid partition: rows with nnz <= ell_width go to the ELL
+    component, the rest to the dense backup (up to max_dense_rows, then the
+    overflow flag is raised — paper appendix B.2.1)."""
+    h = np.asarray(h)
+    m_dim, n_dim = h.shape
+    ell_val = np.zeros((m_dim, ell_width), dtype=h.dtype)
+    ell_col = np.zeros((m_dim, ell_width), dtype=np.int32)
+    row_nnz = np.zeros(m_dim, dtype=np.int32)
+    is_dense = np.zeros(m_dim, dtype=bool)
+    dense_tail = np.zeros((max_dense_rows, n_dim), dtype=h.dtype)
+    dense_map = -np.ones(m_dim, dtype=np.int32)
+    overflow = False
+    next_dense = 0
+    for r in range(m_dim):
+        cols = np.nonzero(h[r])[0]
+        row_nnz[r] = len(cols)
+        if len(cols) <= ell_width:
+            ell_val[r, : len(cols)] = h[r, cols]
+            ell_col[r, : len(cols)] = cols
+        else:
+            is_dense[r] = True
+            if next_dense < max_dense_rows:
+                dense_map[r] = next_dense
+                dense_tail[next_dense] = h[r]
+                next_dense += 1
+            else:
+                overflow = True
+    return dict(
+        ell_val=ell_val,
+        ell_col=ell_col,
+        row_nnz=row_nnz,
+        is_dense=is_dense,
+        dense_tail=dense_tail,
+        dense_map=dense_map,
+        n_dense=next_dense,
+        overflow=overflow,
+        n_dim=n_dim,
+    )
+
+
+def hybrid_to_dense_matmul_ref(hyb, w):
+    """C = hybrid(A) @ W, reference for algorithm 3."""
+    w = np.asarray(w)
+    m_dim = hyb["row_nnz"].shape[0]
+    out = np.zeros((m_dim, w.shape[1]), dtype=np.float64)
+    for r in range(m_dim):
+        if hyb["is_dense"][r]:
+            d = hyb["dense_map"][r]
+            if d >= 0:
+                out[r] = np.asarray(hyb["dense_tail"][d], dtype=np.float64) @ w
+        else:
+            for k in range(hyb["row_nnz"][r]):
+                out[r] += float(hyb["ell_val"][r, k]) * w[hyb["ell_col"][r, k]]
+    return out.astype(w.dtype)
+
+
+def hybrid_densify(hyb):
+    """Materialize a hybrid matrix back to dense (for invariant checks)."""
+    m_dim = hyb["row_nnz"].shape[0]
+    out = np.zeros((m_dim, hyb["n_dim"]), dtype=hyb["ell_val"].dtype)
+    for r in range(m_dim):
+        if hyb["is_dense"][r]:
+            d = hyb["dense_map"][r]
+            if d >= 0:
+                out[r] = hyb["dense_tail"][d]
+        else:
+            for k in range(hyb["row_nnz"][r]):
+                out[r, hyb["ell_col"][r, k]] = hyb["ell_val"][r, k]
+    return out

@@ -1,0 +1,213 @@
+"""Pallas kernels for the TwELL sparse format (paper section 3, alg. 1+2).
+
+TPU adaptation of the paper's H100 CUDA kernels (DESIGN.md section
+"Hardware adaptation"):
+
+  * Algorithm 1 (`twell_gate_matmul`): a tiled matmul over (T_m, T_n)
+    output blocks — on TPU each block is a VMEM-resident tile produced by
+    the MXU — whose *epilogue* applies ReLU and packs the block into the
+    TwELL layout before it is written back to HBM.  The CUDA version does
+    the pack with a CTA-scoped atomic counter on the WGMMA register
+    fragment; the TPU/VPU version does the equivalent with a per-row
+    prefix-sum (cumsum) over the non-zero mask, which is the natural
+    vector-unit rendering of the same "local non-zero count" (alg. 1,
+    lines 8-15).
+  * Algorithm 2 (`twell_fused_ffn`): consumes the TwELL gate activations
+    and fuses the up and down projections, touching only the W_u columns /
+    W_d rows named by the packed indices (eq. 3).
+
+All kernels run with `interpret=True`: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, so interpret mode is the correctness path and the
+rust CPU kernels (`rust/src/sparse/`) are the performance path.  Estimated
+VMEM footprint / MXU utilization for a real TPU are derived from the
+BlockSpecs in EXPERIMENTS.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Pallas interpret mode is mandatory here — see module docstring.
+INTERPRET = True
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1: tiled gate matmul with TwELL pack in the epilogue
+# ---------------------------------------------------------------------------
+
+def _gate_pack_kernel(x_ref, wg_ref, hv_ref, hi_ref, hnz_ref, *, tile_n, comp):
+    """One (T_m, T_n) output tile: MXU matmul + ReLU + TwELL pack epilogue."""
+    j = pl.program_id(1)
+    slots = tile_n // comp
+    # matmul for this tile (f32 accumulation, as the paper's WGMMA does)
+    s = jnp.maximum(
+        jnp.dot(x_ref[...], wg_ref[...], preferred_element_type=jnp.float32),
+        0.0,
+    )  # (T_m, T_n)
+    mask = s > 0.0
+    # per-row running non-zero count (alg. 1 line 8/15) as a prefix sum
+    pos = jnp.cumsum(mask.astype(jnp.int32), axis=1) - 1  # (T_m, T_n)
+    # destination slot; invalid or overflowing entries land on `slots`,
+    # which the scatter drops (paper: overflow is made "practically
+    # impossible" by a conservative C; we drop-and-count like the kernels)
+    dest = jnp.where(mask, jnp.minimum(pos, slots), slots)
+    rows = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1) + j * tile_n
+    hv = jnp.zeros((s.shape[0], slots), jnp.float32)
+    hi = jnp.zeros((s.shape[0], slots), jnp.int32)
+    hv_ref[...] = hv.at[rows, dest].set(s, mode="drop")
+    hi_ref[...] = hi.at[rows, dest].set(cols, mode="drop")
+    hnz_ref[...] = jnp.minimum(
+        mask.astype(jnp.int32).sum(axis=1, keepdims=True), slots
+    )
+
+
+def twell_gate_matmul(x, wg, *, tile_n=32, comp=4, tile_m=8):
+    """h_g = ReLU(x @ Wg) materialized directly in TwELL (algorithm 1).
+
+    Returns (h_v f32[M, N//C], h_i i32[M, N//C], h_nz i32[M, N//T]).
+    """
+    m_dim, k_dim = x.shape
+    k2, n_dim = wg.shape
+    assert k_dim == k2
+    assert n_dim % tile_n == 0 and m_dim % tile_m == 0
+    assert tile_n % comp == 0
+    slots = tile_n // comp
+    n_tiles = n_dim // tile_n
+    grid = (m_dim // tile_m, n_tiles)
+    return pl.pallas_call(
+        functools.partial(_gate_pack_kernel, tile_n=tile_n, comp=comp),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_m, k_dim), lambda i, j: (i, 0)),
+            pl.BlockSpec((k_dim, tile_n), lambda i, j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_m, slots), lambda i, j: (i, j)),
+            pl.BlockSpec((tile_m, slots), lambda i, j: (i, j)),
+            pl.BlockSpec((tile_m, 1), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m_dim, n_dim // comp), jnp.float32),
+            jax.ShapeDtypeStruct((m_dim, n_dim // comp), jnp.int32),
+            jax.ShapeDtypeStruct((m_dim, n_tiles), jnp.int32),
+        ],
+        interpret=INTERPRET,
+    )(x, wg)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 2: fused up + down projection from TwELL gate activations
+# ---------------------------------------------------------------------------
+
+def _fused_kernel(
+    x_ref, hv_ref, hi_ref, hnz_ref, wu_ref, wd_ref, y_ref, *, tile_n, comp
+):
+    """One block of rows: eq. (3) — gather W_u columns / W_d rows named by
+    the packed indices, implicit h_u materialization in-register."""
+    slots = tile_n // comp
+    x = x_ref[...]                      # (T_m, K)
+    hv = hv_ref[...]                    # (T_m, NC)
+    hi = hi_ref[...]                    # (T_m, NC)
+    hnz = hnz_ref[...]                  # (T_m, N_T)
+    wu = wu_ref[...]                    # (K, N)
+    wd = wd_ref[...]                    # (N, K)
+    nc = hv.shape[1]
+    slot = jax.lax.broadcasted_iota(jnp.int32, hv.shape, 1)
+    tile_of_slot = slot // slots
+    col_in_tile = slot % slots
+    valid = col_in_tile < jnp.take_along_axis(hnz, tile_of_slot, axis=1)
+    # u[m, j] = x[m, :] . W_u[:, n(m, j)]   (the implicit h_u element)
+    wu_g = jnp.take(wu.T, hi, axis=0)   # (T_m, NC, K)
+    u = jnp.einsum("mk,mjk->mj", x, wu_g)
+    coeff = jnp.where(valid, hv * u, 0.0)          # h_v * h_u
+    wd_g = jnp.take(wd, hi, axis=0)     # (T_m, NC, K)
+    y_ref[...] = jnp.einsum("mj,mjk->mk", coeff, wd_g)
+
+
+def twell_fused_ffn(x, h_v, h_i, h_nz, wu, wd, *, tile_n=32, comp=4, tile_m=8):
+    """y = ((h_g in TwELL) * (x @ Wu)) @ Wd in one fused kernel (alg. 2)."""
+    m_dim, k_dim = x.shape
+    n_dim = wu.shape[1]
+    nc = h_v.shape[1]
+    n_tiles = h_nz.shape[1]
+    grid = (m_dim // tile_m,)
+    return pl.pallas_call(
+        functools.partial(_fused_kernel, tile_n=tile_n, comp=comp),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_m, k_dim), lambda i: (i, 0)),
+            pl.BlockSpec((tile_m, nc), lambda i: (i, 0)),
+            pl.BlockSpec((tile_m, nc), lambda i: (i, 0)),
+            pl.BlockSpec((tile_m, n_tiles), lambda i: (i, 0)),
+            pl.BlockSpec((k_dim, n_dim), lambda i: (0, 0)),
+            pl.BlockSpec((n_dim, k_dim), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_m, k_dim), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m_dim, k_dim), jnp.float32),
+        interpret=INTERPRET,
+    )(x, h_v, h_i, h_nz, wu, wd)
+
+
+# ---------------------------------------------------------------------------
+# Non-gated variant: down projection alone from TwELL (appendix A.1)
+# ---------------------------------------------------------------------------
+
+def _down_kernel(hv_ref, hi_ref, hnz_ref, wd_ref, y_ref, *, tile_n, comp):
+    slots = tile_n // comp
+    hv = hv_ref[...]
+    hi = hi_ref[...]
+    hnz = hnz_ref[...]
+    wd = wd_ref[...]
+    slot = jax.lax.broadcasted_iota(jnp.int32, hv.shape, 1)
+    valid = (slot % slots) < jnp.take_along_axis(hnz, slot // slots, axis=1)
+    coeff = jnp.where(valid, hv, 0.0)
+    wd_g = jnp.take(wd, hi, axis=0)     # (T_m, NC, K)
+    y_ref[...] = jnp.einsum("mj,mjk->mk", coeff, wd_g)
+
+
+def twell_down_matmul(h_v, h_i, h_nz, wd, *, tile_n=32, comp=4, tile_m=8):
+    """y = (h_u in TwELL) @ Wd — non-gated model's second projection."""
+    m_dim, nc = h_v.shape
+    n_dim, k_dim = wd.shape
+    n_tiles = h_nz.shape[1]
+    grid = (m_dim // tile_m,)
+    return pl.pallas_call(
+        functools.partial(_down_kernel, tile_n=tile_n, comp=comp),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_m, nc), lambda i: (i, 0)),
+            pl.BlockSpec((tile_m, nc), lambda i: (i, 0)),
+            pl.BlockSpec((tile_m, n_tiles), lambda i: (i, 0)),
+            pl.BlockSpec((n_dim, k_dim), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_m, k_dim), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m_dim, k_dim), jnp.float32),
+        interpret=INTERPRET,
+    )(h_v, h_i, h_nz, wd)
+
+
+# ---------------------------------------------------------------------------
+# Whole-block convenience wrappers (used by model.py and the AOT demo)
+# ---------------------------------------------------------------------------
+
+def gated_ffn_twell(x, wg, wu, wd, *, tile_n=32, comp=4, tile_m=8):
+    """Full gated FFN through the two-kernel sparse pipeline (section 3.3)."""
+    h_v, h_i, h_nz = twell_gate_matmul(
+        x, wg, tile_n=tile_n, comp=comp, tile_m=tile_m
+    )
+    return twell_fused_ffn(
+        x, h_v, h_i, h_nz, wu, wd, tile_n=tile_n, comp=comp, tile_m=tile_m
+    )
+
+
+def nongated_ffn_twell(x, wu, wd, *, tile_n=32, comp=4, tile_m=8):
+    """Non-gated FFN: up projection w/ TwELL store, then sparse down."""
+    h_v, h_i, h_nz = twell_gate_matmul(
+        x, wu, tile_n=tile_n, comp=comp, tile_m=tile_m
+    )
+    return twell_down_matmul(
+        h_v, h_i, h_nz, wd, tile_n=tile_n, comp=comp, tile_m=tile_m
+    )

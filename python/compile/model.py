@@ -1,0 +1,298 @@
+"""L2: the paper's Transformer++ language model in pure jnp.
+
+Architecture (paper section 4.1 / appendix B.1, width-scaled): pre-RMSNorm
+decoder blocks with RoPE multi-head attention and a gated (or non-gated)
+ReLU feed-forward block, tied embeddings, no biases.  The training
+objective is cross-entropy plus the paper's L1 activation regularizer
+(eq. 2) with a runtime-tunable coefficient, optimized by a handwritten
+AdamW (optax is not available in this environment) with gradient clipping.
+
+Everything here is build-time Python: `aot.py` lowers `init`, `train_step`,
+`forward`, `score`, `forward_stats` and `reinit_step` once to HLO text and
+the rust coordinator drives them through PJRT.  Hyperparameters that the
+coordinator sweeps (learning rate, L1 coefficient, step index) are runtime
+*inputs* of the lowered functions, so one artifact serves the whole sweep.
+
+The canonical parameter ordering (param_specs) is the contract between
+this file and rust/src/runtime/manifest.rs.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels import twell as twell_kernels
+
+
+# ---------------------------------------------------------------------------
+# Parameter layout
+# ---------------------------------------------------------------------------
+
+def param_specs(cfg: ModelConfig):
+    """Canonical (name, shape) list — the flattening contract with rust."""
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab_size
+    specs = [("embed", (v, d))]
+    for l in range(cfg.n_layers):
+        p = f"layer{l}."
+        specs += [
+            (p + "ln_attn", (d,)),
+            (p + "wq", (d, d)),
+            (p + "wk", (d, d)),
+            (p + "wv", (d, d)),
+            (p + "wo", (d, d)),
+            (p + "ln_ffn", (d,)),
+        ]
+        if cfg.gated:
+            specs += [(p + "wg", (d, f))]
+        specs += [(p + "wu", (d, f)), (p + "wd", (f, d))]
+    specs += [("ln_final", (d,))]
+    return specs
+
+
+def _normal(key, shape):
+    """Box-Muller standard normal.  jax.random.normal / truncated_normal
+    lower to an `erf`/`erf-inv` HLO opcode that the xla_extension 0.5.1
+    text parser rejects; uniform + log/cos lower to universally supported
+    ops (see DESIGN.md AOT notes)."""
+    k1, k2 = jax.random.split(key)
+    u1 = jax.random.uniform(k1, shape, jnp.float32, 1e-7, 1.0)
+    u2 = jax.random.uniform(k2, shape, jnp.float32)
+    return jnp.sqrt(-2.0 * jnp.log(u1)) * jnp.cos(2.0 * jnp.pi * u2)
+
+
+def init_params(cfg: ModelConfig, seed):
+    """Initialize parameters (clipped-normal std 0.02, norms at 1)."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for name, shape in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(("ln_attn", "ln_ffn")) or name == "ln_final":
+            params.append(jnp.ones(shape, jnp.float32))
+        else:
+            params.append(
+                cfg.init_std * jnp.clip(_normal(sub, shape), -3.0, 3.0)
+            )
+    return params
+
+
+def _by_name(cfg: ModelConfig, params):
+    return {name: p for (name, _), p in zip(param_specs(cfg), params)}
+
+
+# ---------------------------------------------------------------------------
+# Model forward
+# ---------------------------------------------------------------------------
+
+def _rmsnorm(x, w, eps):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def _rope(q, theta):
+    """Rotary position embedding over the last axis ((B,S,H,Dh))."""
+    s, dh = q.shape[1], q.shape[-1]
+    half = dh // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = jnp.arange(s, dtype=jnp.float32)[:, None] * freqs[None, :]
+    cos = jnp.cos(ang)[None, :, None, :]
+    sin = jnp.sin(ang)[None, :, None, :]
+    q1, q2 = q[..., :half], q[..., half:]
+    return jnp.concatenate([q1 * cos - q2 * sin, q1 * sin + q2 * cos], axis=-1)
+
+
+def _attention(cfg, x, wq, wk, wv, wo):
+    b, s, d = x.shape
+    h, dh = cfg.n_heads, cfg.head_dim
+    q = (x @ wq).reshape(b, s, h, dh)
+    k = (x @ wk).reshape(b, s, h, dh)
+    v = (x @ wv).reshape(b, s, h, dh)
+    q = _rope(q, cfg.rope_theta)
+    k = _rope(k, cfg.rope_theta)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(float(dh))
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    attn = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", attn, v).reshape(b, s, d)
+    return out @ wo
+
+
+def _activation(cfg, z):
+    if cfg.activation == "relu":
+        return jnp.maximum(z, 0.0)
+    if cfg.activation == "silu":
+        return z * jax.nn.sigmoid(z)
+    raise ValueError(cfg.activation)
+
+
+def _ffn(cfg, x, p, prefix, use_pallas=False):
+    """Feed-forward block; returns (y, h_gate, h) where h_gate determines
+    the sparsity pattern (paper section 2.2 / appendix C.2)."""
+    b, s, d = x.shape
+    if cfg.gated:
+        hg = _activation(cfg, x @ p[prefix + "wg"])
+        hu = x @ p[prefix + "wu"]
+        h = hg * hu
+        if use_pallas:
+            xf = x.reshape(b * s, d)
+            y = twell_kernels.gated_ffn_twell(
+                xf, p[prefix + "wg"], p[prefix + "wu"], p[prefix + "wd"],
+                tile_n=cfg.twell_tile_n, comp=1, tile_m=8,
+            ).reshape(b, s, d)
+        else:
+            y = h @ p[prefix + "wd"]
+        return y, hg, h
+    hg = _activation(cfg, x @ p[prefix + "wu"])
+    if use_pallas:
+        xf = x.reshape(b * s, d)
+        y = twell_kernels.nongated_ffn_twell(
+            xf, p[prefix + "wu"], p[prefix + "wd"],
+            tile_n=cfg.twell_tile_n, comp=1, tile_m=8,
+        ).reshape(b, s, d)
+    else:
+        y = hg @ p[prefix + "wd"]
+    return y, hg, hg
+
+
+def forward(cfg: ModelConfig, params, tokens, use_pallas=False):
+    """Full forward pass.
+
+    Returns (logits f32[B,S,V], gates: list of f32[B,S,F] gate activations
+    per layer, hs: list of f32[B,S,F] combined hidden h per layer).
+    """
+    p = _by_name(cfg, params)
+    x = jnp.take(p["embed"], tokens, axis=0)
+    gates, hs = [], []
+    for l in range(cfg.n_layers):
+        pre = f"layer{l}."
+        a = _attention(
+            cfg, _rmsnorm(x, p[pre + "ln_attn"], cfg.rmsnorm_eps),
+            p[pre + "wq"], p[pre + "wk"], p[pre + "wv"], p[pre + "wo"],
+        )
+        x = x + a
+        y, hg, h = _ffn(
+            cfg, _rmsnorm(x, p[pre + "ln_ffn"], cfg.rmsnorm_eps), p, pre,
+            use_pallas=use_pallas,
+        )
+        x = x + y
+        gates.append(hg)
+        hs.append(h)
+    x = _rmsnorm(x, p["ln_final"], cfg.rmsnorm_eps)
+    logits = x @ p["embed"].T  # tied embeddings
+    return logits, gates, hs
+
+
+# ---------------------------------------------------------------------------
+# Loss + sparsity statistics
+# ---------------------------------------------------------------------------
+
+def loss_fn(cfg: ModelConfig, params, tokens, l1_coeff):
+    """CE + L1 activation regularizer (paper eq. 2) + sparsity stats."""
+    x, y = tokens[:, :-1], tokens[:, 1:]
+    logits, gates, hs = forward(cfg, params, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ce = -jnp.mean(jnp.take_along_axis(logp, y[..., None], axis=-1))
+    # eq. (2): mean |h| over layers, tokens and hidden units
+    l1 = jnp.mean(jnp.stack([jnp.mean(jnp.abs(h)) for h in hs]))
+    loss = ce + l1_coeff * l1
+    nnz = jnp.stack([jnp.mean(jnp.sum(g > 0, axis=-1).astype(jnp.float32))
+                     for g in gates])                       # [L] avg per token
+    active = jnp.stack([jnp.sum((g > 0).reshape(-1, g.shape[-1]), axis=0)
+                        .astype(jnp.float32) for g in gates])  # [L, F]
+    return loss, (ce, l1, nnz, active)
+
+
+# ---------------------------------------------------------------------------
+# Handwritten AdamW + gradient clipping (appendix B.1 hyperparameters)
+# ---------------------------------------------------------------------------
+
+B1, B2, EPS = 0.9, 0.95, 1e-8
+MAX_GRAD_NORM = 1.0
+
+
+def _decay_mask(cfg: ModelConfig):
+    """Weight decay on matmul weights + embeddings, not on norms."""
+    return [0.0 if name.endswith(("ln_attn", "ln_ffn")) or name == "ln_final"
+            else 1.0 for name, _ in param_specs(cfg)]
+
+
+def adamw_update(cfg, params, grads, ms, vs, lr, wd, step):
+    gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in grads))
+    scale = jnp.minimum(1.0, MAX_GRAD_NORM / (gnorm + 1e-12))
+    t = step + 1.0
+    bc1 = 1.0 - B1 ** t
+    bc2 = 1.0 - B2 ** t
+    new_p, new_m, new_v = [], [], []
+    for p, g, m, v, dk in zip(params, grads, ms, vs, _decay_mask(cfg)):
+        g = g * scale
+        m = B1 * m + (1.0 - B1) * g
+        v = B2 * v + (1.0 - B2) * g * g
+        upd = (m / bc1) / (jnp.sqrt(v / bc2) + EPS) + wd * dk * p
+        new_p.append(p - lr * upd)
+        new_m.append(m)
+        new_v.append(v)
+    return new_p, new_m, new_v, gnorm
+
+
+def train_step(cfg: ModelConfig, params, ms, vs, tokens, lr, l1_coeff,
+               step, weight_decay=0.1):
+    """One optimizer step.  All sweep-able knobs are runtime inputs."""
+    (loss, (ce, l1, nnz, active)), grads = jax.value_and_grad(
+        lambda p: loss_fn(cfg, p, tokens, l1_coeff), has_aux=True
+    )(params)
+    new_p, new_m, new_v, gnorm = adamw_update(
+        cfg, params, grads, ms, vs, lr, weight_decay, step
+    )
+    return new_p, new_m, new_v, loss, ce, l1, nnz, active, gnorm
+
+
+# ---------------------------------------------------------------------------
+# Evaluation / analysis entry points
+# ---------------------------------------------------------------------------
+
+def score(cfg: ModelConfig, params, tokens):
+    """Per-position target log-prob (cloze scoring) + per-layer mean nnz."""
+    x, y = tokens[:, :-1], tokens[:, 1:]
+    logits, gates, _ = forward(cfg, params, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    tgt = jnp.take_along_axis(logp, y[..., None], axis=-1)[..., 0]
+    nnz = jnp.stack([jnp.mean(jnp.sum(g > 0, axis=-1).astype(jnp.float32))
+                     for g in gates])
+    return tgt, nnz
+
+
+def forward_stats(cfg: ModelConfig, params, tokens):
+    """Per-layer per-position gate nnz (figures 6/7/10/11 raw data)."""
+    _, gates, _ = forward(cfg, params, tokens)
+    return jnp.stack([jnp.sum(g > 0, axis=-1).astype(jnp.float32)
+                      for g in gates])   # [L, B, S]
+
+
+def reinit_step(cfg: ModelConfig, params, active, seed, lam):
+    """Targeted dead-neuron reinitialization (paper eq. 6, appendix C.3).
+
+    For gate-projection columns whose neuron was inactive over the whole
+    step (active[l, j] == 0), interpolate the column toward fresh noise:
+    W_g[:, j] <- (1 - lam) W_g[:, j] + lam N(0, sigma^2).
+    """
+    key = jax.random.PRNGKey(0)
+    key = jax.random.fold_in(key, seed)
+    names = [name for name, _ in param_specs(cfg)]
+    out = list(params)
+    gate_name = "wg" if cfg.gated else "wu"
+    for l in range(cfg.n_layers):
+        target = f"layer{l}.{gate_name}"
+        idx = names.index(target)
+        w = out[idx]
+        key, sub = jax.random.split(key)
+        noise = cfg.init_std * _normal(sub, w.shape)
+        dead = (active[l] == 0.0)[None, :]  # column-wise mask
+        out[idx] = jnp.where(dead, (1.0 - lam) * w + lam * noise, w)
+    return out
+
+
+def ffn_twell_demo(cfg: ModelConfig, x, wg, wu, wd):
+    """Single gated FFN block through the Pallas TwELL pipeline — the
+    artifact that proves L1 kernels compose through AOT into rust."""
+    return twell_kernels.gated_ffn_twell(
+        x, wg, wu, wd, tile_n=cfg.twell_tile_n, comp=1, tile_m=8
+    )

@@ -1,0 +1,100 @@
+"""AOT pipeline tests: manifest io-contract, HLO text validity, goldens."""
+
+import json
+import os
+import shutil
+import tempfile
+
+import numpy as np
+import pytest
+
+from compile import aot, model as M
+from compile.configs import PRESETS
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    manifest = aot.build_preset("tiny", out)
+    aot.dump_goldens(out)
+    return out, manifest
+
+
+def test_manifest_io_counts(built):
+    _, man = built
+    cfg = PRESETS["tiny"]
+    n = len(M.param_specs(cfg))
+    arts = man["artifacts"]
+    assert len(arts["init"]["inputs"]) == 1
+    assert len(arts["init"]["outputs"]) == n
+    # train_step: 3n tensors + tokens + lr + l1 + step
+    assert len(arts["train_step"]["inputs"]) == 3 * n + 4
+    # outputs: 3n + loss, ce, l1, nnz, active, gnorm
+    assert len(arts["train_step"]["outputs"]) == 3 * n + 6
+    ts = arts["train_step"]
+    assert ts["inputs"][3 * n]["dtype"] == "i32"
+    assert ts["inputs"][3 * n]["shape"] == [cfg.train_batch, cfg.seq_len + 1]
+
+
+def test_manifest_param_shapes_match_model(built):
+    _, man = built
+    cfg = PRESETS["tiny"]
+    for entry, (name, shape) in zip(man["params"], M.param_specs(cfg)):
+        assert entry["name"] == name
+        assert tuple(entry["shape"]) == shape
+
+
+def test_hlo_text_is_parseable_hlo(built):
+    out, man = built
+    for key, art in man["artifacts"].items():
+        path = os.path.join(out, "tiny", art["file"])
+        with open(path) as f:
+            head = f.read(200)
+        assert "HloModule" in head, key
+
+
+def test_goldens_consistency(built):
+    out, _ = built
+    with open(os.path.join(out, "goldens.json")) as f:
+        g = json.load(f)
+    m, k, n = g["m"], g["k"], g["n"]
+    x = np.array(g["x"], np.float32).reshape(m, k)
+    wg = np.array(g["wg"], np.float32).reshape(k, n)
+    hg = np.maximum(x @ wg - g["gate_bias"], 0.0)
+    h_nz = np.array(g["h_nz"], np.int64).reshape(m, n // g["tile_n"])
+    # per-tile counts (clipped at slots) must match a recomputation
+    slots = g["tile_n"] // g["comp"]
+    for t in range(n // g["tile_n"]):
+        blk = hg[:, t * g["tile_n"]:(t + 1) * g["tile_n"]]
+        np.testing.assert_array_equal(
+            np.minimum((blk > 0).sum(1), slots), h_nz[:, t])
+
+
+def test_scan_k_semantics():
+    """train_step8 == 8 sequential train_step calls."""
+    import jax.numpy as jnp
+    cfg = PRESETS["tiny"]
+    params = M.init_params(cfg, 0)
+    ms = [jnp.zeros_like(p) for p in params]
+    vs = [jnp.zeros_like(p) for p in params]
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(
+        rng.integers(0, cfg.vocab_size,
+                     size=(aot.SCAN_K, cfg.train_batch, cfg.seq_len + 1)),
+        dtype=jnp.int32)
+    lrs = jnp.full((aot.SCAN_K,), 1e-3)
+    p8, m8, v8, loss8, *_ = aot.train_step_k(
+        cfg, params, ms, vs, toks, lrs, 0.0, 0.0)
+    p1, m1, v1 = params, ms, vs
+    losses = []
+    for i in range(aot.SCAN_K):
+        p1, m1, v1, loss, *_ = M.train_step(
+            cfg, p1, m1, v1, toks[i], 1e-3, 0.0, float(i))
+        losses.append(float(loss))
+    np.testing.assert_allclose(np.asarray(loss8), np.asarray(losses),
+                               rtol=1e-4)
+    # AdamW's m/(sqrt(v)+eps) amplifies f32 association noise when v ~ 0,
+    # so parameter agreement after 8 steps is checked at a looser bound
+    for a, b in zip(p8, p1):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-3,
+                                   atol=3e-5)

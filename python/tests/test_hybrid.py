@@ -1,0 +1,110 @@
+"""Hybrid ELL+dense training format: Pallas compaction kernel + jnp ops vs
+the loop reference (paper section 3.4, listing 4)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import hybrid, ref, twell
+
+
+def _sparse_h(rng, m, n, density):
+    h = np.maximum(rng.normal(size=(m, n)), 0.0).astype(np.float32)
+    mask = rng.random((m, n)) < density
+    return h * mask
+
+
+def test_twell_to_ell_matches_reference():
+    rng = np.random.default_rng(0)
+    h = _sparse_h(rng, 16, 64, 0.15)
+    hv, hi, hnz = ref.twell_pack_slow(h, 32, 1)  # comp=1: lossless
+    ev, ec, rn, l0, l1 = hybrid.twell_to_ell(
+        hv.astype(np.float32), hi, hnz, tile_n=32, comp=1, ell_width=32,
+        tile_m=8,
+    )
+    hyb = ref.hybrid_partition_slow(h, 32, 4)
+    fits = hyb["row_nnz"] <= 32
+    np.testing.assert_allclose(np.asarray(ev)[fits], hyb["ell_val"][fits],
+                               rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(ec)[fits], hyb["ell_col"][fits])
+    np.testing.assert_array_equal(np.asarray(rn)[:, 0], hyb["row_nnz"])
+
+
+def test_twell_to_ell_stats():
+    """L0/L1 statistics from the compaction kernel (listing 4 lines 43-51)."""
+    rng = np.random.default_rng(1)
+    h = _sparse_h(rng, 8, 32, 0.3)
+    hv, hi, hnz = ref.twell_pack_slow(h, 16, 1)
+    _, _, rn, l0, l1 = hybrid.twell_to_ell(
+        hv.astype(np.float32), hi, hnz, tile_n=16, comp=1, ell_width=32,
+        tile_m=8,
+    )
+    np.testing.assert_allclose(np.asarray(l0)[:, 0],
+                               (h > 0).sum(axis=1).astype(np.float32))
+    np.testing.assert_allclose(np.asarray(l1)[:, 0], h.sum(axis=1),
+                               rtol=1e-5)
+
+
+def test_partition_matches_reference():
+    rng = np.random.default_rng(2)
+    h = _sparse_h(rng, 24, 48, 0.2)
+    # one deliberately dense row to exercise the dense tail
+    h[3] = np.abs(rng.normal(size=48)).astype(np.float32) + 0.1
+    hyb_j = hybrid.hybrid_partition(h, ell_width=8, max_dense_rows=4)
+    hyb_r = ref.hybrid_partition_slow(h, 8, 4)
+    np.testing.assert_array_equal(np.asarray(hyb_j["row_nnz"]),
+                                  hyb_r["row_nnz"])
+    np.testing.assert_array_equal(np.asarray(hyb_j["is_dense"]),
+                                  hyb_r["is_dense"])
+    fits = ~hyb_r["is_dense"]
+    np.testing.assert_allclose(np.asarray(hyb_j["ell_val"])[fits],
+                               hyb_r["ell_val"][fits], rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(hybrid.hybrid_densify(hyb_j)),
+                               ref.hybrid_densify(hyb_r), rtol=1e-6)
+
+
+def test_hybrid_matmul_matches_dense():
+    rng = np.random.default_rng(3)
+    h = _sparse_h(rng, 16, 32, 0.25)
+    h[0] = np.abs(rng.normal(size=32)).astype(np.float32) + 0.1  # dense row
+    w = (rng.normal(size=(32, 12)) * 0.3).astype(np.float32)
+    hyb = hybrid.hybrid_partition(h, ell_width=8, max_dense_rows=4)
+    y = hybrid.hybrid_matmul(hyb, w)
+    np.testing.assert_allclose(np.asarray(y), h @ w, rtol=1e-4, atol=1e-5)
+
+
+def test_densify_roundtrip():
+    rng = np.random.default_rng(4)
+    h = _sparse_h(rng, 16, 32, 0.2)
+    hyb = hybrid.hybrid_partition(h, ell_width=16, max_dense_rows=4)
+    np.testing.assert_allclose(np.asarray(hybrid.hybrid_densify(hyb)), h,
+                               rtol=1e-6)
+
+
+def test_overflow_flag():
+    """More dense rows than the tail holds -> overflow flag, no crash
+    (appendix B.2.1 flag-and-retry contract)."""
+    rng = np.random.default_rng(5)
+    h = np.abs(rng.normal(size=(8, 32))).astype(np.float32) + 0.1
+    hyb = hybrid.hybrid_partition(h, ell_width=4, max_dense_rows=2)
+    assert bool(hyb["overflow"])
+    assert int(np.asarray(hyb["dense_map"]).max()) <= 1
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(2, 24),
+    n=st.integers(8, 64),
+    density=st.floats(0.0, 1.0),
+    width=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_hybrid_preserves_every_nonzero(m, n, density, width,
+                                                   seed):
+    """Property: partition(h) loses no non-zero as long as the dense tail
+    has capacity (here: capacity = m, can never overflow)."""
+    rng = np.random.default_rng(seed)
+    h = _sparse_h(rng, m, n, density)
+    hyb = hybrid.hybrid_partition(h, ell_width=width, max_dense_rows=m)
+    assert not bool(hyb["overflow"])
+    np.testing.assert_allclose(np.asarray(hybrid.hybrid_densify(hyb)), h,
+                               rtol=1e-6)

@@ -1,0 +1,197 @@
+"""L2 model tests: shapes, gradients, optimizer, sparsity statistics,
+dead-neuron reinit, and a short loss-goes-down training run."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.configs import PRESETS, ModelConfig
+
+CFG = PRESETS["tiny"]
+
+
+def _params(cfg=CFG, seed=0):
+    return M.init_params(cfg, seed)
+
+
+def _tokens(cfg=CFG, b=2, s=16, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, cfg.vocab_size, size=(b, s)),
+                       dtype=jnp.int32)
+
+
+def test_param_specs_cover_init():
+    params = _params()
+    specs = M.param_specs(CFG)
+    assert len(params) == len(specs)
+    for p, (name, shape) in zip(params, specs):
+        assert p.shape == shape, name
+
+
+def test_forward_shapes():
+    params = _params()
+    toks = _tokens()
+    logits, gates, hs = M.forward(CFG, params, toks)
+    assert logits.shape == (2, 16, CFG.vocab_size)
+    assert len(gates) == CFG.n_layers
+    assert gates[0].shape == (2, 16, CFG.d_ff)
+
+
+def test_loss_finite_and_l1_increases_loss():
+    params = _params()
+    toks = _tokens(s=17)
+    loss0, (ce0, l1_0, nnz, active) = M.loss_fn(CFG, params, toks, 0.0)
+    loss1, _ = M.loss_fn(CFG, params, toks, 1.0)
+    assert np.isfinite(float(loss0))
+    assert float(loss1) > float(loss0)
+    assert float(loss0) == pytest.approx(float(ce0))
+    assert nnz.shape == (CFG.n_layers,)
+    assert active.shape == (CFG.n_layers, CFG.d_ff)
+
+
+def test_initial_ce_close_to_uniform():
+    params = _params()
+    toks = _tokens(s=17)
+    _, (ce, _, _, _) = M.loss_fn(CFG, params, toks, 0.0)
+    assert abs(float(ce) - np.log(CFG.vocab_size)) < 0.5
+
+
+def test_nnz_consistent_with_activations():
+    params = _params()
+    toks = _tokens()
+    _, gates, _ = M.forward(CFG, params, toks)
+    nnz_direct = float(jnp.mean(jnp.sum(gates[0] > 0, axis=-1)))
+    stats = M.forward_stats(CFG, params, toks)
+    assert stats.shape == (CFG.n_layers, 2, 16)
+    assert float(jnp.mean(stats[0])) == pytest.approx(nnz_direct)
+
+
+def test_adamw_matches_manual_reference():
+    """One AdamW step vs a hand-rolled numpy reference."""
+    cfg = CFG
+    params = _params()
+    grads = [jnp.ones_like(p) * 0.01 for p in params]
+    ms = [jnp.zeros_like(p) for p in params]
+    vs = [jnp.zeros_like(p) for p in params]
+    lr, wd, step = 1e-3, 0.1, 0.0
+    new_p, new_m, new_v, gnorm = M.adamw_update(cfg, params, grads, ms, vs,
+                                                lr, wd, step)
+    g = np.concatenate([np.asarray(x).ravel() for x in grads])
+    expect_norm = np.sqrt((g * g).sum())
+    assert float(gnorm) == pytest.approx(expect_norm, rel=1e-5)
+    scale = min(1.0, M.MAX_GRAD_NORM / (expect_norm + 1e-12))
+    i = 0  # embed (decayed)
+    g0 = np.asarray(grads[i]) * scale
+    m0 = (1 - M.B1) * g0
+    v0 = (1 - M.B2) * g0 * g0
+    upd = (m0 / (1 - M.B1)) / (np.sqrt(v0 / (1 - M.B2)) + M.EPS) \
+        + wd * np.asarray(params[i])
+    np.testing.assert_allclose(np.asarray(new_p[i]),
+                               np.asarray(params[i]) - lr * upd,
+                               rtol=1e-4, atol=1e-9)
+
+
+def test_norm_weights_not_decayed():
+    mask = M._decay_mask(CFG)
+    names = [n for n, _ in M.param_specs(CFG)]
+    for n, m in zip(names, mask):
+        if "ln" in n:
+            assert m == 0.0, n
+        else:
+            assert m == 1.0, n
+
+
+def test_train_loop_loss_decreases():
+    """A few dozen steps on a repetitive corpus: loss must drop clearly."""
+    cfg = PRESETS["tiny"]
+    params = _params(cfg, seed=1)
+    ms = [jnp.zeros_like(p) for p in params]
+    vs = [jnp.zeros_like(p) for p in params]
+    rng = np.random.default_rng(0)
+    base = rng.integers(0, 50, size=33)
+
+    step_fn = jax.jit(lambda p, m, v, t, s: M.train_step(
+        cfg, p, m, v, t, 3e-3, 0.0, s))
+    losses = []
+    for i in range(40):
+        batch = np.stack([np.roll(base, k % 7) for k in range(4)])
+        toks = jnp.asarray(batch, dtype=jnp.int32)
+        params, ms, vs, loss, *_ = step_fn(params, ms, vs, toks, float(i))
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.7, losses
+
+
+def test_l1_regularization_induces_sparsity():
+    """Strong L1 for a few steps must reduce the mean nnz (paper fig. 9:
+    sparsity settles early in training)."""
+    cfg = PRESETS["tiny"]
+    toks = _tokens(cfg, b=4, s=33, seed=3)
+
+    def run(l1):
+        params = _params(cfg, seed=2)
+        ms = [jnp.zeros_like(p) for p in params]
+        vs = [jnp.zeros_like(p) for p in params]
+        step_fn = jax.jit(lambda p, m, v, t, s: M.train_step(
+            cfg, p, m, v, t, 3e-3, l1, s))
+        nnz = None
+        for i in range(80):
+            params, ms, vs, loss, ce, l1v, nnz, active, gn = step_fn(
+                params, ms, vs, toks, float(i))
+        return float(jnp.mean(nnz))
+
+    # NOTE: our width-scaled models live at a different loss scale than the
+    # paper's billion-parameter runs, so the *effective* L1 grid is shifted
+    # (recorded as `l1_scale` in EXPERIMENTS.md); 1.0 here plays the role
+    # of the paper's ~3e-5 "visible sparsification" point.
+    assert run(1.0) < run(0.0) * 0.7
+
+
+def test_reinit_only_touches_dead_columns():
+    params = _params()
+    active = jnp.ones((CFG.n_layers, CFG.d_ff))
+    active = active.at[0, 5].set(0.0)  # one dead neuron
+    out = M.reinit_step(CFG, params, active, 7, 0.1)
+    names = [n for n, _ in M.param_specs(CFG)]
+    iwg = names.index("layer0.wg")
+    before = np.asarray(params[iwg])
+    after = np.asarray(out[iwg])
+    changed = np.any(before != after, axis=0)
+    assert changed[5] and changed.sum() == 1
+    # all other params untouched
+    for i, (b, a) in enumerate(zip(params, out)):
+        if i != iwg:
+            np.testing.assert_array_equal(np.asarray(b), np.asarray(a))
+
+
+def test_silu_variant_never_sparse():
+    cfg = PRESETS["tiny"]
+    cfg_silu = ModelConfig(**{**cfg.to_dict(), "name": "t-silu",
+                              "activation": "silu"})
+    params = M.init_params(cfg_silu, 0)
+    _, gates, _ = M.forward(cfg_silu, params, _tokens(cfg_silu))
+    # silu(z) = 0 only at z == 0 exactly: nnz ~ full width
+    assert float(jnp.mean(jnp.sum(gates[0] > 0, axis=-1))) > cfg.d_ff * 0.4
+
+
+def test_nongated_variant_shapes():
+    cfg = PRESETS["tiny"]
+    cfg_ng = ModelConfig(**{**cfg.to_dict(), "name": "t-ng", "gated": False,
+                            "d_ff": 256})
+    params = M.init_params(cfg_ng, 0)
+    assert all("wg" not in n for n, _ in M.param_specs(cfg_ng))
+    logits, gates, hs = M.forward(cfg_ng, params, _tokens(cfg_ng))
+    assert logits.shape[-1] == cfg_ng.vocab_size
+    assert gates[0].shape[-1] == 256
+
+
+def test_pallas_ffn_model_matches_dense_model():
+    """The whole model with use_pallas=True equals the jnp path (comp=1)."""
+    cfg = PRESETS["tiny"]
+    params = _params(cfg)
+    toks = _tokens(cfg, b=2, s=64)  # b*s must be a multiple of tile_m=8
+    logits_d, _, _ = M.forward(cfg, params, toks, use_pallas=False)
+    logits_p, _, _ = M.forward(cfg, params, toks, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(logits_p), np.asarray(logits_d),
+                               rtol=2e-3, atol=2e-4)

@@ -1,0 +1,139 @@
+"""Pallas TwELL kernels vs the pure reference (the core L1 signal).
+
+Includes hypothesis sweeps over shapes / tile sizes / compression factors /
+sparsity levels, per the paper's claim that TwELL is correct for any
+sparsity below the compression bound and drop-consistent above it.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, twell
+
+
+def _mats(rng, m, k, n, scale=0.2):
+    x = rng.normal(size=(m, k)).astype(np.float32)
+    wg = (rng.normal(size=(k, n)) * scale).astype(np.float32)
+    wu = (rng.normal(size=(k, n)) * scale).astype(np.float32)
+    wd = (rng.normal(size=(n, k)) * scale).astype(np.float32)
+    return x, wg, wu, wd
+
+
+@pytest.mark.parametrize("comp", [1, 2, 4])
+@pytest.mark.parametrize("tile_n", [16, 32])
+def test_gate_pack_matches_reference(tile_n, comp):
+    rng = np.random.default_rng(0)
+    x, wg, _, _ = _mats(rng, 16, 24, 64)
+    hv, hi, hnz = twell.twell_gate_matmul(x, wg, tile_n=tile_n, comp=comp,
+                                          tile_m=8)
+    rv, ri, rnz = ref.twell_gate_ref(x, wg, tile_n, comp)
+    np.testing.assert_allclose(np.asarray(hv), rv, rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(hi), ri)
+    np.testing.assert_array_equal(np.asarray(hnz), rnz)
+
+
+def test_pack_unpack_roundtrip_when_no_overflow():
+    rng = np.random.default_rng(1)
+    x, wg, _, _ = _mats(rng, 16, 16, 96)
+    hv, hi, hnz = twell.twell_gate_matmul(x, wg, tile_n=32, comp=1, tile_m=8)
+    hg = np.maximum(x @ wg, 0.0)
+    back = ref.twell_unpack(hv, hi, hnz, 96, 32, 1)
+    np.testing.assert_allclose(back, hg, rtol=1e-5, atol=1e-6)
+
+
+def test_fused_ffn_matches_sparse_reference():
+    rng = np.random.default_rng(2)
+    x, wg, wu, wd = _mats(rng, 16, 24, 64)
+    hv, hi, hnz = twell.twell_gate_matmul(x, wg, tile_n=32, comp=2, tile_m=8)
+    y = twell.twell_fused_ffn(x, hv, hi, hnz, wu, wd, tile_n=32, comp=2,
+                              tile_m=8)
+    yref = ref.fused_ffn_ref(x, wg, wu, wd, 32, 2)
+    np.testing.assert_allclose(np.asarray(y), yref, rtol=1e-3, atol=1e-4)
+
+
+def test_full_pipeline_matches_dense_without_overflow():
+    rng = np.random.default_rng(3)
+    x, wg, wu, wd = _mats(rng, 24, 32, 64)
+    y = twell.gated_ffn_twell(x, wg, wu, wd, tile_n=32, comp=1, tile_m=8)
+    ydense = np.asarray(ref.gated_ffn(x, wg, wu, wd))
+    np.testing.assert_allclose(np.asarray(y), ydense, rtol=1e-3, atol=1e-4)
+
+
+def test_down_matmul_nongated():
+    rng = np.random.default_rng(4)
+    x, wu, _, wd = _mats(rng, 16, 24, 64)
+    hv, hi, hnz = twell.twell_gate_matmul(x, wu, tile_n=32, comp=2, tile_m=8)
+    y = twell.twell_down_matmul(hv, hi, hnz, wd, tile_n=32, comp=2, tile_m=8)
+    yref = ref.down_ref(hv, hi, hnz, wd, 32, 2)
+    np.testing.assert_allclose(np.asarray(y), yref, rtol=1e-3, atol=1e-4)
+
+
+def test_nongated_pipeline_matches_dense():
+    rng = np.random.default_rng(5)
+    x, wu, _, wd = _mats(rng, 16, 24, 64)
+    y = twell.nongated_ffn_twell(x, wu, wd, tile_n=32, comp=1, tile_m=8)
+    ydense = np.asarray(ref.nongated_ffn(x, wu, wd))
+    np.testing.assert_allclose(np.asarray(y), ydense, rtol=1e-3, atol=1e-4)
+
+
+def test_overflow_drops_are_counted_not_corrupted():
+    """Above the compression bound the kernel must drop the overflow but
+    keep the first T/C entries and report the clipped count — never write
+    out of bounds (paper app. A.1's flag-and-retry contract)."""
+    rng = np.random.default_rng(6)
+    # dense positive activations: every tile overflows for comp >= 2
+    x = np.abs(rng.normal(size=(8, 8))).astype(np.float32) + 0.1
+    wg = np.abs(rng.normal(size=(8, 32))).astype(np.float32)
+    hv, hi, hnz = twell.twell_gate_matmul(x, wg, tile_n=16, comp=4, tile_m=8)
+    slots = 16 // 4
+    assert np.asarray(hnz).max() <= slots
+    rv, ri, rnz = ref.twell_pack_slow(np.maximum(x @ wg, 0), 16, 4)
+    np.testing.assert_allclose(np.asarray(hv), rv, rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(hnz), rnz)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m_tiles=st.integers(1, 3),
+    k=st.integers(4, 48),
+    n_tiles=st.integers(1, 3),
+    tile_n=st.sampled_from([16, 32]),
+    comp=st.sampled_from([1, 2, 4]),
+    bias=st.floats(0.0, 1.5),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_pack_matches_reference(m_tiles, k, n_tiles, tile_n,
+                                           comp, bias, seed):
+    """Property: for any shape/tile/compression/sparsity, the Pallas pack
+    equals the loop reference (incl. drop semantics on overflow)."""
+    rng = np.random.default_rng(seed)
+    m, n = 8 * m_tiles, tile_n * n_tiles
+    x = rng.normal(size=(m, k)).astype(np.float32)
+    # `bias` shifts the gate pre-activation to sweep sparsity 0..~100%
+    wg = (rng.normal(size=(k, n)) * 0.3).astype(np.float32)
+    x = x - bias
+    hv, hi, hnz = twell.twell_gate_matmul(x, wg, tile_n=tile_n, comp=comp,
+                                          tile_m=8)
+    rv, ri, rnz = ref.twell_gate_ref(x, wg, tile_n, comp)
+    np.testing.assert_allclose(np.asarray(hv), rv, rtol=1e-4, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(hi), ri)
+    np.testing.assert_array_equal(np.asarray(hnz), rnz)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m_tiles=st.integers(1, 2),
+    k=st.integers(8, 32),
+    n_tiles=st.integers(1, 2),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_fused_ffn_matches_dense(m_tiles, k, n_tiles, seed):
+    """Property: with comp=1 (no overflow possible) the two-kernel sparse
+    pipeline is exactly the dense gated FFN."""
+    rng = np.random.default_rng(seed)
+    m, n = 8 * m_tiles, 32 * n_tiles
+    x, wg, wu, wd = _mats(rng, m, k, n)
+    y = twell.gated_ffn_twell(x, wg, wu, wd, tile_n=32, comp=1, tile_m=8)
+    ydense = np.asarray(ref.gated_ffn(x, wg, wu, wd))
+    np.testing.assert_allclose(np.asarray(y), ydense, rtol=2e-3, atol=2e-4)

@@ -1,0 +1,70 @@
+//! EXP-F1 (figure 1 + section 3.2 motivation): sparse-format comparison.
+//!
+//! Regenerates two things the paper argues in prose:
+//!   1. storage bytes of dense vs ELL vs TwELL vs hybrid at matched
+//!      sparsity (figure 1's layouts),
+//!   2. the *materialization cost*: classic ELL needs a full second pass
+//!      over a dense h_g, while TwELL packs inside the gate matmul's
+//!      epilogue — we time exactly that difference.
+//!
+//! Dims are the paper's H100 shapes scaled 1/8 for the single-core
+//! testbed; ratios are what matters (DESIGN.md section 1).
+
+use repro::metrics::memory;
+use repro::sparse::ell::EllMatrix;
+use repro::sparse::ffn::synth_sparse_ffn;
+use repro::sparse::twell::{gate_matmul_twell, TwellMatrix};
+use repro::sparse::dense;
+use repro::sparse::hybrid::HybridMatrix;
+use repro::util::bench::{fmt_time, Bencher, Table};
+
+fn main() {
+    let (m, k, n) = (256, 256, 704); // paper: 2048 x 2048 x 5632
+    let tile_n = 32;
+    println!("== figure 1: format storage + materialization cost ==");
+    println!("dims: M={m} K={k} N={n} (paper dims / 8)\n");
+
+    let mut table = Table::new(&[
+        "avg nnz/row", "dense B", "ELL B", "TwELL B", "hybrid B",
+        "gate+ELL pack", "gate+TwELL epilogue", "fusion speedup",
+    ]);
+    let bencher = Bencher::quick();
+    for target_nnz in [700.0, 352.0, 88.0, 30.0, 8.0] {
+        let comp = if target_nnz > 176.0 { 1 } else { 4 };
+        let (w, x) = synth_sparse_ffn(m, k, n, target_nnz, 42, tile_n, comp,
+                                      128, 0.125);
+        let tw = gate_matmul_twell(&x, &w.wg, tile_n, comp);
+        let hg = dense::matmul_relu(&x, &w.wg);
+        let ell = EllMatrix::from_dense(&hg);
+        let (hyb, _, _) = HybridMatrix::from_twell(&tw, 128, m / 8);
+
+        // classic path: dense gate matmul THEN a separate ELL pack pass
+        let r_ell = bencher.run("ell", || {
+            let hg = dense::matmul_relu(&x, &w.wg);
+            let e = EllMatrix::from_dense(&hg);
+            std::hint::black_box(e.width);
+        });
+        // paper path: TwELL materialized in the epilogue, no second pass
+        let r_tw = bencher.run("twell", || {
+            let t = gate_matmul_twell(&x, &w.wg, tile_n, comp);
+            std::hint::black_box(t.total_nnz());
+        });
+        table.row(&[
+            format!("{:.1}", tw.avg_nnz_per_row()),
+            memory::dense_bytes(m, n, 4).to_string(),
+            ell.bytes().to_string(),
+            tw.bytes().to_string(),
+            hyb.bytes().to_string(),
+            fmt_time(r_ell.median_s),
+            fmt_time(r_tw.median_s),
+            format!("{:.2}x", r_ell.median_s / r_tw.median_s),
+        ]);
+        let _ = TwellMatrix::from_dense(&hg, tile_n, comp);
+    }
+    table.print();
+    println!(
+        "\nshape check vs paper: TwELL ~N/C words/row regardless of max \
+         nnz; ELL pays the global max; hybrid pays width+tail; epilogue \
+         fusion beats matmul-then-pack at every sparsity."
+    );
+}

@@ -1,0 +1,74 @@
+//! EXP-F4 + table 1 forward column: sparse inference speedup + energy.
+//!
+//! Times the dense 3-GEMM gated FFN against the paper's two-kernel TwELL
+//! pipeline across the sparsity levels the L1 grid induces (paper:
+//! ~911 nnz unregularized down to <1), and reports the analytical energy
+//! model's mJ/token alongside (the nvidia-smi stand-in, DESIGN.md).
+//!
+//! Expected shape (figure 4): speedup ~1x (or below) for the non-sparse
+//! model, growing monotonically with sparsity; energy savings slightly
+//! exceed the throughput gain.
+
+use repro::metrics::{energy, flops};
+use repro::sparse::ffn::{forward_dense, forward_twell, synth_sparse_ffn};
+use repro::util::bench::{Bencher, Table};
+
+fn main() {
+    let (m, k, n) = (256, 256, 704); // paper dims / 8
+    let tile_n = 32;
+    println!("== figure 4 / table 1 (forward): TwELL inference pipeline ==");
+    println!("dims: M={m} K={k} N={n} (paper dims / 8), f32, 1 core\n");
+
+    let mut table = Table::new(&[
+        "avg nnz", "sparsity", "dense tok/ms", "twell tok/ms", "speedup",
+        "dense mJ/tok", "twell mJ/tok", "energy delta",
+    ]);
+    let bencher = Bencher::quick();
+    // paper figure 3 range: 911 (L1=0) -> ~1; scaled to N=704: ~660 -> 1
+    for target_nnz in [660.0, 352.0, 113.0, 30.0, 8.0, 1.0] {
+        let comp = if target_nnz > 176.0 { 1 } else { 4 };
+        let (w, x) = synth_sparse_ffn(m, k, n, target_nnz, 7, tile_n, comp,
+                                      128, 0.125);
+        let rd = bencher.run("dense", || {
+            std::hint::black_box(forward_dense(&w, &x).data[0]);
+        });
+        let mut nnz_total = 0u64;
+        let rs = bencher.run("twell", || {
+            let (y, hg) = forward_twell(&w, &x);
+            nnz_total = hg.total_nnz();
+            std::hint::black_box(y.data[0]);
+        });
+        let avg_nnz = nnz_total as f64 / m as f64;
+        // energy model (H100 constants; relative numbers are the claim)
+        let dev = energy::H100_PCIE;
+        let ed = dev.mj_per_token(
+            flops::ffn_gated_dense(m, k, n),
+            energy::ffn_dense_bytes(m, k, n, 4),
+            rd.median_s,
+            m as u64,
+        );
+        let es = dev.mj_per_token(
+            flops::ffn_gated_twell(m, k, n, nnz_total),
+            energy::ffn_twell_bytes(m, k, n, comp, nnz_total, 4),
+            rs.median_s,
+            m as u64,
+        );
+        table.row(&[
+            format!("{avg_nnz:.1}"),
+            format!("{:.1}%", 100.0 * (1.0 - avg_nnz / n as f64)),
+            format!("{:.1}", m as f64 / (rd.median_s * 1e3)),
+            format!("{:.1}", m as f64 / (rs.median_s * 1e3)),
+            format!("{:+.1}%", 100.0 * (rd.median_s / rs.median_s - 1.0)),
+            format!("{ed:.3}"),
+            format!("{es:.3}"),
+            format!("{:+.1}%", 100.0 * (es / ed - 1.0)),
+        ]);
+    }
+    table.print();
+    println!(
+        "\nshape check vs paper fig. 4: near-dense models gain nothing \
+         (or lose), speedups grow with sparsity and saturate once the \
+         gate GEMM dominates; energy savings track and slightly exceed \
+         the throughput gain."
+    );
+}

@@ -1,0 +1,345 @@
+//! Configuration system: model presets (mirroring python/compile/configs.py
+//! via the AOT manifest), training hyperparameters, and run descriptions
+//! parsed from JSON files or CLI overrides.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Model architecture + kernel parameters.  The authoritative copy lives
+/// in the AOT manifest (written by python); this struct is its rust view.
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub gated: bool,
+    pub activation: String,
+    pub rope_theta: f32,
+    pub rmsnorm_eps: f32,
+    pub init_std: f32,
+    pub train_batch: usize,
+    pub seq_len: usize,
+    pub score_batch: usize,
+    pub twell_tile_n: usize,
+    pub twell_comp: usize,
+    pub ell_width: usize,
+    pub dense_backup_frac: f64,
+}
+
+impl ModelConfig {
+    pub fn from_json(j: &Json) -> Result<Self> {
+        Ok(ModelConfig {
+            name: j.get("name")?.as_str()?.to_string(),
+            vocab_size: j.get("vocab_size")?.as_usize()?,
+            d_model: j.get("d_model")?.as_usize()?,
+            n_layers: j.get("n_layers")?.as_usize()?,
+            n_heads: j.get("n_heads")?.as_usize()?,
+            d_ff: j.get("d_ff")?.as_usize()?,
+            gated: j.get("gated")?.as_bool()?,
+            activation: j.get("activation")?.as_str()?.to_string(),
+            rope_theta: j.get("rope_theta")?.as_f64()? as f32,
+            rmsnorm_eps: j.get("rmsnorm_eps")?.as_f64()? as f32,
+            init_std: j.get("init_std")?.as_f64()? as f32,
+            train_batch: j.get("train_batch")?.as_usize()?,
+            seq_len: j.get("seq_len")?.as_usize()?,
+            score_batch: j.get("score_batch")?.as_usize()?,
+            twell_tile_n: j.get("twell_tile_n")?.as_usize()?,
+            twell_comp: j.get("twell_comp")?.as_usize()?,
+            ell_width: j.get("ell_width")?.as_usize()?,
+            dense_backup_frac: j.get("dense_backup_frac")?.as_f64()?,
+        })
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// Total parameter count implied by the layout (matches param_specs).
+    pub fn param_count(&self) -> usize {
+        let d = self.d_model;
+        let f = self.d_ff;
+        let mut n = self.vocab_size * d; // tied embedding
+        let per_layer =
+            2 * d + 4 * d * d + if self.gated { 3 * d * f } else { 2 * d * f };
+        n += self.n_layers * per_layer;
+        n + d // final norm
+    }
+}
+
+/// Training-run hyperparameters owned by the rust coordinator (the ones
+/// that are runtime inputs of the AOT'd train step).
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub steps: usize,
+    pub peak_lr: f64,
+    pub warmup_steps: usize,
+    pub l1_coeff: f64,
+    pub seed: u64,
+    /// dead-neuron mitigation: none | reinit | warmup (appendix C.3)
+    pub mitigation: String,
+    /// reinit interpolation strength lambda (eq. 6)
+    pub reinit_lambda: f64,
+    /// L1 warmup: steps at 0 then linear ramp over the same span
+    pub l1_warmup_steps: usize,
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            steps: 400,
+            peak_lr: 1e-3,
+            warmup_steps: 60,
+            l1_coeff: 0.0,
+            seed: 0,
+            mitigation: "none".into(),
+            reinit_lambda: 0.1,
+            l1_warmup_steps: 0,
+            log_every: 20,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Cosine schedule with linear warmup (appendix B.1).
+    pub fn lr_at(&self, step: usize) -> f64 {
+        if step < self.warmup_steps {
+            return self.peak_lr * (step as f64 + 1.0) / self.warmup_steps as f64;
+        }
+        let t = (step - self.warmup_steps) as f64
+            / (self.steps - self.warmup_steps).max(1) as f64;
+        let t = t.min(1.0);
+        0.5 * self.peak_lr * (1.0 + (std::f64::consts::PI * t).cos())
+    }
+
+    /// Effective L1 coefficient at a step (supports the warmup strategy).
+    pub fn l1_at(&self, step: usize) -> f64 {
+        if self.mitigation == "warmup" && self.l1_warmup_steps > 0 {
+            if step < self.l1_warmup_steps {
+                0.0
+            } else if step < 2 * self.l1_warmup_steps {
+                self.l1_coeff * (step - self.l1_warmup_steps) as f64
+                    / self.l1_warmup_steps as f64
+            } else {
+                self.l1_coeff
+            }
+        } else {
+            self.l1_coeff
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let mut c = TrainConfig::default();
+        if let Some(v) = j.opt("steps") { c.steps = v.as_usize()?; }
+        if let Some(v) = j.opt("peak_lr") { c.peak_lr = v.as_f64()?; }
+        if let Some(v) = j.opt("warmup_steps") { c.warmup_steps = v.as_usize()?; }
+        if let Some(v) = j.opt("l1_coeff") { c.l1_coeff = v.as_f64()?; }
+        if let Some(v) = j.opt("seed") { c.seed = v.as_f64()? as u64; }
+        if let Some(v) = j.opt("mitigation") { c.mitigation = v.as_str()?.to_string(); }
+        if let Some(v) = j.opt("reinit_lambda") { c.reinit_lambda = v.as_f64()?; }
+        if let Some(v) = j.opt("l1_warmup_steps") { c.l1_warmup_steps = v.as_usize()?; }
+        if let Some(v) = j.opt("log_every") { c.log_every = v.as_usize()?; }
+        Ok(c)
+    }
+}
+
+/// Where artifacts / runs live.  Everything is relative to the repo root
+/// unless overridden.
+#[derive(Clone, Debug)]
+pub struct Paths {
+    pub artifacts: PathBuf,
+    pub runs: PathBuf,
+}
+
+impl Default for Paths {
+    fn default() -> Self {
+        Paths { artifacts: PathBuf::from("artifacts"), runs: PathBuf::from("runs") }
+    }
+}
+
+impl Paths {
+    pub fn manifest(&self, preset: &str) -> PathBuf {
+        self.artifacts.join(preset).join("manifest.json")
+    }
+
+    pub fn artifact(&self, preset: &str, file: &str) -> PathBuf {
+        self.artifacts.join(preset).join(file)
+    }
+
+    pub fn run_dir(&self, run_name: &str) -> PathBuf {
+        self.runs.join(run_name)
+    }
+}
+
+/// Tiny CLI argument helper: `--key value` pairs plus positional args.
+/// (clap is not vendored offline.)
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: Vec<(String, String)>,
+    pub switches: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: impl Iterator<Item = String>) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                // --key=value or --key value or bare switch
+                if let Some((k, v)) = key.split_once('=') {
+                    out.flags.push((k.to_string(), v.to_string()));
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    out.flags.push((key.to_string(), it.next().unwrap()));
+                } else {
+                    out.switches.push(key.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags
+            .iter()
+            .rev()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} {v:?}")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} {v:?}")),
+        }
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+
+    pub fn require(&self, key: &str) -> Result<&str> {
+        match self.get(key) {
+            Some(v) => Ok(v),
+            None => bail!("missing required flag --{key}"),
+        }
+    }
+}
+
+/// Load a model config from an artifact manifest on disk.
+pub fn load_model_config(paths: &Paths, preset: &str) -> Result<ModelConfig> {
+    let man = Json::read_file(&paths.manifest(preset))?;
+    ModelConfig::from_json(man.get("config")?)
+}
+
+pub fn repo_root() -> PathBuf {
+    // walk up from cwd until we find Cargo.toml (so binaries work from
+    // target/release too)
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        if dir.join("Cargo.toml").exists() {
+            return dir;
+        }
+        if !dir.pop() {
+            return PathBuf::from(".");
+        }
+    }
+}
+
+pub fn default_paths() -> Paths {
+    let root = repo_root();
+    Paths { artifacts: root.join("artifacts"), runs: root.join("runs") }
+}
+
+#[allow(unused)]
+fn _path_helper(_: &Path) {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn args_parse_flags_and_switches() {
+        let a = Args::parse(
+            ["train", "--preset", "m", "--steps=100", "--verbose"]
+                .iter()
+                .map(|s| s.to_string()),
+        )
+        .unwrap();
+        assert_eq!(a.positional, vec!["train"]);
+        assert_eq!(a.get("preset"), Some("m"));
+        assert_eq!(a.get_usize("steps", 0).unwrap(), 100);
+        assert!(a.has("verbose"));
+        assert!(a.require("missing").is_err());
+    }
+
+    #[test]
+    fn lr_schedule_shape() {
+        let c = TrainConfig { steps: 100, warmup_steps: 10, peak_lr: 1.0,
+                              ..TrainConfig::default() };
+        assert!(c.lr_at(0) < c.lr_at(9));
+        assert!((c.lr_at(9) - 1.0).abs() < 0.11);
+        assert!(c.lr_at(50) < 1.0);
+        assert!(c.lr_at(99) < c.lr_at(50));
+        assert!(c.lr_at(99) >= 0.0);
+    }
+
+    #[test]
+    fn l1_warmup_schedule() {
+        let c = TrainConfig {
+            l1_coeff: 2.0,
+            mitigation: "warmup".into(),
+            l1_warmup_steps: 10,
+            ..TrainConfig::default()
+        };
+        assert_eq!(c.l1_at(0), 0.0);
+        assert_eq!(c.l1_at(9), 0.0);
+        assert!((c.l1_at(15) - 1.0).abs() < 1e-9);
+        assert_eq!(c.l1_at(25), 2.0);
+    }
+
+    #[test]
+    fn param_count_gated_matches_formula() {
+        let c = ModelConfig {
+            name: "t".into(), vocab_size: 256, d_model: 64, n_layers: 2,
+            n_heads: 2, d_ff: 176, gated: true, activation: "relu".into(),
+            rope_theta: 1e4, rmsnorm_eps: 1e-5, init_std: 0.02,
+            train_batch: 4, seq_len: 64, score_batch: 8, twell_tile_n: 16,
+            twell_comp: 4, ell_width: 64, dense_backup_frac: 0.125,
+        };
+        let per_layer = 2 * 64 + 4 * 64 * 64 + 3 * 64 * 176;
+        assert_eq!(c.param_count(), 256 * 64 + 2 * per_layer + 64);
+    }
+
+    #[test]
+    fn train_config_from_json_overrides() {
+        let j = Json::parse(r#"{"steps": 7, "l1_coeff": 0.5}"#).unwrap();
+        let c = TrainConfig::from_json(&j).unwrap();
+        assert_eq!(c.steps, 7);
+        assert_eq!(c.l1_coeff, 0.5);
+        assert_eq!(c.peak_lr, 1e-3); // default preserved
+    }
+}

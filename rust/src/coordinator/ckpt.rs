@@ -1,0 +1,194 @@
+//! Checkpoint format: a JSON header (param names/shapes + model config)
+//! followed by raw little-endian f32 data.  Written by the coordinator,
+//! loaded by the rust inference engine (`model/`).
+//!
+//! Layout: `SPRSLITE` magic, u64 header length, header JSON, then each
+//! parameter's data in manifest order.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::manifest::Manifest;
+use crate::util::json::Json;
+
+const MAGIC: &[u8; 8] = b"SPRSLITE";
+
+pub fn save(path: &Path, manifest: &Manifest, params: &[Vec<f32>])
+    -> Result<()> {
+    anyhow::ensure!(params.len() == manifest.params.len());
+    let header = Json::obj(vec![
+        ("preset", Json::str(&manifest.preset)),
+        (
+            "params",
+            Json::Arr(
+                manifest
+                    .params
+                    .iter()
+                    .map(|p| {
+                        Json::obj(vec![
+                            ("name", Json::str(&p.name)),
+                            ("shape", Json::arr_usize(&p.shape)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "config",
+            Json::parse(&config_json(manifest))
+                .expect("config json"),
+        ),
+    ]);
+    let header_bytes = header.to_string().into_bytes();
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(MAGIC)?;
+    f.write_all(&(header_bytes.len() as u64).to_le_bytes())?;
+    f.write_all(&header_bytes)?;
+    for (p, spec) in params.iter().zip(&manifest.params) {
+        let n: usize = spec.shape.iter().product();
+        anyhow::ensure!(p.len() == n, "{}: {} != {}", spec.name, p.len(), n);
+        for v in p {
+            f.write_all(&v.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+fn config_json(manifest: &Manifest) -> String {
+    let c = &manifest.config;
+    format!(
+        concat!(
+            "{{\"name\":\"{}\",\"vocab_size\":{},\"d_model\":{},",
+            "\"n_layers\":{},\"n_heads\":{},\"d_ff\":{},\"gated\":{},",
+            "\"activation\":\"{}\",\"rope_theta\":{},\"rmsnorm_eps\":{},",
+            "\"init_std\":{},\"train_batch\":{},\"seq_len\":{},",
+            "\"score_batch\":{},\"twell_tile_n\":{},\"twell_comp\":{},",
+            "\"ell_width\":{},\"dense_backup_frac\":{}}}"
+        ),
+        c.name, c.vocab_size, c.d_model, c.n_layers, c.n_heads, c.d_ff,
+        c.gated, c.activation, c.rope_theta, c.rmsnorm_eps, c.init_std,
+        c.train_batch, c.seq_len, c.score_batch, c.twell_tile_n,
+        c.twell_comp, c.ell_width, c.dense_backup_frac,
+    )
+}
+
+pub struct Checkpoint {
+    pub header: Json,
+    pub config: crate::config::ModelConfig,
+    /// name -> flat data
+    pub params: Vec<(String, Vec<usize>, Vec<f32>)>,
+}
+
+impl Checkpoint {
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("{path:?}"))?,
+        );
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("not a SPRSLITE checkpoint: {path:?}");
+        }
+        let mut len8 = [0u8; 8];
+        f.read_exact(&mut len8)?;
+        let hlen = u64::from_le_bytes(len8) as usize;
+        let mut hbytes = vec![0u8; hlen];
+        f.read_exact(&mut hbytes)?;
+        let header = Json::parse(std::str::from_utf8(&hbytes)?)?;
+        let config =
+            crate::config::ModelConfig::from_json(header.get("config")?)?;
+        let mut params = Vec::new();
+        for spec in header.get("params")?.as_arr()? {
+            let name = spec.get("name")?.as_str()?.to_string();
+            let shape = spec.get("shape")?.usize_vec()?;
+            let n: usize = shape.iter().product();
+            let mut buf = vec![0u8; n * 4];
+            f.read_exact(&mut buf)
+                .with_context(|| format!("reading {name}"))?;
+            let data: Vec<f32> = buf
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                .collect();
+            params.push((name, shape, data));
+        }
+        Ok(Checkpoint { header, config, params })
+    }
+
+    pub fn get(&self, name: &str) -> Result<(&[usize], &[f32])> {
+        self.params
+            .iter()
+            .find(|(n, _, _)| n == name)
+            .map(|(_, s, d)| (s.as_slice(), d.as_slice()))
+            .ok_or_else(|| anyhow::anyhow!("param {name:?} not in checkpoint"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Manifest;
+
+    fn tiny_manifest() -> Manifest {
+        let j = Json::parse(
+            r#"{
+            "preset": "t",
+            "config": {"name":"t","vocab_size":8,"d_model":4,"n_layers":1,
+                "n_heads":1,"d_ff":8,"gated":true,"activation":"relu",
+                "rope_theta":10000.0,"rmsnorm_eps":1e-05,"init_std":0.02,
+                "train_batch":2,"seq_len":4,"score_batch":2,
+                "twell_tile_n":4,"twell_comp":1,"ell_width":8,
+                "dense_backup_frac":0.125},
+            "scan_k": 8, "l1_grid": [0.0],
+            "params": [{"name":"embed","shape":[8,4]},
+                       {"name":"ln_final","shape":[4]}],
+            "artifacts": {}
+        }"#,
+        )
+        .unwrap();
+        Manifest::from_json(&j).unwrap()
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let man = tiny_manifest();
+        let dir = std::env::temp_dir().join("repro_ckpt_test");
+        let path = dir.join("c.bin");
+        let p0: Vec<f32> = (0..32).map(|i| i as f32 * 0.5).collect();
+        let p1: Vec<f32> = vec![1.0; 4];
+        save(&path, &man, &[p0.clone(), p1.clone()]).unwrap();
+        let ck = Checkpoint::load(&path).unwrap();
+        assert_eq!(ck.config.vocab_size, 8);
+        let (shape, data) = ck.get("embed").unwrap();
+        assert_eq!(shape, &[8, 4]);
+        assert_eq!(data, p0.as_slice());
+        let (_, d1) = ck.get("ln_final").unwrap();
+        assert_eq!(d1, p1.as_slice());
+        assert!(ck.get("nope").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("repro_ckpt_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        std::fs::write(&path, b"NOTMAGIC........").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn shape_mismatch_rejected_on_save() {
+        let man = tiny_manifest();
+        let dir = std::env::temp_dir().join("repro_ckpt_mismatch");
+        let path = dir.join("c.bin");
+        let bad = vec![vec![0f32; 3], vec![0f32; 4]];
+        assert!(save(&path, &man, &bad).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

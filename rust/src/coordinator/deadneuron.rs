@@ -1,0 +1,118 @@
+//! Dead-neuron tracking (paper appendix C.3 / D.1).
+//!
+//! A neuron is "dead for a step" when it produced zero activations over
+//! the whole step's batch (~the paper's 1M-token window; ours is the
+//! step batch or scan-window).  The tracker keeps per-neuron streaks and
+//! reports the fraction that has been inactive for at least
+//! `streak_threshold` consecutive observations, which converges to the
+//! paper's "permanently inactive" notion as training settles (figure 9).
+
+pub struct Tracker {
+    layers: usize,
+    width: usize,
+    /// consecutive inactive observations per (layer, neuron)
+    streak: Vec<u32>,
+    observations: u32,
+    pub streak_threshold: u32,
+}
+
+impl Tracker {
+    pub fn new(layers: usize, width: usize) -> Self {
+        Tracker {
+            layers,
+            width,
+            streak: vec![0; layers * width],
+            observations: 0,
+            streak_threshold: 3,
+        }
+    }
+
+    /// `active` is the flattened [layers * width] activation-count tensor
+    /// returned by the train step (counts over the batch window).
+    pub fn observe(&mut self, active: &[f32]) {
+        assert_eq!(active.len(), self.streak.len());
+        self.observations += 1;
+        for (s, &a) in self.streak.iter_mut().zip(active) {
+            if a == 0.0 {
+                *s += 1;
+            } else {
+                *s = 0;
+            }
+        }
+    }
+
+    /// Fraction of neurons currently dead (streak >= threshold).
+    pub fn dead_fraction(&self) -> f32 {
+        if self.observations < self.streak_threshold {
+            return 0.0;
+        }
+        let dead = self
+            .streak
+            .iter()
+            .filter(|&&s| s >= self.streak_threshold)
+            .count();
+        dead as f32 / self.streak.len() as f32
+    }
+
+    /// Per-layer dead fractions (figure 9 per-layer breakdown).
+    pub fn dead_fraction_per_layer(&self) -> Vec<f32> {
+        (0..self.layers)
+            .map(|l| {
+                let row = &self.streak[l * self.width..(l + 1) * self.width];
+                row.iter().filter(|&&s| s >= self.streak_threshold).count()
+                    as f32
+                    / self.width as f32
+            })
+            .collect()
+    }
+
+    /// Binary activity mask (1 = alive this window) for the reinit
+    /// artifact: dead columns get 0.
+    pub fn alive_mask(&self) -> Vec<f32> {
+        self.streak
+            .iter()
+            .map(|&s| if s >= self.streak_threshold { 0.0 } else { 1.0 })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_tracker_reports_zero() {
+        let t = Tracker::new(2, 4);
+        assert_eq!(t.dead_fraction(), 0.0);
+    }
+
+    #[test]
+    fn persistent_zeros_become_dead() {
+        let mut t = Tracker::new(1, 4);
+        let obs = vec![0.0, 1.0, 0.0, 2.0];
+        for _ in 0..3 {
+            t.observe(&obs);
+        }
+        assert_eq!(t.dead_fraction(), 0.5);
+        assert_eq!(t.dead_fraction_per_layer(), vec![0.5]);
+        assert_eq!(t.alive_mask(), vec![0.0, 1.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn revival_resets_streak() {
+        let mut t = Tracker::new(1, 2);
+        for _ in 0..3 {
+            t.observe(&[0.0, 0.0]);
+        }
+        assert_eq!(t.dead_fraction(), 1.0);
+        t.observe(&[5.0, 0.0]); // neuron 0 revives
+        assert_eq!(t.dead_fraction(), 0.5);
+    }
+
+    #[test]
+    fn needs_threshold_observations() {
+        let mut t = Tracker::new(1, 2);
+        t.observe(&[0.0, 0.0]);
+        assert_eq!(t.dead_fraction(), 0.0); // too early to call anything dead
+    }
+}

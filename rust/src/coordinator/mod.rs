@@ -1,0 +1,262 @@
+//! L3 coordinator: the training orchestrator that drives the AOT'd
+//! train-step artifacts through PJRT, tracks sparsity / dead-neuron
+//! statistics, applies the appendix C.3 mitigation strategies, logs every
+//! run as JSON under `runs/`, and exports checkpoints the rust inference
+//! engine (`model/`) can load.
+
+pub mod ckpt;
+pub mod deadneuron;
+pub mod sweep;
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::config::{Paths, TrainConfig};
+use crate::data::corpus::CorpusSpec;
+use crate::data::loader::{Dataset, Loader};
+use crate::runtime::{ModelBundle, Runtime, StepStats, TrainState};
+use crate::util::json::Json;
+
+/// One logged training step (a row of figure 2 / 8 / 9 raw data).
+#[derive(Clone, Debug)]
+pub struct StepRecord {
+    pub step: usize,
+    pub loss: f32,
+    pub ce: f32,
+    pub mean_nnz: f32,
+    pub dead_frac: f32,
+    pub grad_norm: f32,
+}
+
+/// Result of a full training run.
+pub struct RunResult {
+    pub records: Vec<StepRecord>,
+    pub final_nnz_per_layer: Vec<f32>,
+    pub final_dead_frac: f32,
+    pub wallclock_s: f64,
+    pub tokens_per_s: f64,
+    pub run_dir: PathBuf,
+}
+
+impl RunResult {
+    pub fn final_ce(&self) -> f32 {
+        // average of the last few records for stability
+        let tail: Vec<f64> = self
+            .records
+            .iter()
+            .rev()
+            .take(5)
+            .map(|r| r.ce as f64)
+            .collect();
+        crate::util::stats::mean(&tail) as f32
+    }
+}
+
+/// Training orchestrator for one run.
+pub struct Trainer<'rt> {
+    pub bundle: ModelBundle,
+    pub rt: &'rt mut Runtime,
+    pub cfg: TrainConfig,
+    pub run_name: String,
+    pub paths: Paths,
+}
+
+impl<'rt> Trainer<'rt> {
+    pub fn new(
+        paths: &Paths, rt: &'rt mut Runtime, preset: &str, cfg: TrainConfig,
+        run_name: &str,
+    ) -> Result<Self> {
+        let bundle = ModelBundle::open(&paths.artifacts, preset)
+            .with_context(|| format!("preset {preset} (run `make artifacts`?)"))?;
+        Ok(Trainer {
+            bundle,
+            rt,
+            cfg,
+            run_name: run_name.to_string(),
+            paths: paths.clone(),
+        })
+    }
+
+    /// Train on the synthetic corpus; returns the run summary and writes
+    /// runs/<name>/{log.json, checkpoint.bin, tokenizer.json}.
+    pub fn run(&mut self, corpus: &CorpusSpec) -> Result<RunResult> {
+        let mcfg = self.bundle.manifest.config.clone();
+        let (ds, bpe) = Dataset::synthetic(corpus, mcfg.vocab_size);
+        anyhow::ensure!(
+            ds.vocab_size <= mcfg.vocab_size,
+            "tokenizer vocab {} exceeds model vocab {}",
+            ds.vocab_size,
+            mcfg.vocab_size
+        );
+        let mut loader =
+            Loader::new(&ds, mcfg.train_batch, mcfg.seq_len, self.cfg.seed);
+        let bundle = &self.bundle;
+        let mut state = TrainState::init(bundle, self.rt,
+                                         self.cfg.seed as i32)?;
+        let mut tracker = deadneuron::Tracker::new(mcfg.n_layers, mcfg.d_ff);
+        let mut records = Vec::new();
+        let scan_k = self.bundle.manifest.scan_k;
+        let t0 = Instant::now();
+        let mut step = 0usize;
+        let tokens_per_step = mcfg.train_batch * mcfg.seq_len;
+        while step < self.cfg.steps {
+            let use_scan = self.cfg.steps - step >= scan_k
+                && self.cfg.mitigation != "reinit";
+            let stats_list: Vec<StepStats> = if use_scan {
+                let toks = loader.next_batches(scan_k);
+                let lrs: Vec<f32> = (0..scan_k)
+                    .map(|i| self.cfg.lr_at(step + i) as f32)
+                    .collect();
+                // l1 held constant within the window (warmup granularity
+                // of scan_k steps)
+                let l1 = self.cfg.l1_at(step) as f32;
+                state.step_k(bundle, self.rt, &toks, &lrs, l1)?
+            } else {
+                let toks = loader.next_batch();
+                let lr = self.cfg.lr_at(step) as f32;
+                let l1 = self.cfg.l1_at(step) as f32;
+                vec![state.step(bundle, self.rt, &toks, lr, l1)?]
+            };
+            for st in &stats_list {
+                if !st.active.is_empty() {
+                    tracker.observe(&st.active);
+                }
+                let mean_nnz = st.nnz.iter().sum::<f32>()
+                    / st.nnz.len().max(1) as f32;
+                records.push(StepRecord {
+                    step,
+                    loss: st.loss,
+                    ce: st.ce,
+                    mean_nnz,
+                    dead_frac: tracker.dead_fraction(),
+                    grad_norm: st.grad_norm,
+                });
+                if step % self.cfg.log_every == 0 {
+                    log::info!(
+                        "[{}] step {step}: loss {:.4} ce {:.4} nnz {:.1} dead {:.1}%",
+                        self.run_name, st.loss, st.ce, mean_nnz,
+                        tracker.dead_fraction() * 100.0
+                    );
+                }
+                step += 1;
+            }
+            // appendix C.3: targeted reinit of dead gate columns after
+            // each step (we apply it per observation window)
+            if self.cfg.mitigation == "reinit" {
+                let last = stats_list.last().unwrap();
+                if !last.active.is_empty() {
+                    state.reinit(
+                        bundle,
+                        self.rt,
+                        &last.active,
+                        step as i32,
+                        self.cfg.reinit_lambda as f32,
+                    )?;
+                }
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+
+        // final sparsity statistics from a held-out batch
+        let toks = loader.next_batch();
+        let lr = self.cfg.lr_at(self.cfg.steps.saturating_sub(1)) as f32;
+        let final_stats =
+            state.step(bundle, self.rt, &toks, lr * 0.0,
+                       self.cfg.l1_coeff as f32)?;
+
+        let run_dir = self.paths.run_dir(&self.run_name);
+        std::fs::create_dir_all(&run_dir)?;
+        self.write_log(&run_dir, &records, &final_stats, &tracker)?;
+        ckpt::save(
+            &run_dir.join("checkpoint.bin"),
+            &self.bundle.manifest,
+            &state.params_f32()?,
+        )?;
+        bpe.to_json().write_file(&run_dir.join("tokenizer.json"))?;
+
+        Ok(RunResult {
+            records,
+            final_nnz_per_layer: final_stats.nnz,
+            final_dead_frac: tracker.dead_fraction(),
+            wallclock_s: wall,
+            tokens_per_s: (self.cfg.steps * tokens_per_step) as f64 / wall,
+            run_dir,
+        })
+    }
+
+    fn write_log(
+        &self, dir: &std::path::Path, records: &[StepRecord],
+        final_stats: &StepStats, tracker: &deadneuron::Tracker,
+    ) -> Result<()> {
+        let j = Json::obj(vec![
+            ("run", Json::str(&self.run_name)),
+            ("preset", Json::str(&self.bundle.manifest.preset)),
+            ("l1_coeff", Json::Num(self.cfg.l1_coeff)),
+            ("steps", Json::Num(self.cfg.steps as f64)),
+            ("seed", Json::Num(self.cfg.seed as f64)),
+            ("mitigation", Json::str(&self.cfg.mitigation)),
+            (
+                "step",
+                Json::arr_usize(
+                    &records.iter().map(|r| r.step).collect::<Vec<_>>(),
+                ),
+            ),
+            (
+                "loss",
+                Json::arr_f32(
+                    &records.iter().map(|r| r.loss).collect::<Vec<_>>(),
+                ),
+            ),
+            (
+                "ce",
+                Json::arr_f32(&records.iter().map(|r| r.ce).collect::<Vec<_>>()),
+            ),
+            (
+                "mean_nnz",
+                Json::arr_f32(
+                    &records.iter().map(|r| r.mean_nnz).collect::<Vec<_>>(),
+                ),
+            ),
+            (
+                "dead_frac",
+                Json::arr_f32(
+                    &records.iter().map(|r| r.dead_frac).collect::<Vec<_>>(),
+                ),
+            ),
+            ("final_nnz_per_layer", Json::arr_f32(&final_stats.nnz)),
+            ("final_dead_frac", Json::Num(tracker.dead_fraction() as f64)),
+        ]);
+        j.write_file(&dir.join("log.json"))?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn step_record_final_ce_averages_tail() {
+        let records: Vec<StepRecord> = (0..10)
+            .map(|i| StepRecord {
+                step: i,
+                loss: 1.0,
+                ce: i as f32,
+                mean_nnz: 0.0,
+                dead_frac: 0.0,
+                grad_norm: 0.0,
+            })
+            .collect();
+        let r = RunResult {
+            records,
+            final_nnz_per_layer: vec![],
+            final_dead_frac: 0.0,
+            wallclock_s: 1.0,
+            tokens_per_s: 0.0,
+            run_dir: PathBuf::from("."),
+        };
+        assert_eq!(r.final_ce(), 7.0); // mean of 5..=9
+    }
+}

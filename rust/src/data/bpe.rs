@@ -1,0 +1,281 @@
+//! Byte-pair-encoding tokenizer trained from scratch (GPT-2-tokenizer
+//! stand-in; DESIGN.md section 2).
+//!
+//! Byte-level base vocabulary (256 ids) + 2 specials + learned merges up
+//! to the target vocab size.  Training operates on a word-frequency table
+//! with whitespace pre-segmentation (words carry a leading space marker,
+//! like GPT-2's Ġ), which keeps training O(vocab * unique-words).
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+pub const BOS: u32 = 256;
+pub const EOS: u32 = 257;
+pub const N_SPECIAL: usize = 2;
+
+#[derive(Clone, Debug)]
+pub struct Bpe {
+    /// merge list in training order: (left, right) -> new id
+    pub merges: Vec<(u32, u32)>,
+    /// rank lookup for encoding
+    ranks: HashMap<(u32, u32), u32>,
+    /// id -> byte string
+    pub vocab_bytes: Vec<Vec<u8>>,
+}
+
+/// Split text into pre-tokenization words: leading-space-attached
+/// alphanumeric runs or single punctuation.
+fn pre_tokenize(text: &str) -> Vec<&str> {
+    let bytes = text.as_bytes();
+    let mut words = Vec::new();
+    let mut start = 0;
+    let mut i = 0;
+    let is_word = |b: u8| b.is_ascii_alphanumeric() || b == b'\'';
+    while i < bytes.len() {
+        // a word = optional single space + run of same class
+        let ws_len = usize::from(bytes[i] == b' ' || bytes[i] == b'\n');
+        let j = i + ws_len;
+        if j >= bytes.len() {
+            words.push(&text[start..]);
+            break;
+        }
+        let class_word = is_word(bytes[j]);
+        let mut k = j + 1;
+        while k < bytes.len() && is_word(bytes[k]) == class_word
+            && bytes[k] != b' ' && bytes[k] != b'\n'
+        {
+            if !class_word {
+                break; // punctuation: one char per token
+            }
+            k += 1;
+        }
+        words.push(&text[start..k]);
+        start = k;
+        i = k;
+    }
+    words.retain(|w| !w.is_empty());
+    words
+}
+
+impl Bpe {
+    /// Train to `vocab_size` total ids (256 bytes + specials + merges).
+    pub fn train(text: &str, vocab_size: usize) -> Result<Bpe> {
+        if vocab_size < 256 + N_SPECIAL {
+            bail!("vocab_size must be at least {}", 256 + N_SPECIAL);
+        }
+        // word frequency table as id sequences
+        let mut word_freq: HashMap<Vec<u32>, u64> = HashMap::new();
+        for w in pre_tokenize(text) {
+            let ids: Vec<u32> = w.bytes().map(|b| b as u32).collect();
+            *word_freq.entry(ids).or_insert(0) += 1;
+        }
+        let mut vocab_bytes: Vec<Vec<u8>> =
+            (0u8..=255).map(|b| vec![b]).collect();
+        vocab_bytes.push(b"<bos>".to_vec());
+        vocab_bytes.push(b"<eos>".to_vec());
+
+        let mut merges = Vec::new();
+        let mut words: Vec<(Vec<u32>, u64)> = word_freq.into_iter().collect();
+        words.sort(); // determinism independent of hash order
+
+        while vocab_bytes.len() < vocab_size {
+            // count adjacent pairs
+            let mut pair_counts: HashMap<(u32, u32), u64> = HashMap::new();
+            for (ids, freq) in &words {
+                for win in ids.windows(2) {
+                    *pair_counts.entry((win[0], win[1])).or_insert(0) += freq;
+                }
+            }
+            // best pair (ties broken deterministically by pair value)
+            let Some((&best, &count)) = pair_counts
+                .iter()
+                .max_by(|a, b| a.1.cmp(b.1).then(b.0.cmp(a.0)))
+            else {
+                break;
+            };
+            if count < 2 {
+                break; // nothing productive left to merge
+            }
+            let new_id = vocab_bytes.len() as u32;
+            let mut merged = vocab_bytes[best.0 as usize].clone();
+            merged.extend_from_slice(&vocab_bytes[best.1 as usize]);
+            vocab_bytes.push(merged);
+            merges.push(best);
+            // apply merge to every word
+            for (ids, _) in words.iter_mut() {
+                let mut out = Vec::with_capacity(ids.len());
+                let mut i = 0;
+                while i < ids.len() {
+                    if i + 1 < ids.len() && (ids[i], ids[i + 1]) == best {
+                        out.push(new_id);
+                        i += 2;
+                    } else {
+                        out.push(ids[i]);
+                        i += 1;
+                    }
+                }
+                *ids = out;
+            }
+        }
+        let ranks = merges
+            .iter()
+            .enumerate()
+            .map(|(i, &p)| (p, i as u32))
+            .collect();
+        Ok(Bpe { merges, ranks, vocab_bytes })
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.vocab_bytes.len()
+    }
+
+    /// Encode text to token ids (greedy lowest-rank merging per word).
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        let mut out = Vec::new();
+        for w in pre_tokenize(text) {
+            let mut ids: Vec<u32> = w.bytes().map(|b| b as u32).collect();
+            loop {
+                let mut best: Option<(u32, usize)> = None; // (rank, pos)
+                for (i, win) in ids.windows(2).enumerate() {
+                    if let Some(&r) = self.ranks.get(&(win[0], win[1])) {
+                        if best.map(|(br, _)| r < br).unwrap_or(true) {
+                            best = Some((r, i));
+                        }
+                    }
+                }
+                match best {
+                    None => break,
+                    Some((rank, pos)) => {
+                        let new_id = 256 + N_SPECIAL as u32 + rank;
+                        ids.splice(pos..pos + 2, [new_id]);
+                    }
+                }
+            }
+            out.extend(ids);
+        }
+        out
+    }
+
+    /// Decode token ids back to text (lossless for valid utf-8 inputs).
+    pub fn decode(&self, ids: &[u32]) -> String {
+        let mut bytes = Vec::new();
+        for &id in ids {
+            if id as usize >= self.vocab_bytes.len() || id == BOS || id == EOS
+            {
+                continue;
+            }
+            bytes.extend_from_slice(&self.vocab_bytes[id as usize]);
+        }
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    /// Human-readable token string (for the figure-7 token tables).
+    pub fn token_str(&self, id: u32) -> String {
+        String::from_utf8_lossy(&self.vocab_bytes[id as usize]).into_owned()
+    }
+
+    // -- persistence (own binary-ish JSON format) ---------------------------
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            (
+                "merges",
+                Json::Arr(
+                    self.merges
+                        .iter()
+                        .map(|&(a, b)| {
+                            Json::Arr(vec![
+                                Json::Num(a as f64),
+                                Json::Num(b as f64),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &crate::util::json::Json) -> Result<Bpe> {
+        let mut vocab_bytes: Vec<Vec<u8>> =
+            (0u8..=255).map(|b| vec![b]).collect();
+        vocab_bytes.push(b"<bos>".to_vec());
+        vocab_bytes.push(b"<eos>".to_vec());
+        let mut merges = Vec::new();
+        for pair in j.get("merges")?.as_arr()? {
+            let p = pair.as_arr()?;
+            let a = p[0].as_f64()? as u32;
+            let b = p[1].as_f64()? as u32;
+            let mut m = vocab_bytes[a as usize].clone();
+            m.extend_from_slice(&vocab_bytes[b as usize]);
+            vocab_bytes.push(m);
+            merges.push((a, b));
+        }
+        let ranks = merges
+            .iter()
+            .enumerate()
+            .map(|(i, &p)| (p, i as u32))
+            .collect();
+        Ok(Bpe { merges, ranks, vocab_bytes })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "the river borders the valley . the river drains \
+                          the basin . source : www nih gov / doi 4821 . \
+                          it doesn 't match the coast .";
+
+    #[test]
+    fn roundtrip_lossless() {
+        let bpe = Bpe::train(SAMPLE, 300).unwrap();
+        let ids = bpe.encode(SAMPLE);
+        assert_eq!(bpe.decode(&ids), SAMPLE);
+    }
+
+    #[test]
+    fn training_compresses() {
+        let text = SAMPLE.repeat(20);
+        let bpe = Bpe::train(&text, 320).unwrap();
+        let ids = bpe.encode(&text);
+        assert!(ids.len() < text.len() / 2,
+                "{} tokens for {} bytes", ids.len(), text.len());
+    }
+
+    #[test]
+    fn frequent_words_become_single_tokens() {
+        let text = " the the the the the the river river river".repeat(50);
+        let bpe = Bpe::train(&text, 280).unwrap();
+        let ids = bpe.encode(" the");
+        assert_eq!(ids.len(), 1, "{ids:?}");
+    }
+
+    #[test]
+    fn vocab_size_respected() {
+        let bpe = Bpe::train(&SAMPLE.repeat(10), 290).unwrap();
+        assert!(bpe.vocab_size() <= 290);
+        let ids = bpe.encode(SAMPLE);
+        assert!(ids.iter().all(|&i| (i as usize) < bpe.vocab_size()));
+    }
+
+    #[test]
+    fn serde_roundtrip() {
+        use crate::util::json::Json;
+        let bpe = Bpe::train(&SAMPLE.repeat(5), 300).unwrap();
+        let j = bpe.to_json();
+        let back = Bpe::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(bpe.merges, back.merges);
+        assert_eq!(bpe.encode(SAMPLE), back.encode(SAMPLE));
+    }
+
+    #[test]
+    fn unknown_bytes_still_roundtrip() {
+        let bpe = Bpe::train(SAMPLE, 280).unwrap();
+        let text = "zzz qqq ###";
+        let ids = bpe.encode(text);
+        assert!(!ids.is_empty());
+        assert_eq!(bpe.decode(&ids), text);
+    }
+}

@@ -1,0 +1,248 @@
+//! Synthetic web-corpus generator (fineweb stand-in, DESIGN.md section 2).
+//!
+//! Documents are drawn from a topic-conditioned probabilistic grammar:
+//!   * each document picks a topic (geography / chemistry / history /
+//!     medicine) that reweights its noun and verb distributions,
+//!   * sentences come from a small set of templates with Zipfian word
+//!     choice within each part of speech,
+//!   * a fraction of sentences carry web boilerplate — citations with
+//!     URL fragments (`www nih gov`, `doi`) and contractions
+//!     (`doesn 't`) — that make the following token nearly deterministic.
+//!
+//! The determinism gradient is the point: the paper (figure 7) finds that
+//! LLMs allocate few non-zero activations to predictable tokens (link
+//! fragments, contraction stems) and many to high-information content
+//! words; this corpus reproduces that predictability structure so the
+//! analysis drivers can look for the same pattern.
+
+use crate::util::rng::Pcg32;
+
+/// Topic labels double as eval-task classes.
+pub const TOPICS: [&str; 4] = ["geography", "chemistry", "history", "medicine"];
+
+pub const DETERMINERS: [&str; 4] = ["the", "a", "this", "its"];
+pub const PREPOSITIONS: [&str; 5] = ["of", "in", "from", "near", "with"];
+pub const ADJECTIVES: [&str; 10] = [
+    "enduring", "loud", "ancient", "notable", "common", "rare", "vast",
+    "pure", "stable", "early",
+];
+pub const CONNECTIVES: [&str; 4] = ["and", "but", "while", "because"];
+
+/// Topic-specific nouns (the "Vermont / formaldehyde / Greeks" analogues).
+pub const NOUNS: [[&str; 8]; 4] = [
+    ["vermont", "ridge", "valley", "river", "plateau", "coast", "border",
+     "basin"],
+    ["formaldehyde", "ethanol", "polymer", "acid", "solvent", "catalyst",
+     "compound", "residue"],
+    ["greeks", "empire", "dynasty", "treaty", "archive", "fleet",
+     "settlement", "census"],
+    ["ach", "enzyme", "receptor", "dosage", "membrane", "lesion",
+     "antibody", "syndrome"],
+];
+
+pub const VERBS: [[&str; 6]; 4] = [
+    ["borders", "drains", "rises", "spans", "erodes", "floods"],
+    ["reacts", "binds", "dissolves", "oxidizes", "catalyzes", "precipitates"],
+    ["conquered", "recorded", "traded", "declined", "rebuilt", "governed"],
+    ["inhibits", "activates", "regulates", "signals", "absorbs", "secretes"],
+];
+
+/// Contraction stems: the token after them is (almost) deterministic.
+pub const CONTRACTIONS: [&str; 4] = ["doesn", "couldn", "wasn", "isn"];
+
+/// URL fragments for the citation boilerplate.
+pub const URL_PARTS: [&str; 6] = ["www", "nih", "gov", "doi", "nlm", "org"];
+
+#[derive(Clone, Debug)]
+pub struct CorpusSpec {
+    pub n_docs: usize,
+    pub sentences_per_doc: (usize, usize), // inclusive range
+    pub citation_prob: f64,
+    pub contraction_prob: f64,
+    pub seed: u64,
+}
+
+impl Default for CorpusSpec {
+    fn default() -> Self {
+        CorpusSpec {
+            n_docs: 2000,
+            sentences_per_doc: (4, 10),
+            citation_prob: 0.25,
+            contraction_prob: 0.2,
+            seed: 1234,
+        }
+    }
+}
+
+/// Zipfian weights over `n` ranks (w_i ~ 1/(i+1)).
+fn zipf_weights(n: usize) -> Vec<f64> {
+    (0..n).map(|i| 1.0 / (i as f64 + 1.0)).collect()
+}
+
+pub struct Generator {
+    rng: Pcg32,
+    noun_w: Vec<f64>,
+    verb_w: Vec<f64>,
+}
+
+impl Generator {
+    pub fn new(seed: u64) -> Self {
+        Generator {
+            rng: Pcg32::seeded(seed),
+            noun_w: zipf_weights(NOUNS[0].len()),
+            verb_w: zipf_weights(VERBS[0].len()),
+        }
+    }
+
+    fn noun(&mut self, topic: usize) -> &'static str {
+        NOUNS[topic][self.rng.weighted(&self.noun_w)]
+    }
+
+    fn verb(&mut self, topic: usize) -> &'static str {
+        VERBS[topic][self.rng.weighted(&self.verb_w)]
+    }
+
+    fn pick<T: Copy>(&mut self, xs: &[T]) -> T {
+        xs[self.rng.usize_below(xs.len())]
+    }
+
+    /// One sentence from the template grammar.
+    fn sentence(&mut self, topic: usize, spec: &CorpusSpec) -> String {
+        let mut words: Vec<String> = Vec::with_capacity(16);
+        if self.rng.f64() < spec.citation_prob {
+            // web boilerplate: "source : www nih gov / doi 4821 ."
+            words.push("source".into());
+            words.push(":".into());
+            // url fragments appear in near-fixed order => very predictable
+            words.push("www".into());
+            words.push(self.pick(&["nih", "nlm", "gov"]).to_string());
+            words.push("gov".into());
+            words.push("/".into());
+            words.push("doi".into());
+            words.push(format!("{}", 1000 + self.rng.below(9000)));
+        } else {
+            words.push(self.pick(&DETERMINERS).to_string());
+            if self.rng.f64() < 0.5 {
+                words.push(self.pick(&ADJECTIVES).to_string());
+            }
+            words.push(self.noun(topic).to_string());
+            if self.rng.f64() < spec.contraction_prob {
+                // contraction stem + deterministic continuation
+                words.push(self.pick(&CONTRACTIONS).to_string());
+                words.push("'t".into());
+                words.push("match".into());
+            } else {
+                words.push(self.verb(topic).to_string());
+            }
+            words.push(self.pick(&DETERMINERS).to_string());
+            words.push(self.noun(topic).to_string());
+            if self.rng.f64() < 0.6 {
+                words.push(self.pick(&PREPOSITIONS).to_string());
+                words.push(self.pick(&DETERMINERS).to_string());
+                words.push(self.noun(topic).to_string());
+            }
+            if self.rng.f64() < 0.3 {
+                words.push(self.pick(&CONNECTIVES).to_string());
+                words.push(self.pick(&DETERMINERS).to_string());
+                words.push(self.noun(topic).to_string());
+                words.push(self.verb(topic).to_string());
+            }
+        }
+        words.push(".".into());
+        words.join(" ")
+    }
+
+    /// One document: topic header + sentences (the header makes topic a
+    /// learnable, probe-able property).
+    pub fn document(&mut self, spec: &CorpusSpec) -> (usize, String) {
+        let topic = self.rng.usize_below(TOPICS.len());
+        let (lo, hi) = spec.sentences_per_doc;
+        let n = lo + self.rng.usize_below(hi - lo + 1);
+        let mut out = format!("topic {} :", TOPICS[topic]);
+        for _ in 0..n {
+            out.push(' ');
+            out.push_str(&self.sentence(topic, spec));
+        }
+        (topic, out)
+    }
+}
+
+/// Generate the full corpus; returns (topic, text) per document.
+pub fn generate(spec: &CorpusSpec) -> Vec<(usize, String)> {
+    let mut g = Generator::new(spec.seed);
+    (0..spec.n_docs).map(|_| g.document(spec)).collect()
+}
+
+/// Concatenate documents into one training text separated by newlines.
+pub fn corpus_text(spec: &CorpusSpec) -> String {
+    generate(spec)
+        .into_iter()
+        .map(|(_, d)| d)
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let spec = CorpusSpec { n_docs: 5, ..CorpusSpec::default() };
+        assert_eq!(generate(&spec), generate(&spec));
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = CorpusSpec { n_docs: 5, seed: 1, ..CorpusSpec::default() };
+        let b = CorpusSpec { n_docs: 5, seed: 2, ..CorpusSpec::default() };
+        assert_ne!(generate(&a), generate(&b));
+    }
+
+    #[test]
+    fn documents_have_topic_header() {
+        let spec = CorpusSpec { n_docs: 20, ..CorpusSpec::default() };
+        for (topic, text) in generate(&spec) {
+            assert!(text.starts_with(&format!("topic {} :", TOPICS[topic])));
+        }
+    }
+
+    #[test]
+    fn corpus_contains_boilerplate_and_content() {
+        let spec = CorpusSpec { n_docs: 200, ..CorpusSpec::default() };
+        let text = corpus_text(&spec);
+        assert!(text.contains("doi"));
+        assert!(text.contains("'t"));
+        // at least one topical noun from each topic
+        for nouns in NOUNS {
+            assert!(nouns.iter().any(|n| text.contains(n)));
+        }
+    }
+
+    #[test]
+    fn contraction_followed_by_apostrophe_t() {
+        let spec = CorpusSpec { n_docs: 300, ..CorpusSpec::default() };
+        let text = corpus_text(&spec);
+        for stem in CONTRACTIONS {
+            let mut rest = text.as_str();
+            while let Some(i) = rest.find(&format!(" {stem} ")) {
+                let after = &rest[i + stem.len() + 2..];
+                assert!(after.starts_with("'t "),
+                        "contraction {stem} not followed by 't");
+                rest = after;
+            }
+        }
+    }
+
+    #[test]
+    fn topics_roughly_uniform() {
+        let spec = CorpusSpec { n_docs: 2000, ..CorpusSpec::default() };
+        let mut counts = [0usize; 4];
+        for (t, _) in generate(&spec) {
+            counts[t] += 1;
+        }
+        for c in counts {
+            assert!((300..700).contains(&c), "{counts:?}");
+        }
+    }
+}

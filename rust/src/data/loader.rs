@@ -1,0 +1,155 @@
+//! Dataset + batching dataloader over the tokenized corpus.
+//!
+//! The token stream is the concatenation of all documents separated by
+//! EOS; training batches are `[batch, seq+1]` windows sampled without
+//! replacement per epoch (deterministic given the seed), matching how the
+//! python train_step slices inputs/targets.
+
+use crate::data::bpe::{Bpe, EOS};
+use crate::data::corpus::{self, CorpusSpec};
+use crate::util::rng::Pcg32;
+
+pub struct Dataset {
+    pub tokens: Vec<u32>,
+    pub vocab_size: usize,
+}
+
+impl Dataset {
+    /// Build corpus -> tokenizer -> token stream in one go.
+    pub fn synthetic(spec: &CorpusSpec, vocab_size: usize) -> (Dataset, Bpe) {
+        let docs = corpus::generate(spec);
+        let text: Vec<&str> = docs.iter().map(|(_, d)| d.as_str()).collect();
+        let joined = text.join("\n");
+        let bpe = Bpe::train(&joined, vocab_size).expect("bpe train");
+        let mut tokens = Vec::new();
+        for d in &text {
+            tokens.extend(bpe.encode(d));
+            tokens.push(EOS);
+        }
+        let vs = bpe.vocab_size();
+        (Dataset { tokens, vocab_size: vs }, bpe)
+    }
+
+    pub fn n_windows(&self, seq: usize) -> usize {
+        self.tokens.len().saturating_sub(seq + 1)
+    }
+}
+
+/// Epoch-shuffled window sampler.
+pub struct Loader<'a> {
+    data: &'a Dataset,
+    pub batch: usize,
+    pub seq: usize,
+    order: Vec<usize>,
+    cursor: usize,
+    rng: Pcg32,
+    /// stride between candidate window starts (1 = fully overlapping)
+    pub stride: usize,
+}
+
+impl<'a> Loader<'a> {
+    pub fn new(data: &'a Dataset, batch: usize, seq: usize, seed: u64) -> Self {
+        let stride = (seq / 2).max(1);
+        let n = data.n_windows(seq) / stride;
+        assert!(n >= batch, "corpus too small: {n} windows for batch {batch}");
+        let mut l = Loader {
+            data,
+            batch,
+            seq,
+            order: (0..n).map(|i| i * stride).collect(),
+            cursor: 0,
+            rng: Pcg32::seeded(seed),
+            stride,
+        };
+        l.reshuffle();
+        l
+    }
+
+    fn reshuffle(&mut self) {
+        self.rng.shuffle(&mut self.order);
+        self.cursor = 0;
+    }
+
+    /// Next `[batch, seq+1]` i32 batch, row-major flattened.
+    pub fn next_batch(&mut self) -> Vec<i32> {
+        let mut out = Vec::with_capacity(self.batch * (self.seq + 1));
+        for _ in 0..self.batch {
+            if self.cursor >= self.order.len() {
+                self.reshuffle();
+            }
+            let start = self.order[self.cursor];
+            self.cursor += 1;
+            out.extend(
+                self.data.tokens[start..start + self.seq + 1]
+                    .iter()
+                    .map(|&t| t as i32),
+            );
+        }
+        out
+    }
+
+    /// `k` consecutive batches flattened (for the train_step8 artifact).
+    pub fn next_batches(&mut self, k: usize) -> Vec<i32> {
+        let mut out = Vec::with_capacity(k * self.batch * (self.seq + 1));
+        for _ in 0..k {
+            out.extend(self.next_batch());
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_dataset() -> (Dataset, Bpe) {
+        let spec = CorpusSpec { n_docs: 60, seed: 7, ..CorpusSpec::default() };
+        Dataset::synthetic(&spec, 300)
+    }
+
+    #[test]
+    fn tokens_in_vocab_range() {
+        let (ds, _) = small_dataset();
+        assert!(ds.tokens.iter().all(|&t| (t as usize) < ds.vocab_size));
+        assert!(ds.tokens.len() > 1000);
+    }
+
+    #[test]
+    fn batches_have_right_shape_and_range() {
+        let (ds, _) = small_dataset();
+        let mut l = Loader::new(&ds, 4, 32, 0);
+        let b = l.next_batch();
+        assert_eq!(b.len(), 4 * 33);
+        assert!(b.iter().all(|&t| t >= 0 && (t as usize) < ds.vocab_size));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (ds, _) = small_dataset();
+        let mut a = Loader::new(&ds, 4, 32, 42);
+        let mut b = Loader::new(&ds, 4, 32, 42);
+        assert_eq!(a.next_batch(), b.next_batch());
+        assert_eq!(a.next_batches(3), b.next_batches(3));
+    }
+
+    #[test]
+    fn epoch_wraps_without_panic() {
+        let (ds, _) = small_dataset();
+        let mut l = Loader::new(&ds, 8, 32, 1);
+        let n_batches = l.order.len() / 8 + 3; // force a reshuffle
+        for _ in 0..n_batches {
+            let _ = l.next_batch();
+        }
+    }
+
+    #[test]
+    fn windows_are_contiguous_corpus_slices() {
+        let (ds, _) = small_dataset();
+        let mut l = Loader::new(&ds, 1, 16, 9);
+        let b = l.next_batch();
+        // find the window in the source stream
+        let w: Vec<u32> = b.iter().map(|&t| t as u32).collect();
+        let found = ds.tokens.windows(17).any(|win| win == w.as_slice());
+        assert!(found);
+    }
+}

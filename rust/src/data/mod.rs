@@ -1,0 +1,14 @@
+//! Data substrate: a synthetic fineweb-like corpus generator, a BPE
+//! tokenizer trained from scratch, and a batching dataloader.
+//!
+//! Substitution note (DESIGN.md section 2): the paper pretrains on
+//! fineweb-edu, which is unavailable offline.  The generator produces
+//! web-crawl-shaped documents from a probabilistic grammar whose token
+//! categories (URL fragments, contractions, content nouns/verbs,
+//! boilerplate) are chosen so the paper's *token-level sparsity
+//! phenomenology* (figure 7: link/contraction tokens cheap, content
+//! tokens expensive, position-0 spike) has a measurable analogue.
+
+pub mod bpe;
+pub mod corpus;
+pub mod loader;

@@ -1,0 +1,219 @@
+//! The seven synthetic downstream tasks (paper-table-6 stand-ins).
+//!
+//! | task                   | paper analogue  | probes                          |
+//! |------------------------|-----------------|---------------------------------|
+//! | topic-match            | CQA             | topical association             |
+//! | entity-recall          | OpenBookQA      | in-topic entity knowledge       |
+//! | link-completion        | (fig. 7 tokens) | boilerplate continuation        |
+//! | contraction-expansion  | WinoGrande-ish  | syntactic completion            |
+//! | template-completion    | HellaSwag       | sentence continuation           |
+//! | span-copy              | ARC-easy        | context copying                 |
+//! | verb-selection         | PIQA            | subject/verb plausibility       |
+
+use crate::data::corpus::{
+    ADJECTIVES, CONTRACTIONS, DETERMINERS, NOUNS, TOPICS, VERBS,
+};
+use crate::eval::Instance;
+use crate::util::rng::Pcg32;
+
+pub type Generator = fn(&mut Pcg32) -> Instance;
+
+pub fn all_tasks() -> Vec<(&'static str, Generator)> {
+    vec![
+        ("topic-match", topic_match),
+        ("entity-recall", entity_recall),
+        ("link-completion", link_completion),
+        ("contraction-expansion", contraction_expansion),
+        ("template-completion", template_completion),
+        ("span-copy", span_copy),
+        ("verb-selection", verb_selection),
+    ]
+}
+
+fn pick<'a, T>(rng: &mut Pcg32, xs: &'a [T]) -> &'a T {
+    &xs[rng.usize_below(xs.len())]
+}
+
+/// Given a topical sentence, choose the matching topic header.
+fn topic_match(rng: &mut Pcg32) -> Instance {
+    let topic = rng.usize_below(TOPICS.len());
+    let noun = pick(rng, &NOUNS[topic]);
+    let verb = pick(rng, &VERBS[topic]);
+    let noun2 = pick(rng, &NOUNS[topic]);
+    // prompt reverses the corpus order (body -> topic), probing the
+    // association rather than the literal template
+    let prompt = format!("the {noun} {verb} the {noun2} . topic");
+    let gold_choice = format!(" {}", TOPICS[topic]);
+    let mut choices = vec![gold_choice];
+    for t in 0..TOPICS.len() {
+        if t != topic {
+            choices.push(format!(" {}", TOPICS[t]));
+        }
+    }
+    shuffle_with_gold(rng, prompt, choices)
+}
+
+/// Complete a topical sentence with an in-topic entity vs out-of-topic
+/// distractors.
+fn entity_recall(rng: &mut Pcg32) -> Instance {
+    let topic = rng.usize_below(TOPICS.len());
+    let noun = pick(rng, &NOUNS[topic]);
+    let verb = pick(rng, &VERBS[topic]);
+    let prompt =
+        format!("topic {} : the {noun} {verb} the", TOPICS[topic]);
+    let gold = format!(" {}", pick(rng, &NOUNS[topic]));
+    let mut choices = vec![gold.clone()];
+    while choices.len() < 4 {
+        let other_topic = rng.usize_below(TOPICS.len());
+        if other_topic == topic {
+            continue;
+        }
+        let distractor = format!(" {}", pick(rng, &NOUNS[other_topic]));
+        if !choices.contains(&distractor) {
+            choices.push(distractor);
+        }
+    }
+    shuffle_with_gold(rng, prompt, choices)
+}
+
+/// The figure-7 boilerplate: "source : www nih" -> "gov".
+fn link_completion(rng: &mut Pcg32) -> Instance {
+    let mid = pick(rng, &["nih", "nlm", "gov"]);
+    let prompt = format!("source : www {mid}");
+    let choices = vec![
+        " gov".to_string(),
+        " valley".to_string(),
+        " enzyme".to_string(),
+        " treaty".to_string(),
+    ];
+    Instance { prompt, choices, gold: 0 }
+}
+
+/// "doesn" must continue with "'t" (contraction stems are the paper's
+/// lowest-nnz tokens).
+fn contraction_expansion(rng: &mut Pcg32) -> Instance {
+    let stem = pick(rng, &CONTRACTIONS);
+    let topic = rng.usize_below(TOPICS.len());
+    let noun = pick(rng, &NOUNS[topic]);
+    let prompt = format!("the {noun} {stem}");
+    let choices = vec![
+        " 't".to_string(),
+        " the".to_string(),
+        " of".to_string(),
+        " gov".to_string(),
+    ];
+    Instance { prompt, choices, gold: 0 }
+}
+
+/// HellaSwag-style continuation: after "det adj noun verb det ..." a
+/// noun is grammatical, boilerplate is not.
+fn template_completion(rng: &mut Pcg32) -> Instance {
+    let topic = rng.usize_below(TOPICS.len());
+    let det = pick(rng, &DETERMINERS);
+    let adj = pick(rng, &ADJECTIVES);
+    let noun = pick(rng, &NOUNS[topic]);
+    let verb = pick(rng, &VERBS[topic]);
+    let det2 = pick(rng, &DETERMINERS);
+    let prompt =
+        format!("topic {} : {det} {adj} {noun} {verb} {det2}", TOPICS[topic]);
+    let gold = format!(" {}", pick(rng, &NOUNS[topic]));
+    let choices = vec![
+        gold,
+        " doi".to_string(),
+        " :".to_string(),
+        " because".to_string(),
+    ];
+    Instance { prompt, choices, gold: 0 }
+}
+
+/// Copy an entity mentioned earlier in the context (ARC-easy retrieval).
+fn span_copy(rng: &mut Pcg32) -> Instance {
+    let topic = rng.usize_below(TOPICS.len());
+    let noun_idx = rng.usize_below(NOUNS[topic].len());
+    let noun = NOUNS[topic][noun_idx];
+    let verb = pick(rng, &VERBS[topic]);
+    let prompt = format!(
+        "topic {} : the {noun} {verb} the {noun} . the {noun} {verb} the",
+        TOPICS[topic]
+    );
+    let gold = format!(" {noun}");
+    let mut choices = vec![gold.clone()];
+    for cand in NOUNS[topic] {
+        if choices.len() >= 4 {
+            break;
+        }
+        let c = format!(" {cand}");
+        if !choices.contains(&c) {
+            choices.push(c);
+        }
+    }
+    shuffle_with_gold(rng, prompt, choices)
+}
+
+/// Choose the verb that matches the sentence's topic (PIQA-ish
+/// plausibility).
+fn verb_selection(rng: &mut Pcg32) -> Instance {
+    let topic = rng.usize_below(TOPICS.len());
+    let other = (topic + 1 + rng.usize_below(TOPICS.len() - 1))
+        % TOPICS.len();
+    let noun = pick(rng, &NOUNS[topic]);
+    let prompt = format!("topic {} : the {noun}", TOPICS[topic]);
+    let gold = format!(" {}", pick(rng, &VERBS[topic]));
+    let mut choices = vec![gold.clone()];
+    for cand in VERBS[other] {
+        if choices.len() >= 4 {
+            break;
+        }
+        let c = format!(" {cand}");
+        if !choices.contains(&c) {
+            choices.push(c);
+        }
+    }
+    shuffle_with_gold(rng, prompt, choices)
+}
+
+/// Shuffle choices (gold currently first) and return with updated index.
+fn shuffle_with_gold(rng: &mut Pcg32, prompt: String, choices: Vec<String>)
+    -> Instance {
+    let gold_text = choices[0].clone();
+    let mut shuffled = choices;
+    rng.shuffle(&mut shuffled);
+    let gold = shuffled.iter().position(|c| *c == gold_text).unwrap();
+    Instance { prompt, choices: shuffled, gold }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn link_completion_gold_is_gov() {
+        let mut rng = Pcg32::seeded(1);
+        let inst = link_completion(&mut rng);
+        assert_eq!(inst.choices[inst.gold], " gov");
+    }
+
+    #[test]
+    fn entity_recall_distractors_off_topic() {
+        let mut rng = Pcg32::seeded(2);
+        for _ in 0..50 {
+            let inst = entity_recall(&mut rng);
+            // topic is named in the prompt; gold noun belongs to it
+            let topic = TOPICS
+                .iter()
+                .position(|t| inst.prompt.contains(t))
+                .unwrap();
+            let gold = inst.choices[inst.gold].trim();
+            assert!(NOUNS[topic].contains(&gold), "{gold} vs {topic}");
+        }
+    }
+
+    #[test]
+    fn span_copy_gold_appears_in_prompt() {
+        let mut rng = Pcg32::seeded(3);
+        for _ in 0..20 {
+            let inst = span_copy(&mut rng);
+            assert!(inst.prompt.contains(inst.choices[inst.gold].trim()));
+        }
+    }
+}

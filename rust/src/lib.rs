@@ -1,0 +1,21 @@
+//! Sparser, Faster, Lighter Transformer Language Models — reproduction.
+//!
+//! Three-layer architecture (DESIGN.md): this crate is Layer 3, the rust
+//! coordinator; `python/compile/` is the build-time L2 (JAX model) and L1
+//! (Pallas kernels), AOT-lowered to `artifacts/*.hlo.txt` which
+//! `runtime/` executes via PJRT.  `sparse/` holds the paper's kernel
+//! algorithms (TwELL, fused inference, hybrid training) as CPU kernels.
+
+pub mod analysis;
+pub mod config;
+pub mod data;
+pub mod metrics;
+pub mod coordinator;
+pub mod model;
+pub mod perfmodel;
+pub mod eval;
+pub mod runtime;
+pub mod serve;
+pub mod sparse;
+pub mod tensor;
+pub mod util;

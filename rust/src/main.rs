@@ -1,0 +1,268 @@
+//! `repro` — the L3 coordinator CLI.
+//!
+//! Subcommands (see DESIGN.md's per-experiment index):
+//!   train     one training run (preset, l1, steps, mitigation, ...)
+//!   sweep     experiment families: --what l1|scale|activation|gating|deadneuron
+//!   eval      downstream task suite on a saved run    (figure 3 / tables 1,6)
+//!   analyze   layer + token sparsity analysis of a run (figures 6/7/10/11)
+//!   serve     demo serving loop on a saved run
+//!   info      print platform + preset info
+
+use anyhow::{bail, Context, Result};
+
+use repro::config::{default_paths, Args, TrainConfig};
+use repro::coordinator::{ckpt::Checkpoint, sweep, Trainer};
+use repro::data::bpe::Bpe;
+use repro::data::corpus::CorpusSpec;
+use repro::model::{FfnBackend, Model};
+use repro::runtime::{ModelBundle, Runtime, TrainState};
+use repro::util::json::Json;
+
+fn main() -> Result<()> {
+    init_logger();
+    let args = Args::parse(std::env::args().skip(1))?;
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "train" => cmd_train(&args),
+        "sweep" => cmd_sweep(&args),
+        "eval" => cmd_eval(&args),
+        "analyze" => cmd_analyze(&args),
+        "serve" => cmd_serve(&args),
+        "info" => cmd_info(),
+        _ => {
+            eprintln!(
+                "usage: repro <train|sweep|eval|analyze|serve|info> [flags]\n\
+                 see DESIGN.md section 6 for the experiment index"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn init_logger() {
+    struct Stderr;
+    impl log::Log for Stderr {
+        fn enabled(&self, m: &log::Metadata) -> bool {
+            m.level() <= log::Level::Info
+        }
+        fn log(&self, r: &log::Record) {
+            if self.enabled(r.metadata()) {
+                eprintln!("[{}] {}", r.level(), r.args());
+            }
+        }
+        fn flush(&self) {}
+    }
+    static STDERR: Stderr = Stderr;
+    let _ = log::set_logger(&STDERR)
+        .map(|_| log::set_max_level(log::LevelFilter::Info));
+}
+
+fn train_cfg_from(args: &Args) -> Result<TrainConfig> {
+    let mut cfg = TrainConfig::default();
+    cfg.steps = args.get_usize("steps", cfg.steps)?;
+    cfg.peak_lr = args.get_f64("lr", cfg.peak_lr)?;
+    cfg.warmup_steps = args.get_usize("warmup", cfg.steps / 10)?;
+    cfg.l1_coeff = args.get_f64("l1", cfg.l1_coeff)?;
+    cfg.seed = args.get_usize("seed", 0)? as u64;
+    cfg.mitigation = args.get_or("mitigation", "none");
+    cfg.l1_warmup_steps = args.get_usize("l1-warmup", cfg.steps / 4)?;
+    Ok(cfg)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let paths = default_paths();
+    let preset = args.get_or("preset", "tiny");
+    let cfg = train_cfg_from(args)?;
+    let run_name = args.get_or(
+        "name",
+        &format!("train_{preset}_l1{:.0e}", cfg.l1_coeff),
+    );
+    let mut rt = Runtime::cpu()?;
+    let mut tr = Trainer::new(&paths, &mut rt, &preset, cfg, &run_name)?;
+    let res = tr.run(&CorpusSpec::default())?;
+    println!(
+        "run {run_name}: final ce {:.4}, mean nnz {:.1}, dead {:.1}%, \
+         {:.0} tok/s, checkpoint at {:?}",
+        res.final_ce(),
+        repro::util::stats::mean(
+            &res.final_nnz_per_layer.iter().map(|&v| v as f64)
+                .collect::<Vec<_>>()
+        ),
+        res.final_dead_frac * 100.0,
+        res.tokens_per_s,
+        res.run_dir.join("checkpoint.bin"),
+    );
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let paths = default_paths();
+    let what = args.get_or("what", "l1");
+    let steps = args.get_usize("steps", 240)?;
+    let mut rt = Runtime::cpu()?;
+    // the paper grid, rescaled to our loss landscape (EXPERIMENTS.md)
+    let grid = sweep::scaled_l1_grid(&[
+        0.0, 5e-6, 1e-5, 1.5e-5, 2e-5, 3e-5, 5e-5, 1e-4,
+    ]);
+    let l1_rec = 2e-5 * sweep::L1_SCALE;
+    let l1_aggr = 3e-5 * sweep::L1_SCALE;
+    let outcome = match what.as_str() {
+        "l1" => {
+            let preset = args.get_or("preset", "s");
+            sweep::sweep_l1(&paths, &mut rt, &preset, steps, &grid)?
+        }
+        "scale" => sweep::sweep_scale(
+            &paths, &mut rt, &["xs", "s", "m", "l"], steps, l1_rec,
+        )?,
+        "activation" => {
+            sweep::sweep_activation(&paths, &mut rt, steps, l1_rec)?
+        }
+        "gating" => {
+            sweep::sweep_gating(&paths, &mut rt, steps, l1_rec, l1_aggr)?
+        }
+        "deadneuron" => {
+            sweep::sweep_deadneuron(&paths, &mut rt, steps, l1_rec)?
+        }
+        other => bail!("unknown sweep {other:?}"),
+    };
+    let path = outcome.write(&paths)?;
+    println!("sweep {what} complete -> {path:?}");
+    Ok(())
+}
+
+fn load_run(run: &str) -> Result<(Model, Bpe)> {
+    let paths = default_paths();
+    let dir = paths.run_dir(run);
+    let ck = Checkpoint::load(&dir.join("checkpoint.bin"))?;
+    let model = Model::from_checkpoint(&ck, FfnBackend::Twell)?;
+    let bpe = Bpe::from_json(&Json::read_file(&dir.join("tokenizer.json"))?)?;
+    Ok((model, bpe))
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let run = args.require("run")?;
+    let n = args.get_usize("n", 50)?;
+    let (model, bpe) = load_run(run)?;
+    let results = repro::eval::evaluate(&model, &bpe, n, 7)?;
+    let mut table =
+        repro::util::bench::Table::new(&["task", "accuracy", "n"]);
+    for r in &results {
+        table.row(&[
+            r.task.clone(),
+            format!("{:.1}%", r.accuracy * 100.0),
+            r.n.to_string(),
+        ]);
+    }
+    table.print();
+    println!(
+        "mean task accuracy: {:.1}%",
+        repro::eval::mean_accuracy(&results) * 100.0
+    );
+    let paths = default_paths();
+    Json::obj(vec![
+        ("run", Json::str(run)),
+        (
+            "tasks",
+            Json::Arr(
+                results
+                    .iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("task", Json::str(&r.task)),
+                            ("accuracy", Json::Num(r.accuracy)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("mean_accuracy", Json::Num(repro::eval::mean_accuracy(&results))),
+    ])
+    .write_file(&paths.run_dir(run).join("eval.json"))?;
+    Ok(())
+}
+
+fn cmd_analyze(args: &Args) -> Result<()> {
+    let run = args.require("run")?;
+    let what = args.get_or("what", "layers");
+    let paths = default_paths();
+    let dir = paths.run_dir(run);
+    let ck = Checkpoint::load(&dir.join("checkpoint.bin"))?;
+    let preset = ck.config.name.clone();
+    let bundle = ModelBundle::open(&paths.artifacts, &preset)?;
+    let mut rt = Runtime::cpu()?;
+    let params: Vec<Vec<f32>> =
+        ck.params.iter().map(|(_, _, d)| d.clone()).collect();
+    let state = TrainState::from_params(&bundle, &params)?;
+    let bpe = Bpe::from_json(&Json::read_file(&dir.join("tokenizer.json"))?)?;
+    match what.as_str() {
+        "layers" => repro::analysis::analyze_layers(
+            &bundle, &mut rt, &state, &ck, &dir,
+        ),
+        "tokens" => repro::analysis::analyze_tokens(
+            &bundle, &mut rt, &state, &bpe, &dir,
+        ),
+        other => bail!("unknown analysis {other:?}"),
+    }
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let run = args.require("run")?;
+    let n_requests = args.get_usize("requests", 16)?;
+    let max_new = args.get_usize("max-new", 16)?;
+    let (model, bpe) = load_run(run)?;
+    let policy = repro::serve::BatchPolicy::default();
+    let server = repro::serve::Server::start(model, policy);
+    let mut metrics = repro::serve::ServeMetrics::default();
+    let t0 = std::time::Instant::now();
+    let prompts = [
+        "topic geography : the river",
+        "topic chemistry : the acid",
+        "source : www nih",
+        "the empire doesn",
+    ];
+    let rxs: Vec<_> = (0..n_requests)
+        .map(|i| {
+            let prompt = bpe.encode(prompts[i % prompts.len()]);
+            server.submit(prompt, max_new).1
+        })
+        .collect();
+    for rx in rxs {
+        let c = rx.recv().context("worker dropped")?;
+        println!(
+            "req {} ({} prefill): {:?} [{:.1} ms]",
+            c.id,
+            c.prefill_tokens,
+            bpe.decode(&c.tokens),
+            c.total_ms
+        );
+        metrics.record(c);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "served {n_requests} requests: p50 {:.1} ms, p99 {:.1} ms, \
+         {:.0} tok/s",
+        metrics.p50_ms(),
+        metrics.p99_ms(),
+        metrics.throughput_tok_s(wall)
+    );
+    server.shutdown();
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    let rt = Runtime::cpu()?;
+    println!("platform: {}", rt.platform());
+    let paths = default_paths();
+    for preset in ["tiny", "xs", "s", "m", "l", "m-silu", "m-nongated"] {
+        if let Ok(b) = ModelBundle::open(&paths.artifacts, preset) {
+            println!(
+                "preset {preset}: {} params, {} layers, d={} f={}",
+                b.manifest.total_params(),
+                b.manifest.config.n_layers,
+                b.manifest.config.d_model,
+                b.manifest.config.d_ff,
+            );
+        }
+    }
+    Ok(())
+}

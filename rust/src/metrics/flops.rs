@@ -1,0 +1,119 @@
+//! FLOP accounting for feed-forward blocks and whole transformer steps.
+//!
+//! Conventions: one multiply-add = 2 FLOPs; sparse counts charge only the
+//! touched non-zeros (the paper's "theoretical computation" axis that the
+//! kernels try to realize in wall-clock).
+
+/// Dense gated FFN forward FLOPs for a batch of `m` tokens (eq. 1):
+/// gate + up projections (2*m*k*n each), elementwise (m*n), down (2*m*n*k).
+pub fn ffn_gated_dense(m: usize, k: usize, n: usize) -> u64 {
+    let (m, k, n) = (m as u64, k as u64, n as u64);
+    2 * m * k * n + 2 * m * k * n + m * n + 2 * m * n * k
+}
+
+/// Sparse gated FFN forward through the TwELL pipeline: the full gate
+/// matmul is still dense (it *produces* the sparsity pattern), but up and
+/// down only touch `nnz_total` hidden units (alg. 2 / eq. 3).
+pub fn ffn_gated_twell(m: usize, k: usize, n: usize, nnz_total: u64) -> u64 {
+    let (m, k, n) = (m as u64, k as u64, n as u64);
+    let gate = 2 * m * k * n;
+    // per non-zero: dot(x, wu_col) = 2k, scale+axpy into y = 2k (+2)
+    gate + nnz_total * (4 * k + 2) + _pack_overhead(m, n)
+}
+
+/// Non-gated FFN (eq. 5): dense up projection + sparse down.
+pub fn ffn_nongated_twell(m: usize, k: usize, n: usize, nnz_total: u64) -> u64 {
+    let (m, k, n) = (m as u64, k as u64, n as u64);
+    2 * m * k * n + nnz_total * (2 * k + 1) + _pack_overhead(m, n)
+}
+
+pub fn ffn_nongated_dense(m: usize, k: usize, n: usize) -> u64 {
+    let (m, k, n) = (m as u64, k as u64, n as u64);
+    2 * m * k * n + m * n + 2 * m * n * k
+}
+
+/// The epilogue pack is comparisons + counter bumps, charged as 2 ops per
+/// element scanned.
+fn _pack_overhead(m: u64, n: u64) -> u64 {
+    2 * m * n
+}
+
+/// Attention FLOPs for one layer (projections + scores + mix).
+pub fn attention(m: usize, s: usize, d: usize) -> u64 {
+    let (m, s, d) = (m as u64, s as u64, d as u64);
+    // q,k,v,o projections over m tokens + 2 * (m * s * d) score/mix
+    8 * m * d * d + 4 * m * s * d
+}
+
+/// Full dense transformer forward for `m = batch*seq` tokens.
+pub fn transformer_forward_dense(
+    m: usize, s: usize, d: usize, f: usize, layers: usize, vocab: usize,
+    gated: bool,
+) -> u64 {
+    let ffn = if gated {
+        ffn_gated_dense(m, d, f)
+    } else {
+        ffn_nongated_dense(m, d, f)
+    };
+    let per_layer = attention(m, s, d) + ffn;
+    per_layer * layers as u64 + 2 * (m as u64) * (d as u64) * (vocab as u64)
+}
+
+/// Training step ~= 3x forward (fwd + 2x bwd), the standard estimate.
+pub fn transformer_train_dense(
+    m: usize, s: usize, d: usize, f: usize, layers: usize, vocab: usize,
+    gated: bool,
+) -> u64 {
+    3 * transformer_forward_dense(m, s, d, f, layers, vocab, gated)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sparse_less_than_dense_when_sparse() {
+        let (m, k, n) = (128, 256, 704);
+        let dense = ffn_gated_dense(m, k, n);
+        // 5% density
+        let nnz = (m * n / 20) as u64;
+        let sparse = ffn_gated_twell(m, k, n, nnz);
+        assert!(sparse < dense, "{sparse} !< {dense}");
+    }
+
+    #[test]
+    fn sparse_approaches_gate_cost_at_zero_nnz() {
+        let (m, k, n) = (64, 128, 512);
+        let sparse = ffn_gated_twell(m, k, n, 0);
+        assert_eq!(sparse, 2 * (m * k * n) as u64 + 2 * (m * n) as u64);
+    }
+
+    #[test]
+    fn fully_dense_twell_more_expensive_than_dense() {
+        // at 100% density the sparse path does extra bookkeeping — the
+        // paper's figure 10 observation (negative speedups for non-sparse
+        // models)
+        let (m, k, n) = (64, 128, 512);
+        let nnz = (m * n) as u64;
+        assert!(ffn_gated_twell(m, k, n, nnz) > ffn_gated_dense(m, k, n));
+    }
+
+    #[test]
+    fn transformer_counts_scale_with_layers() {
+        let f1 = transformer_forward_dense(256, 128, 128, 352, 2, 512, true);
+        let f2 = transformer_forward_dense(256, 128, 128, 352, 4, 512, true);
+        assert!(f2 > f1);
+        assert!(f2 < 2 * f1); // lm head is shared
+    }
+
+    #[test]
+    fn ffn_dominates_at_paper_ratios() {
+        // paper section 1: FFN accounts for the majority of layer FLOPs
+        // at d_ff = 8/3 d with gating
+        let m = 2048;
+        let (d, f) = (2048, 5632);
+        let ffn = ffn_gated_dense(m, d, f);
+        let attn = attention(m, 2048, d);
+        assert!(ffn > attn);
+    }
+}

@@ -1,0 +1,8 @@
+//! Measurement substrates: FLOP accounting, the analytical energy model
+//! (nvidia-smi stand-in, DESIGN.md section 1), and activation-memory
+//! accounting for the dense / TwELL / ELL / hybrid formats (figure 1 and
+//! the Table 1 peak-memory column).
+
+pub mod energy;
+pub mod flops;
+pub mod memory;

@@ -1,0 +1,176 @@
+//! KV-cache incremental decoding for the serving path.
+//!
+//! One cache per sequence; `Model::decode_step` runs a single token
+//! through the network reusing cached keys/values, with the FFN executing
+//! through the configured backend (M=1 rows exercise the same TwELL
+//! pipeline the batched path uses).
+
+use crate::model::{FfnBackend, Model};
+use crate::sparse::dense;
+use crate::sparse::ffn::{forward_dense, forward_twell};
+use crate::tensor::Mat;
+
+pub struct KvCache {
+    /// per layer: (seq_cap, d_model) keys / values, post-RoPE
+    pub k: Vec<Mat>,
+    pub v: Vec<Mat>,
+    pub len: usize,
+    pub cap: usize,
+}
+
+impl KvCache {
+    pub fn new(model: &Model, cap: usize) -> KvCache {
+        let d = model.cfg.d_model;
+        KvCache {
+            k: (0..model.cfg.n_layers).map(|_| Mat::zeros(cap, d)).collect(),
+            v: (0..model.cfg.n_layers).map(|_| Mat::zeros(cap, d)).collect(),
+            len: 0,
+            cap,
+        }
+    }
+}
+
+impl Model {
+    /// Feed one token; returns the next-token logits.  Position = cache
+    /// length before the call.
+    pub fn decode_step(&self, cache: &mut KvCache, token: u32) -> Vec<f32> {
+        assert!(cache.len < cache.cap, "kv cache full");
+        let d = self.cfg.d_model;
+        let h = self.cfg.n_heads;
+        let dh = self.cfg.head_dim();
+        let pos = cache.len;
+        let mut x = Mat::zeros(1, d);
+        x.row_mut(0).copy_from_slice(self.embed.row(token as usize));
+        for (li, layer) in self.layers.iter().enumerate() {
+            let normed = super::rmsnorm(&x, &layer.ln_attn,
+                                        self.cfg.rmsnorm_eps);
+            let mut q = dense::matmul(&normed, &layer.wq);
+            let mut k = dense::matmul(&normed, &layer.wk);
+            let v = dense::matmul(&normed, &layer.wv);
+            super::rope_row(q.row_mut(0), pos, h, dh, self.cfg.rope_theta);
+            super::rope_row(k.row_mut(0), pos, h, dh, self.cfg.rope_theta);
+            cache.k[li].row_mut(pos).copy_from_slice(k.row(0));
+            cache.v[li].row_mut(pos).copy_from_slice(v.row(0));
+            let scale = 1.0 / (dh as f32).sqrt();
+            let mut attn = Mat::zeros(1, d);
+            for head in 0..h {
+                let qh = &q.row(0)[head * dh..(head + 1) * dh];
+                let mut scores = Vec::with_capacity(pos + 1);
+                let mut maxv = f32::NEG_INFINITY;
+                for t in 0..=pos {
+                    let kh =
+                        &cache.k[li].row(t)[head * dh..(head + 1) * dh];
+                    let sc = dense::dot(qh, kh) * scale;
+                    scores.push(sc);
+                    maxv = maxv.max(sc);
+                }
+                let mut z = 0f32;
+                for s in scores.iter_mut() {
+                    *s = (*s - maxv).exp();
+                    z += *s;
+                }
+                let inv = 1.0 / z;
+                let oh = &mut attn.row_mut(0)[head * dh..(head + 1) * dh];
+                for (t, &w) in scores.iter().enumerate() {
+                    let vh =
+                        &cache.v[li].row(t)[head * dh..(head + 1) * dh];
+                    for (o, &vv) in oh.iter_mut().zip(vh) {
+                        *o += w * inv * vv;
+                    }
+                }
+            }
+            let attn_out = dense::matmul(&attn, &layer.wo);
+            super::add_inplace(&mut x, &attn_out);
+            let normed = super::rmsnorm(&x, &layer.ln_ffn,
+                                        self.cfg.rmsnorm_eps);
+            let y = match self.backend {
+                FfnBackend::Dense => forward_dense(&layer.ffn, &normed),
+                FfnBackend::Twell => forward_twell(&layer.ffn, &normed).0,
+            };
+            super::add_inplace(&mut x, &y);
+        }
+        cache.len += 1;
+        let x = super::rmsnorm(&x, &self.ln_final, self.cfg.rmsnorm_eps);
+        let logits = dense::matmul_nt(&x, &self.embed);
+        logits.data
+    }
+
+    /// Greedy decode: prefill the prompt then emit `max_new` tokens.
+    pub fn generate(&self, prompt: &[u32], max_new: usize) -> Vec<u32> {
+        let mut cache = KvCache::new(self, prompt.len() + max_new + 1);
+        let mut logits = Vec::new();
+        for &t in prompt {
+            logits = self.decode_step(&mut cache, t);
+        }
+        let mut out = Vec::with_capacity(max_new);
+        for _ in 0..max_new {
+            let next = argmax(&logits) as u32;
+            out.push(next);
+            logits = self.decode_step(&mut cache, next);
+        }
+        out
+    }
+}
+
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::tests_support::toy_model;
+
+    #[test]
+    fn decode_matches_full_forward() {
+        // incremental decoding must reproduce the batched forward logits
+        let m = toy_model(FfnBackend::Dense);
+        let tokens: Vec<u32> = vec![1, 5, 9, 2, 30, 7];
+        let (full, _) = m.forward(&tokens, 1, tokens.len());
+        let mut cache = KvCache::new(&m, 16);
+        let mut last = Vec::new();
+        for (s, &t) in tokens.iter().enumerate() {
+            last = m.decode_step(&mut cache, t);
+            for (a, b) in last.iter().zip(full.row(s)) {
+                assert!((a - b).abs() < 1e-4,
+                        "mismatch at position {s}: {a} vs {b}");
+            }
+        }
+        assert_eq!(last.len(), m.cfg.vocab_size);
+    }
+
+    #[test]
+    fn decode_matches_with_twell_backend() {
+        let m = toy_model(FfnBackend::Twell);
+        let tokens: Vec<u32> = vec![3, 3, 8, 21];
+        let (full, _) = m.forward(&tokens, 1, tokens.len());
+        let mut cache = KvCache::new(&m, 8);
+        for (s, &t) in tokens.iter().enumerate() {
+            let logits = m.decode_step(&mut cache, t);
+            for (a, b) in logits.iter().zip(full.row(s)) {
+                assert!((a - b).abs() < 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn generate_is_deterministic() {
+        let m = toy_model(FfnBackend::Dense);
+        let a = m.generate(&[1, 2, 3], 5);
+        let b = m.generate(&[1, 2, 3], 5);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 5);
+        assert!(a.iter().all(|&t| (t as usize) < m.cfg.vocab_size));
+    }
+
+    #[test]
+    fn argmax_picks_max() {
+        assert_eq!(argmax(&[0.1, 3.0, -1.0, 3.0]), 1); // first max wins
+    }
+}

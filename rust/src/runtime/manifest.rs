@@ -1,0 +1,155 @@
+//! AOT manifest parsing — the io contract written by python/compile/aot.py.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::config::ModelConfig;
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct IoSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub file: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub preset: String,
+    pub config: ModelConfig,
+    pub scan_k: usize,
+    pub l1_grid: Vec<f64>,
+    pub params: Vec<ParamSpec>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+fn io_specs(j: &Json) -> Result<Vec<IoSpec>> {
+    j.as_arr()?
+        .iter()
+        .map(|e| {
+            Ok(IoSpec {
+                shape: e.get("shape")?.usize_vec()?,
+                dtype: e.get("dtype")?.as_str()?.to_string(),
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn read(path: &Path) -> Result<Manifest> {
+        let j = Json::read_file(path)
+            .with_context(|| format!("manifest {path:?}"))?;
+        Self::from_json(&j)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Manifest> {
+        let params = j
+            .get("params")?
+            .as_arr()?
+            .iter()
+            .map(|p| {
+                Ok(ParamSpec {
+                    name: p.get("name")?.as_str()?.to_string(),
+                    shape: p.get("shape")?.usize_vec()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let mut artifacts = BTreeMap::new();
+        if let Json::Obj(m) = j.get("artifacts")? {
+            for (name, art) in m {
+                artifacts.insert(
+                    name.clone(),
+                    ArtifactSpec {
+                        file: art.get("file")?.as_str()?.to_string(),
+                        inputs: io_specs(art.get("inputs")?)?,
+                        outputs: io_specs(art.get("outputs")?)?,
+                    },
+                );
+            }
+        }
+        Ok(Manifest {
+            preset: j.get("preset")?.as_str()?.to_string(),
+            config: ModelConfig::from_json(j.get("config")?)?,
+            scan_k: j.get("scan_k")?.as_usize()?,
+            l1_grid: j.get("l1_grid")?.f64_vec()?,
+            params,
+            artifacts,
+        })
+    }
+
+    /// Total parameter count (sanity check against config.param_count()).
+    pub fn total_params(&self) -> usize {
+        self.params
+            .iter()
+            .map(|p| p.shape.iter().product::<usize>())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "preset": "t",
+        "config": {"name":"t","vocab_size":256,"d_model":64,"n_layers":2,
+                   "n_heads":2,"d_ff":176,"gated":true,"activation":"relu",
+                   "rope_theta":10000.0,"tied_embeddings":true,
+                   "rmsnorm_eps":1e-05,"init_std":0.02,"train_batch":4,
+                   "seq_len":64,"score_batch":8,"twell_tile_n":16,
+                   "twell_comp":4,"ell_width":64,"dense_backup_frac":0.125},
+        "scan_k": 8,
+        "l1_grid": [0.0, 1e-05],
+        "params": [{"name":"embed","shape":[256,64]},
+                   {"name":"ln_final","shape":[64]}],
+        "artifacts": {
+            "init": {"file":"init.hlo.txt",
+                     "inputs":[{"shape":[],"dtype":"i32"}],
+                     "outputs":[{"shape":[256,64],"dtype":"f32"},
+                                {"shape":[64],"dtype":"f32"}]}
+        }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::from_json(&Json::parse(SAMPLE).unwrap()).unwrap();
+        assert_eq!(m.preset, "t");
+        assert_eq!(m.config.d_model, 64);
+        assert_eq!(m.scan_k, 8);
+        assert_eq!(m.params.len(), 2);
+        assert_eq!(m.total_params(), 256 * 64 + 64);
+        let init = &m.artifacts["init"];
+        assert_eq!(init.inputs[0].dtype, "i32");
+        assert_eq!(init.outputs[0].shape, vec![256, 64]);
+    }
+
+    #[test]
+    fn real_manifest_if_built() {
+        // integration check against the actual artifacts, when present
+        let p = crate::config::default_paths().manifest("tiny");
+        if !p.exists() {
+            return;
+        }
+        let m = Manifest::read(&p).unwrap();
+        assert_eq!(m.preset, "tiny");
+        assert_eq!(m.total_params(), m.config.param_count());
+        for key in ["init", "train_step", "train_step8", "forward", "score",
+                    "forward_stats", "reinit"] {
+            assert!(m.artifacts.contains_key(key), "{key}");
+        }
+    }
+}

@@ -1,0 +1,379 @@
+//! PJRT runtime: load the AOT HLO-text artifacts and execute them from
+//! the rust hot path (python never runs at request time).
+//!
+//! Interchange is HLO *text* — `HloModuleProto::from_text_file` reassigns
+//! the 64-bit instruction ids that xla_extension 0.5.1 would otherwise
+//! reject (see /opt/xla-example/README.md and python/compile/aot.py).
+
+pub mod manifest;
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+pub use manifest::{ArtifactSpec, IoSpec, Manifest};
+
+/// Process-wide PJRT CPU client + compiled-executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        Ok(Runtime {
+            client: xla::PjRtClient::cpu()
+                .map_err(|e| anyhow::anyhow!("pjrt cpu client: {e:?}"))?,
+            exes: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact (cached by absolute path).
+    pub fn load(&mut self, path: &Path) -> Result<()> {
+        let key = path.to_string_lossy().to_string();
+        if self.exes.contains_key(&key) {
+            return Ok(());
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .map_err(|e| anyhow::anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {path:?}: {e:?}"))?;
+        self.exes.insert(key, exe);
+        Ok(())
+    }
+
+    /// Execute a loaded artifact.  AOT functions are lowered with
+    /// `return_tuple=True`, so the single output buffer is a tuple that we
+    /// decompose into one Literal per logical output.
+    pub fn call(&mut self, path: &Path, args: &[&xla::Literal])
+        -> Result<Vec<xla::Literal>> {
+        self.load(path)?;
+        let key = path.to_string_lossy().to_string();
+        let exe = self.exes.get(&key).unwrap();
+        let result = exe
+            .execute::<&xla::Literal>(args)
+            .map_err(|e| anyhow::anyhow!("execute {path:?}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch result: {e:?}"))?;
+        lit.to_tuple().map_err(|e| anyhow::anyhow!("untuple: {e:?}"))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Literal construction / extraction helpers
+// ---------------------------------------------------------------------------
+
+pub fn lit_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product::<usize>().max(1);
+    if data.len() != n {
+        bail!("shape {shape:?} wants {n} elements, got {}", data.len());
+    }
+    if shape.is_empty() {
+        return Ok(xla::Literal::scalar(data[0]));
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data)
+        .reshape(&dims)
+        .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))
+}
+
+pub fn lit_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product::<usize>().max(1);
+    if data.len() != n {
+        bail!("shape {shape:?} wants {n} elements, got {}", data.len());
+    }
+    if shape.is_empty() {
+        return Ok(xla::Literal::scalar(data[0]));
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data)
+        .reshape(&dims)
+        .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))
+}
+
+pub fn scalar_f32(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+pub fn scalar_i32(v: i32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+pub fn to_f32_vec(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec f32: {e:?}"))
+}
+
+pub fn to_f32_scalar(lit: &xla::Literal) -> Result<f32> {
+    Ok(to_f32_vec(lit)?[0])
+}
+
+// ---------------------------------------------------------------------------
+// Model bundle: manifest + artifact paths + parameter state
+// ---------------------------------------------------------------------------
+
+/// A preset's compiled model: manifest metadata plus helpers to call the
+/// standard artifacts with the canonical argument layout.
+pub struct ModelBundle {
+    pub manifest: Manifest,
+    pub dir: std::path::PathBuf,
+}
+
+impl ModelBundle {
+    pub fn open(artifacts_root: &Path, preset: &str) -> Result<ModelBundle> {
+        let dir = artifacts_root.join(preset);
+        let manifest = Manifest::read(&dir.join("manifest.json"))?;
+        Ok(ModelBundle { manifest, dir })
+    }
+
+    pub fn artifact_path(&self, name: &str) -> Result<std::path::PathBuf> {
+        let art = self
+            .manifest
+            .artifacts
+            .get(name)
+            .with_context(|| format!("artifact {name:?} not in manifest"))?;
+        Ok(self.dir.join(&art.file))
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.manifest.params.len()
+    }
+
+    /// init(seed) -> params
+    pub fn init(&self, rt: &mut Runtime, seed: i32)
+        -> Result<Vec<xla::Literal>> {
+        let path = self.artifact_path("init")?;
+        let seed = scalar_i32(seed);
+        rt.call(&path, &[&seed])
+    }
+}
+
+/// Training-step outputs beyond the new optimizer state.
+#[derive(Clone, Debug, Default)]
+pub struct StepStats {
+    pub loss: f32,
+    pub ce: f32,
+    pub l1: f32,
+    /// per-layer mean nnz per token
+    pub nnz: Vec<f32>,
+    /// per-(layer, neuron) activation counts this step, flattened [L*F]
+    pub active: Vec<f32>,
+    pub grad_norm: f32,
+}
+
+/// Full optimizer state held as literals on the host side.
+pub struct TrainState {
+    pub params: Vec<xla::Literal>,
+    pub ms: Vec<xla::Literal>,
+    pub vs: Vec<xla::Literal>,
+    pub step: usize,
+}
+
+impl TrainState {
+    /// Fresh state: init params + zeroed moments.
+    pub fn init(bundle: &ModelBundle, rt: &mut Runtime, seed: i32)
+        -> Result<TrainState> {
+        let params = bundle.init(rt, seed)?;
+        let mut ms = Vec::with_capacity(params.len());
+        let mut vs = Vec::with_capacity(params.len());
+        for spec in &bundle.manifest.params {
+            let zeros = vec![0f32; spec.shape.iter().product::<usize>()];
+            ms.push(lit_f32(&zeros, &spec.shape)?);
+            vs.push(lit_f32(&zeros, &spec.shape)?);
+        }
+        Ok(TrainState { params, ms, vs, step: 0 })
+    }
+
+    /// Rebuild a state from checkpointed parameters (zeroed moments) —
+    /// used by `repro analyze` / `repro eval` on saved runs.
+    pub fn from_params(bundle: &ModelBundle, params: &[Vec<f32>])
+        -> Result<TrainState> {
+        anyhow::ensure!(params.len() == bundle.manifest.params.len());
+        let mut lits = Vec::with_capacity(params.len());
+        let mut ms = Vec::with_capacity(params.len());
+        let mut vs = Vec::with_capacity(params.len());
+        for (p, spec) in params.iter().zip(&bundle.manifest.params) {
+            lits.push(lit_f32(p, &spec.shape)?);
+            let zeros = vec![0f32; p.len()];
+            ms.push(lit_f32(&zeros, &spec.shape)?);
+            vs.push(lit_f32(&zeros, &spec.shape)?);
+        }
+        Ok(TrainState { params: lits, ms, vs, step: 0 })
+    }
+
+    /// One optimizer step through the `train_step` artifact.
+    pub fn step(
+        &mut self, bundle: &ModelBundle, rt: &mut Runtime, tokens: &[i32],
+        lr: f32, l1_coeff: f32,
+    ) -> Result<StepStats> {
+        let cfg = &bundle.manifest.config;
+        let tok = lit_i32(tokens, &[cfg.train_batch, cfg.seq_len + 1])?;
+        let lr_l = scalar_f32(lr);
+        let l1_l = scalar_f32(l1_coeff);
+        let step_l = scalar_f32(self.step as f32);
+        let mut args: Vec<&xla::Literal> = Vec::new();
+        args.extend(self.params.iter());
+        args.extend(self.ms.iter());
+        args.extend(self.vs.iter());
+        args.push(&tok);
+        args.push(&lr_l);
+        args.push(&l1_l);
+        args.push(&step_l);
+        let path = bundle.artifact_path("train_step")?;
+        let mut out = rt.call(&path, &args)?;
+        let n = bundle.n_params();
+        anyhow::ensure!(out.len() == 3 * n + 6, "unexpected output arity");
+        let tail = out.split_off(3 * n);
+        let vs = out.split_off(2 * n);
+        let ms = out.split_off(n);
+        self.params = out;
+        self.ms = ms;
+        self.vs = vs;
+        self.step += 1;
+        Ok(StepStats {
+            loss: to_f32_scalar(&tail[0])?,
+            ce: to_f32_scalar(&tail[1])?,
+            l1: to_f32_scalar(&tail[2])?,
+            nnz: to_f32_vec(&tail[3])?,
+            active: to_f32_vec(&tail[4])?,
+            grad_norm: to_f32_scalar(&tail[5])?,
+        })
+    }
+
+    /// `scan_k` fused optimizer steps through `train_step8` (one PJRT
+    /// round-trip; §Perf L2 optimization).  Returns per-substep stats with
+    /// `active` counts summed over the window attached to the last one.
+    pub fn step_k(
+        &mut self, bundle: &ModelBundle, rt: &mut Runtime, tokens: &[i32],
+        lrs: &[f32], l1_coeff: f32,
+    ) -> Result<Vec<StepStats>> {
+        let cfg = &bundle.manifest.config;
+        let k = bundle.manifest.scan_k;
+        anyhow::ensure!(lrs.len() == k, "need {k} learning rates");
+        let tok = lit_i32(tokens, &[k, cfg.train_batch, cfg.seq_len + 1])?;
+        let lr_l = lit_f32(lrs, &[k])?;
+        let l1_l = scalar_f32(l1_coeff);
+        let step_l = scalar_f32(self.step as f32);
+        let mut args: Vec<&xla::Literal> = Vec::new();
+        args.extend(self.params.iter());
+        args.extend(self.ms.iter());
+        args.extend(self.vs.iter());
+        args.push(&tok);
+        args.push(&lr_l);
+        args.push(&l1_l);
+        args.push(&step_l);
+        let path = bundle.artifact_path("train_step8")?;
+        let mut out = rt.call(&path, &args)?;
+        let n = bundle.n_params();
+        anyhow::ensure!(out.len() == 3 * n + 5, "unexpected output arity");
+        let tail = out.split_off(3 * n);
+        let vs = out.split_off(2 * n);
+        let ms = out.split_off(n);
+        self.params = out;
+        self.ms = ms;
+        self.vs = vs;
+        self.step += k;
+        // tail: loss[k], ce[k], nnz[k,L], active[L,F] (summed), gnorm[k]
+        let loss = to_f32_vec(&tail[0])?;
+        let ce = to_f32_vec(&tail[1])?;
+        let nnz = to_f32_vec(&tail[2])?;
+        let active = to_f32_vec(&tail[3])?;
+        let gnorm = to_f32_vec(&tail[4])?;
+        let layers = cfg.n_layers;
+        let mut stats = Vec::with_capacity(k);
+        for i in 0..k {
+            stats.push(StepStats {
+                loss: loss[i],
+                ce: ce[i],
+                l1: 0.0,
+                nnz: nnz[i * layers..(i + 1) * layers].to_vec(),
+                active: if i + 1 == k { active.clone() } else { vec![] },
+                grad_norm: gnorm[i],
+            });
+        }
+        Ok(stats)
+    }
+
+    /// Dead-neuron targeted reinitialization (`reinit` artifact, eq. 6).
+    pub fn reinit(
+        &mut self, bundle: &ModelBundle, rt: &mut Runtime, active: &[f32],
+        seed: i32, lambda: f32,
+    ) -> Result<()> {
+        let cfg = &bundle.manifest.config;
+        let act = lit_f32(active, &[cfg.n_layers, cfg.d_ff])?;
+        let seed_l = scalar_i32(seed);
+        let lam_l = scalar_f32(lambda);
+        let mut args: Vec<&xla::Literal> = Vec::new();
+        args.extend(self.params.iter());
+        args.push(&act);
+        args.push(&seed_l);
+        args.push(&lam_l);
+        let path = bundle.artifact_path("reinit")?;
+        let out = rt.call(&path, &args)?;
+        anyhow::ensure!(out.len() == bundle.n_params());
+        self.params = out;
+        Ok(())
+    }
+
+    /// Cloze scoring: per-position target log-probs + per-layer nnz.
+    pub fn score(
+        &self, bundle: &ModelBundle, rt: &mut Runtime, tokens: &[i32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let cfg = &bundle.manifest.config;
+        let tok = lit_i32(tokens, &[cfg.score_batch, cfg.seq_len + 1])?;
+        let mut args: Vec<&xla::Literal> = Vec::new();
+        args.extend(self.params.iter());
+        args.push(&tok);
+        let path = bundle.artifact_path("score")?;
+        let out = rt.call(&path, &args)?;
+        Ok((to_f32_vec(&out[0])?, to_f32_vec(&out[1])?))
+    }
+
+    /// Per-layer per-position nnz stats ([L, B, S] flattened).
+    pub fn forward_stats(
+        &self, bundle: &ModelBundle, rt: &mut Runtime, tokens: &[i32],
+    ) -> Result<Vec<f32>> {
+        let cfg = &bundle.manifest.config;
+        let tok = lit_i32(tokens, &[cfg.score_batch, cfg.seq_len])?;
+        let mut args: Vec<&xla::Literal> = Vec::new();
+        args.extend(self.params.iter());
+        args.push(&tok);
+        let path = bundle.artifact_path("forward_stats")?;
+        let out = rt.call(&path, &args)?;
+        to_f32_vec(&out[0])
+    }
+
+    /// Extract all parameters as host vectors (checkpoint export).
+    pub fn params_f32(&self) -> Result<Vec<Vec<f32>>> {
+        self.params.iter().map(to_f32_vec).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = lit_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(to_f32_vec(&l).unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        let s = scalar_f32(7.5);
+        assert_eq!(to_f32_scalar(&s).unwrap(), 7.5);
+    }
+
+    #[test]
+    fn literal_shape_mismatch_rejected() {
+        assert!(lit_f32(&[1.0, 2.0], &[3]).is_err());
+        assert!(lit_i32(&[1], &[2, 2]).is_err());
+    }
+}

@@ -1,0 +1,260 @@
+//! Dense matmul baseline — the cuBLAS / WGMMA stand-in.
+//!
+//! Cache-blocked `i-k-j` kernel with 4x-unrolled AXPY inner loops over
+//! row-major operands, parallelized over output-row blocks.  This is the
+//! baseline every sparse speedup in the benches is measured against, so
+//! it must itself be a respectable CPU matmul (§Perf tracks its GFLOP/s
+//! against the machine's practical roofline).
+
+use crate::sparse::par;
+use crate::tensor::Mat;
+
+/// Panel width over k for L1-friendly blocking.
+const KB: usize = 64;
+
+/// C = A @ B for row-major A (m,k), B (k,n).
+pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.rows);
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut c = Mat::zeros(m, n);
+    par::for_row_blocks_out(m, n, &mut c.data, |lo, hi, out| {
+        matmul_block(&a.data, &b.data, out, lo, hi, k, n);
+    });
+    c
+}
+
+fn matmul_block(
+    a: &[f32], b: &[f32], out: &mut [f32], lo: usize, hi: usize, k: usize,
+    n: usize,
+) {
+    for kb in (0..k).step_by(KB) {
+        let ke = (kb + KB).min(k);
+        for i in lo..hi {
+            let arow = &a[i * k..(i + 1) * k];
+            let crow = &mut out[(i - lo) * n..(i - lo + 1) * n];
+            for kk in kb..ke {
+                let aik = arow[kk];
+                if aik == 0.0 {
+                    continue;
+                }
+                axpy(aik, &b[kk * n..(kk + 1) * n], crow);
+            }
+        }
+    }
+}
+
+/// y += alpha * x, 4x unrolled (the compiler vectorizes this well).
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    let n = y.len();
+    let n4 = n & !3;
+    let (x4, xr) = x.split_at(n4);
+    let (y4, yr) = y.split_at_mut(n4);
+    for (yc, xc) in y4.chunks_exact_mut(4).zip(x4.chunks_exact(4)) {
+        yc[0] += alpha * xc[0];
+        yc[1] += alpha * xc[1];
+        yc[2] += alpha * xc[2];
+        yc[3] += alpha * xc[3];
+    }
+    for (yv, xv) in yr.iter_mut().zip(xr) {
+        *yv += alpha * xv;
+    }
+}
+
+/// dot(x, y), 4 partial accumulators for ILP.
+#[inline]
+pub fn dot(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    let n4 = x.len() & !3;
+    let (mut s0, mut s1, mut s2, mut s3) = (0f32, 0f32, 0f32, 0f32);
+    let (xa, xr) = x.split_at(n4);
+    let (ya, yr) = y.split_at(n4);
+    for (xc, yc) in xa.chunks_exact(4).zip(ya.chunks_exact(4)) {
+        s0 += xc[0] * yc[0];
+        s1 += xc[1] * yc[1];
+        s2 += xc[2] * yc[2];
+        s3 += xc[3] * yc[3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for (xv, yv) in xr.iter().zip(yr) {
+        s += xv * yv;
+    }
+    s
+}
+
+/// C = ReLU(A @ B) — the dense gate projection (what algorithm 1 fuses
+/// the pack into).
+pub fn matmul_relu(a: &Mat, b: &Mat) -> Mat {
+    let mut c = matmul(a, b);
+    for v in c.data.iter_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+    c
+}
+
+/// C = A^T @ B for A (m,k), B (m,n) -> (k,n).  Used by the dense
+/// training-step baseline for weight gradients (x^T dh etc.).
+pub fn matmul_tn(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.rows, b.rows);
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut c = Mat::zeros(k, n);
+    par::for_row_blocks_out(k, n, &mut c.data, |lo, hi, out| {
+        for mm in 0..m {
+            let arow = &a.data[mm * k..(mm + 1) * k];
+            let brow = &b.data[mm * n..(mm + 1) * n];
+            for kk in lo..hi {
+                let av = arow[kk];
+                if av != 0.0 {
+                    axpy(av, brow, &mut out[(kk - lo) * n..(kk - lo + 1) * n]);
+                }
+            }
+        }
+    });
+    c
+}
+
+/// C = A @ B^T for A (m,k), B (n,k) -> (m,n): contiguous row-dot kernel.
+pub fn matmul_nt(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.cols);
+    let (m, n) = (a.rows, b.rows);
+    let mut c = Mat::zeros(m, n);
+    par::for_row_blocks_out(m, n, &mut c.data, |lo, hi, out| {
+        for i in lo..hi {
+            let arow = a.row(i);
+            let crow = &mut out[(i - lo) * n..(i - lo + 1) * n];
+            for j in 0..n {
+                crow[j] = dot(arow, b.row(j));
+            }
+        }
+    });
+    c
+}
+
+/// Naive triple loop for testing only.
+pub fn matmul_naive(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.rows);
+    let mut c = Mat::zeros(a.rows, b.cols);
+    for i in 0..a.rows {
+        for kk in 0..a.cols {
+            let aik = a.at(i, kk);
+            for j in 0..b.cols {
+                *c.at_mut(i, j) += aik * b.at(kk, j);
+            }
+        }
+    }
+    c
+}
+
+/// The dense gated FFN forward (eq. 1) — the inference baseline.
+pub fn gated_ffn(x: &Mat, wg: &Mat, wu: &Mat, wd: &Mat) -> Mat {
+    let hg = matmul_relu(x, wg);
+    let hu = matmul(x, wu);
+    let mut h = hg;
+    for (hv, uv) in h.data.iter_mut().zip(&hu.data) {
+        *hv *= uv;
+    }
+    matmul(&h, wd)
+}
+
+/// Non-gated FFN forward (eq. 5) baseline.
+pub fn nongated_ffn(x: &Mat, wu: &Mat, wd: &Mat) -> Mat {
+    let h = matmul_relu(x, wu);
+    matmul(&h, wd)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Gen};
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn matches_naive() {
+        let mut rng = Pcg32::seeded(1);
+        let a = Mat::randn(13, 31, 1.0, &mut rng);
+        let b = Mat::randn(31, 17, 1.0, &mut rng);
+        let c = matmul(&a, &b);
+        let cn = matmul_naive(&a, &b);
+        assert!(c.rel_err(&cn) < 1e-5, "{}", c.rel_err(&cn));
+    }
+
+    #[test]
+    fn relu_clamps() {
+        let mut rng = Pcg32::seeded(2);
+        let a = Mat::randn(8, 8, 1.0, &mut rng);
+        let b = Mat::randn(8, 8, 1.0, &mut rng);
+        let c = matmul_relu(&a, &b);
+        assert!(c.data.iter().all(|&v| v >= 0.0));
+    }
+
+    #[test]
+    fn dot_and_axpy_agree_with_scalar() {
+        let x: Vec<f32> = (0..37).map(|i| i as f32 * 0.1).collect();
+        let y: Vec<f32> = (0..37).map(|i| (37 - i) as f32 * 0.2).collect();
+        let expect: f32 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+        assert!((dot(&x, &y) - expect).abs() < 1e-3);
+        let mut z = y.clone();
+        axpy(2.0, &x, &mut z);
+        for i in 0..37 {
+            assert!((z[i] - (y[i] + 2.0 * x[i])).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn prop_matmul_matches_naive() {
+        check("dense matmul == naive", 30, 42, |g: &mut Gen| {
+            let m = g.dim(40);
+            let k = g.dim(64);
+            let n = g.dim(48);
+            let mut rng = Pcg32::seeded(g.rng.next_u64());
+            let a = Mat::randn(m, k, 1.0, &mut rng);
+            let b = Mat::randn(k, n, 1.0, &mut rng);
+            let c = matmul(&a, &b);
+            let cn = matmul_naive(&a, &b);
+            let err = c.rel_err(&cn);
+            if err < 1e-4 {
+                Ok(())
+            } else {
+                Err(format!("rel err {err} at ({m},{k},{n})"))
+            }
+        });
+    }
+
+    #[test]
+    fn matmul_tn_and_nt_match_explicit_transpose() {
+        let mut rng = Pcg32::seeded(9);
+        let a = Mat::randn(11, 7, 1.0, &mut rng);
+        let b = Mat::randn(11, 5, 1.0, &mut rng);
+        let tn = matmul_tn(&a, &b);
+        let expect = matmul_naive(&a.transpose(), &b);
+        assert!(tn.rel_err(&expect) < 1e-5);
+        let c = Mat::randn(9, 7, 1.0, &mut rng);
+        let nt = matmul_nt(&a, &c);
+        let expect2 = matmul_naive(&a, &c.transpose());
+        assert!(nt.rel_err(&expect2) < 1e-5);
+    }
+
+    #[test]
+    fn gated_ffn_formula() {
+        let mut rng = Pcg32::seeded(3);
+        let x = Mat::randn(6, 8, 1.0, &mut rng);
+        let wg = Mat::randn(8, 12, 0.3, &mut rng);
+        let wu = Mat::randn(8, 12, 0.3, &mut rng);
+        let wd = Mat::randn(12, 8, 0.3, &mut rng);
+        let y = gated_ffn(&x, &wg, &wu, &wd);
+        // scalar recomputation
+        for i in 0..6 {
+            for j in 0..8 {
+                let mut acc = 0f32;
+                for h in 0..12 {
+                    let g: f32 = (0..8).map(|k| x.at(i, k) * wg.at(k, h)).sum();
+                    let u: f32 = (0..8).map(|k| x.at(i, k) * wu.at(k, h)).sum();
+                    acc += g.max(0.0) * u * wd.at(h, j);
+                }
+                assert!((acc - y.at(i, j)).abs() < 1e-3);
+            }
+        }
+    }
+}

@@ -1,0 +1,157 @@
+//! Classic ELLPACK format — the paper's section 3.1 baseline.
+//!
+//! Rows are padded to the *global* maximum nnz (that is exactly the
+//! weakness the paper attacks: one heavy row inflates every row's
+//! storage, and packing requires a full pass over the dense matrix, so
+//! it cannot be fused into a tiled matmul epilogue).
+
+use crate::sparse::{dense, par};
+use crate::tensor::Mat;
+
+#[derive(Clone, Debug)]
+pub struct EllMatrix {
+    pub m: usize,
+    pub n: usize,
+    /// padded width = max row nnz
+    pub width: usize,
+    pub values: Vec<f32>,  // (m, width)
+    pub indices: Vec<u32>, // (m, width)
+    /// ELLPACK-R per-row counts (Vazquez et al. 2010)
+    pub row_nnz: Vec<u32>,
+}
+
+impl EllMatrix {
+    /// Pack a dense matrix.  NOTE: requires the full dense matrix up
+    /// front — this is the extra pass TwELL eliminates.
+    pub fn from_dense(h: &Mat) -> EllMatrix {
+        let (m, n) = (h.rows, h.cols);
+        let mut counts = vec![0u32; m];
+        for r in 0..m {
+            counts[r] = h.row(r).iter().filter(|&&v| v != 0.0).count() as u32;
+        }
+        let width = counts.iter().copied().max().unwrap_or(0) as usize;
+        let mut values = vec![0f32; m * width];
+        let mut indices = vec![0u32; m * width];
+        for r in 0..m {
+            let mut z = 0usize;
+            for (c, &v) in h.row(r).iter().enumerate() {
+                if v != 0.0 {
+                    values[r * width + z] = v;
+                    indices[r * width + z] = c as u32;
+                    z += 1;
+                }
+            }
+        }
+        EllMatrix { m, n, width, values, indices, row_nnz: counts }
+    }
+
+    pub fn to_dense(&self) -> Mat {
+        let mut out = Mat::zeros(self.m, self.n);
+        for r in 0..self.m {
+            for z in 0..self.row_nnz[r] as usize {
+                let j = r * self.width + z;
+                out.data[r * self.n + self.indices[j] as usize] =
+                    self.values[j];
+            }
+        }
+        out
+    }
+
+    pub fn bytes(&self) -> u64 {
+        (self.values.len() * 4 + self.indices.len() * 4 + self.m * 4) as u64
+    }
+
+    /// y = self @ W — the classic ELL SpMM (section 3.1): one parallel
+    /// accumulation per row, gathering W rows by stored indices.
+    pub fn matmul(&self, w: &Mat) -> Mat {
+        assert_eq!(w.rows, self.n);
+        let k = w.cols;
+        let mut y = Mat::zeros(self.m, k);
+        par::for_row_blocks_out(self.m, k, &mut y.data, |lo, hi, out| {
+            for r in lo..hi {
+                let yrow = &mut out[(r - lo) * k..(r - lo + 1) * k];
+                for z in 0..self.row_nnz[r] as usize {
+                    let j = r * self.width + z;
+                    dense::axpy(
+                        self.values[j],
+                        w.row(self.indices[j] as usize),
+                        yrow,
+                    );
+                }
+            }
+        });
+        y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Gen};
+    use crate::util::rng::Pcg32;
+
+    fn sparse_mat(m: usize, n: usize, density: f32, seed: u64) -> Mat {
+        let mut rng = Pcg32::seeded(seed);
+        let mut h = Mat::zeros(m, n);
+        for v in h.data.iter_mut() {
+            if rng.f32() < density {
+                *v = rng.f32() + 0.01;
+            }
+        }
+        h
+    }
+
+    #[test]
+    fn roundtrip() {
+        let h = sparse_mat(16, 40, 0.2, 1);
+        let e = EllMatrix::from_dense(&h);
+        assert_eq!(e.to_dense(), h);
+    }
+
+    #[test]
+    fn matmul_matches_dense() {
+        let h = sparse_mat(16, 40, 0.2, 2);
+        let mut rng = Pcg32::seeded(3);
+        let w = Mat::randn(40, 12, 0.5, &mut rng);
+        let e = EllMatrix::from_dense(&h);
+        let y = e.matmul(&w);
+        let yd = dense::matmul(&h, &w);
+        assert!(y.rel_err(&yd) < 1e-4);
+    }
+
+    #[test]
+    fn width_is_global_max() {
+        // one heavy row pads everything — the ELL pathology the paper
+        // fixes with the hybrid format
+        let mut h = sparse_mat(16, 64, 0.05, 4);
+        for c in 0..60 {
+            h.data[5 * 64 + c] = 1.0;
+        }
+        let e = EllMatrix::from_dense(&h);
+        assert!(e.width >= 60);
+        assert!(e.bytes() > 16 * 60 * 4);
+    }
+
+    #[test]
+    fn prop_ell_matmul_matches_dense() {
+        check("ell matmul == dense", 20, 13, |g: &mut Gen| {
+            let m = g.dim(30);
+            let n = g.dim(64);
+            let k = g.dim(20);
+            let density = g.f32_in(0.0, 1.0);
+            let h = sparse_mat(m, n, density, g.rng.next_u64());
+            let mut rng = Pcg32::seeded(g.rng.next_u64());
+            let w = Mat::randn(n, k, 0.5, &mut rng);
+            let e = EllMatrix::from_dense(&h);
+            if e.to_dense() != h {
+                return Err("roundtrip failed".into());
+            }
+            let err = e.matmul(&w).rel_err(&dense::matmul(&h, &w));
+            if err < 1e-3 {
+                Ok(())
+            } else {
+                Err(format!("rel err {err}"))
+            }
+        });
+    }
+}

@@ -1,0 +1,157 @@
+//! Fused up + down projection from TwELL gate activations
+//! (paper section 3.3, algorithm 2, eq. 3).
+//!
+//! For each input row m the kernel walks the packed tiles, and for every
+//! stored non-zero n it computes the *implicit* h_u element
+//! `u = x[m,:] . W_u[:,n]` in-register, scales the W_d row by
+//! `h_v * u`, and accumulates into y[m,:].  Dense h_u / h are never
+//! materialized.  W_u is consumed in transposed layout (N x K) so the
+//! gathered column is a contiguous row — the same trick as the CUDA
+//! kernel (appendix A.1: "the up projection weight matrix is stored in
+//! transposed format" for coalescing).
+//!
+//! One CPU thread block of rows plays the role of the paper's grid of
+//! single-warp CTAs; the per-row independence that lets the GPU hide
+//! uneven-sparsity latency is what makes the static row split safe here.
+
+use crate::sparse::twell::TwellMatrix;
+use crate::sparse::{dense, par};
+use crate::tensor::Mat;
+
+/// y = ((h_g in TwELL) ⊙ (x @ W_u)) @ W_d, fused (algorithm 2).
+///
+/// * `wu_t` — W_u transposed, (N, K) row-major.
+/// * `wd`   — W_d, (N, K) row-major.
+pub fn fused_up_down(
+    x: &Mat, hg: &TwellMatrix, wu_t: &Mat, wd: &Mat,
+) -> Mat {
+    let (m, k) = (x.rows, x.cols);
+    assert_eq!(hg.m, m);
+    assert_eq!(wu_t.rows, hg.n);
+    assert_eq!(wu_t.cols, k);
+    assert_eq!(wd.rows, hg.n);
+    assert_eq!(wd.cols, k);
+    let slots = hg.slots();
+    let pc = hg.packed_cols();
+    let n_tiles = hg.n_tiles();
+    let mut y = Mat::zeros(m, k);
+    par::for_row_blocks_out(m, k, &mut y.data, |lo, hi, out| {
+        for r in lo..hi {
+            let xrow = &x.data[r * k..(r + 1) * k];
+            let yrow = &mut out[(r - lo) * k..(r - lo + 1) * k];
+            for t in 0..n_tiles {
+                let z = hg.nnz[r * n_tiles + t] as usize;
+                let base = r * pc + t * slots;
+                for c in 0..z {
+                    let n = hg.indices[base + c] as usize;
+                    let v = hg.values[base + c];
+                    // implicit h_u element (eq. 3 middle factor)
+                    let u = dense::dot(xrow, wu_t.row(n));
+                    dense::axpy(v * u, wd.row(n), yrow);
+                }
+            }
+        }
+    });
+    y
+}
+
+/// Non-gated variant (appendix A.1, listing 3): y = (h_u in TwELL) @ W_d.
+pub fn down_from_twell(hu: &TwellMatrix, wd: &Mat) -> Mat {
+    let m = hu.m;
+    let k = wd.cols;
+    assert_eq!(wd.rows, hu.n);
+    let slots = hu.slots();
+    let pc = hu.packed_cols();
+    let n_tiles = hu.n_tiles();
+    let mut y = Mat::zeros(m, k);
+    par::for_row_blocks_out(m, k, &mut y.data, |lo, hi, out| {
+        for r in lo..hi {
+            let yrow = &mut out[(r - lo) * k..(r - lo + 1) * k];
+            for t in 0..n_tiles {
+                let z = hu.nnz[r * n_tiles + t] as usize;
+                let base = r * pc + t * slots;
+                for c in 0..z {
+                    let n = hu.indices[base + c] as usize;
+                    dense::axpy(hu.values[base + c], wd.row(n), yrow);
+                }
+            }
+        }
+    });
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::twell::gate_matmul_twell;
+    use crate::util::prop::{check, Gen};
+    use crate::util::rng::Pcg32;
+
+    fn setup(m: usize, k: usize, n: usize, bias: f32, seed: u64)
+        -> (Mat, Mat, Mat, Mat, Mat) {
+        let mut rng = Pcg32::seeded(seed);
+        let mut x = Mat::randn(m, k, 1.0, &mut rng);
+        for v in x.data.iter_mut() {
+            *v = v.abs() + 0.05; // positive inputs; see twell.rs tests
+        }
+        let mut wg = Mat::randn(k, n, 0.3, &mut rng);
+        for v in wg.data.iter_mut() {
+            *v -= bias / k as f32;
+        }
+        let wu = Mat::randn(k, n, 0.3, &mut rng);
+        let wd = Mat::randn(n, k, 0.3, &mut rng);
+        let wu_t = wu.transpose();
+        (x, wg, wu, wu_t, wd)
+    }
+
+    #[test]
+    fn fused_matches_dense_ffn_without_overflow() {
+        let (x, wg, wu, wu_t, wd) = setup(24, 16, 64, 0.0, 1);
+        let hg = gate_matmul_twell(&x, &wg, 32, 1);
+        assert!(!hg.overflow);
+        let y = fused_up_down(&x, &hg, &wu_t, &wd);
+        let y_dense = dense::gated_ffn(&x, &wg, &wu, &wd);
+        assert!(y.rel_err(&y_dense) < 1e-4, "{}", y.rel_err(&y_dense));
+    }
+
+    #[test]
+    fn down_matches_dense_nongated() {
+        let (x, wu2, _, _, wd) = setup(16, 16, 64, 0.0, 2);
+        let hu = gate_matmul_twell(&x, &wu2, 32, 1);
+        let y = down_from_twell(&hu, &wd);
+        let y_dense = dense::nongated_ffn(&x, &wu2, &wd);
+        assert!(y.rel_err(&y_dense) < 1e-4);
+    }
+
+    #[test]
+    fn zero_gate_rows_produce_zero_output() {
+        let (x, mut wg, _, wu_t, wd) = setup(8, 8, 32, 0.0, 3);
+        for v in wg.data.iter_mut() {
+            *v = -v.abs() - 0.1; // gate always negative => empty TwELL
+        }
+        let hg = gate_matmul_twell(&x, &wg, 32, 4);
+        assert_eq!(hg.total_nnz(), 0);
+        let y = fused_up_down(&x, &hg, &wu_t, &wd);
+        assert!(y.data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn prop_fused_equals_dense_over_shapes_and_sparsity() {
+        check("fused twell ffn == dense ffn", 20, 11, |g: &mut Gen| {
+            let m = 4 * g.usize_in(1, 8);
+            let k = g.usize_in(4, 24);
+            let n = 32 * g.usize_in(1, 3);
+            let bias = g.f32_in(0.0, 8.0);
+            let (x, wg, wu, wu_t, wd) = setup(m, k, n, bias, g.rng.next_u64());
+            let hg = gate_matmul_twell(&x, &wg, 32, 1);
+            let y = fused_up_down(&x, &hg, &wu_t, &wd);
+            let y_dense = dense::gated_ffn(&x, &wg, &wu, &wd);
+            let err = y.rel_err(&y_dense);
+            if err < 1e-3 {
+                Ok(())
+            } else {
+                Err(format!("rel err {err} at ({m},{k},{n},{bias})"))
+            }
+        });
+    }
+}

@@ -1,0 +1,620 @@
+//! Hybrid ELL + dense training format (paper sections 3.4-3.5,
+//! algorithm 3, listings 4-7).
+//!
+//! Rows whose non-zero count fits in an aggressively compact fixed width
+//! `ell_width` live in an ELL component; heavier rows are routed to a
+//! statically pre-allocated dense backup tail (appendix B.2.1 sizing:
+//! width 128, tail = M/8 rows at the paper's scale).  Overflow beyond the
+//! tail capacity sets a flag that the coordinator reacts to by enlarging
+//! the structures and retrying the step — never a hard failure.
+
+use crate::sparse::twell::TwellMatrix;
+use crate::sparse::{dense, par};
+use crate::tensor::Mat;
+
+#[derive(Clone, Debug)]
+pub struct HybridMatrix {
+    pub m: usize,
+    pub n: usize,
+    pub ell_width: usize,
+    /// ELL values, (m, ell_width); rows routed dense leave theirs zeroed
+    pub ell_val: Vec<f32>,
+    /// ELL column indices, (m, ell_width)
+    pub ell_col: Vec<u16>,
+    /// true per-row non-zero count (may exceed ell_width)
+    pub row_nnz: Vec<u32>,
+    /// row routed to the dense tail?
+    pub is_dense: Vec<bool>,
+    /// dense backup rows, (capacity, n)
+    pub dense_tail: Vec<f32>,
+    /// row -> tail slot (or -1)
+    pub dense_map: Vec<i32>,
+    pub tail_capacity: usize,
+    pub tail_rows: usize,
+    /// set when a dense row could not be stored (flag-and-retry contract)
+    pub overflow: bool,
+}
+
+impl HybridMatrix {
+    fn empty(m: usize, n: usize, ell_width: usize, cap: usize) -> Self {
+        HybridMatrix {
+            m,
+            n,
+            ell_width,
+            ell_val: vec![0.0; m * ell_width],
+            ell_col: vec![0; m * ell_width],
+            row_nnz: vec![0; m],
+            is_dense: vec![false; m],
+            dense_tail: vec![0.0; cap * n],
+            dense_map: vec![-1; m],
+            tail_capacity: cap,
+            tail_rows: 0,
+            overflow: false,
+        }
+    }
+
+    /// Listing 4: convert TwELL storage into the hybrid format with a
+    /// per-row prefix scan over tile counts; also accumulates the L0/L1
+    /// statistics the training loss needs.
+    pub fn from_twell(
+        tw: &TwellMatrix, ell_width: usize, max_dense_rows: usize,
+    ) -> (Self, f64, f64) {
+        let mut h = HybridMatrix::empty(tw.m, tw.n, ell_width, max_dense_rows);
+        let n_tiles = tw.n_tiles();
+        let slots = tw.slots();
+        let pc = tw.packed_cols();
+        let mut l0 = 0f64;
+        let mut l1 = 0f64;
+        for r in 0..tw.m {
+            // prefix scan of tile counts = destination offsets
+            let total: u32 = (0..n_tiles)
+                .map(|t| tw.nnz[r * n_tiles + t] as u32)
+                .sum();
+            h.row_nnz[r] = total;
+            l0 += total as f64;
+            if total as usize <= ell_width {
+                let mut dst = 0usize;
+                for t in 0..n_tiles {
+                    let z = tw.nnz[r * n_tiles + t] as usize;
+                    let base = r * pc + t * slots;
+                    for c in 0..z {
+                        h.ell_val[r * ell_width + dst] = tw.values[base + c];
+                        h.ell_col[r * ell_width + dst] = tw.indices[base + c];
+                        l1 += tw.values[base + c].abs() as f64;
+                        dst += 1;
+                    }
+                }
+            } else {
+                h.is_dense[r] = true;
+                if h.tail_rows < max_dense_rows {
+                    let slot = h.tail_rows;
+                    h.dense_map[r] = slot as i32;
+                    h.tail_rows += 1;
+                    let tail =
+                        &mut h.dense_tail[slot * tw.n..(slot + 1) * tw.n];
+                    for t in 0..n_tiles {
+                        let z = tw.nnz[r * n_tiles + t] as usize;
+                        let base = r * pc + t * slots;
+                        for c in 0..z {
+                            tail[tw.indices[base + c] as usize] =
+                                tw.values[base + c];
+                            l1 += tw.values[base + c].abs() as f64;
+                        }
+                    }
+                } else {
+                    h.overflow = true; // drop + flag (appendix B.2.1)
+                }
+            }
+        }
+        (h, l0, l1)
+    }
+
+    /// Test/bench helper: partition a dense matrix directly.
+    pub fn from_dense(
+        src: &Mat, ell_width: usize, max_dense_rows: usize,
+    ) -> Self {
+        let mut h = HybridMatrix::empty(src.rows, src.cols, ell_width,
+                                        max_dense_rows);
+        for r in 0..src.rows {
+            let row = src.row(r);
+            let nnz = row.iter().filter(|&&v| v != 0.0).count();
+            h.row_nnz[r] = nnz as u32;
+            if nnz <= ell_width {
+                let mut dst = 0;
+                for (c, &v) in row.iter().enumerate() {
+                    if v != 0.0 {
+                        h.ell_val[r * ell_width + dst] = v;
+                        h.ell_col[r * ell_width + dst] = c as u16;
+                        dst += 1;
+                    }
+                }
+            } else {
+                h.is_dense[r] = true;
+                if h.tail_rows < max_dense_rows {
+                    let slot = h.tail_rows;
+                    h.dense_map[r] = slot as i32;
+                    h.tail_rows += 1;
+                    h.dense_tail[slot * src.cols..(slot + 1) * src.cols]
+                        .copy_from_slice(row);
+                } else {
+                    h.overflow = true;
+                }
+            }
+        }
+        h
+    }
+
+    pub fn to_dense(&self) -> Mat {
+        let mut out = Mat::zeros(self.m, self.n);
+        for r in 0..self.m {
+            if self.is_dense[r] {
+                let d = self.dense_map[r];
+                if d >= 0 {
+                    out.row_mut(r).copy_from_slice(
+                        &self.dense_tail
+                            [d as usize * self.n..(d as usize + 1) * self.n],
+                    );
+                }
+            } else {
+                for z in 0..self.row_nnz[r] as usize {
+                    let j = r * self.ell_width + z;
+                    out.data[r * self.n + self.ell_col[j] as usize] =
+                        self.ell_val[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// Storage footprint (figure 1c / table 1 memory accounting).
+    pub fn bytes(&self) -> u64 {
+        (self.ell_val.len() * 4
+            + self.ell_col.len() * 2
+            + self.m * 5
+            + self.tail_capacity * self.n * 4) as u64
+    }
+
+    /// Algorithm 3 / listing 6: C = hybrid(A) @ W, W is (n, k) dense.
+    pub fn matmul(&self, w: &Mat) -> Mat {
+        assert_eq!(w.rows, self.n);
+        let k = w.cols;
+        let mut y = Mat::zeros(self.m, k);
+        par::for_row_blocks_out(self.m, k, &mut y.data, |lo, hi, out| {
+            for r in lo..hi {
+                let yrow = &mut out[(r - lo) * k..(r - lo + 1) * k];
+                if self.is_dense[r] {
+                    // dense-tail row: "tensor core" path (tiled dense dot)
+                    let d = self.dense_map[r];
+                    if d >= 0 {
+                        let arow = &self.dense_tail
+                            [d as usize * self.n..(d as usize + 1) * self.n];
+                        for (c, &av) in arow.iter().enumerate() {
+                            if av != 0.0 {
+                                dense::axpy(av, w.row(c), yrow);
+                            }
+                        }
+                    }
+                } else {
+                    // ELL row: CUDA-core path (gather-axpy per non-zero)
+                    for z in 0..self.row_nnz[r] as usize {
+                        let j = r * self.ell_width + z;
+                        dense::axpy(
+                            self.ell_val[j],
+                            w.row(self.ell_col[j] as usize),
+                            yrow,
+                        );
+                    }
+                }
+            }
+        });
+        y
+    }
+
+    /// Listing 5: dense-to-hybrid matmul — compute `A @ B` only at the
+    /// sparsity pattern of `self`, returning a hybrid with the same
+    /// routing.  `b_t` is B transposed, (n, k) row-major, so each needed
+    /// output column is a contiguous dot.  Used for the up projection in
+    /// the forward pass and the masked gradient matmuls in the backward.
+    pub fn dense_to_hybrid_matmul(&self, a: &Mat, b_t: &Mat) -> HybridMatrix {
+        assert_eq!(a.rows, self.m);
+        assert_eq!(b_t.cols, a.cols);
+        assert_eq!(b_t.rows, self.n);
+        let k = a.cols;
+        let mut out = HybridMatrix {
+            ell_val: vec![0.0; self.m * self.ell_width],
+            dense_tail: vec![0.0; self.tail_capacity * self.n],
+            ..self.shallow_clone_structure()
+        };
+        let val_ptr = SendPtr(out.ell_val.as_mut_ptr());
+        let tail_ptr = SendPtr(out.dense_tail.as_mut_ptr());
+        par::for_row_blocks(self.m, |lo, hi| {
+            for r in lo..hi {
+                let arow = a.row(r);
+                if self.is_dense[r] {
+                    let d = self.dense_map[r];
+                    if d < 0 {
+                        continue;
+                    }
+                    let src = &self.dense_tail
+                        [d as usize * self.n..(d as usize + 1) * self.n];
+                    let dst = unsafe {
+                        std::slice::from_raw_parts_mut(
+                            tail_ptr.get().add(d as usize * self.n),
+                            self.n,
+                        )
+                    };
+                    // dense row masked by the pattern (listing 5's tensor
+                    // core branch with a binary mask)
+                    for (c, (&pv, dv)) in
+                        src.iter().zip(dst.iter_mut()).enumerate()
+                    {
+                        if pv != 0.0 {
+                            *dv = dense::dot(arow, b_t.row(c));
+                        }
+                    }
+                } else {
+                    let z = (self.row_nnz[r] as usize).min(self.ell_width);
+                    let dst = unsafe {
+                        std::slice::from_raw_parts_mut(
+                            val_ptr.get().add(r * self.ell_width),
+                            self.ell_width,
+                        )
+                    };
+                    for zz in 0..z {
+                        let col =
+                            self.ell_col[r * self.ell_width + zz] as usize;
+                        dst[zz] = dense::dot(arow, b_t.row(col));
+                    }
+                }
+            }
+        });
+        let _ = k;
+        out
+    }
+
+    /// Same-pattern elementwise product (used for ∇h_u = ∇h ⊙ h_g etc.,
+    /// eq. 4).  `self` provides the structure; values are a ⊙ b.
+    pub fn mul_same_pattern(&self, other: &HybridMatrix) -> HybridMatrix {
+        assert_eq!(self.m, other.m);
+        assert_eq!(self.n, other.n);
+        let mut out = self.clone();
+        for (o, b) in out.ell_val.iter_mut().zip(&other.ell_val) {
+            *o *= b;
+        }
+        for (o, b) in out.dense_tail.iter_mut().zip(&other.dense_tail) {
+            *o *= b;
+        }
+        out
+    }
+
+    /// L1-gradient injection (section 3.5): add `coeff * sign(h)` at every
+    /// stored position of the pattern, where `h` supplies the signs.
+    pub fn inject_l1_grad(&mut self, h: &HybridMatrix, coeff: f32) {
+        for (g, &v) in self.ell_val.iter_mut().zip(&h.ell_val) {
+            if v != 0.0 {
+                *g += coeff * v.signum();
+            }
+        }
+        for (g, &v) in self.dense_tail.iter_mut().zip(&h.dense_tail) {
+            if v != 0.0 {
+                *g += coeff * v.signum();
+            }
+        }
+    }
+
+    /// Listing 7: transpose within the hybrid format.  Two-pass CPU
+    /// rendering of the atomic-slot-reservation kernel: count per output
+    /// row, then route rows whose transposed count exceeds the width to
+    /// the new dense tail.
+    pub fn transpose(
+        &self, ell_width: usize, max_dense_rows: usize,
+    ) -> HybridMatrix {
+        let mut counts = vec![0u32; self.n];
+        let mut visit = |col: usize| counts[col] += 1;
+        self.for_each_nonzero(|_r, c, _v| visit(c));
+        let mut out = HybridMatrix::empty(self.n, self.m, ell_width,
+                                          max_dense_rows);
+        for (c, &cnt) in counts.iter().enumerate() {
+            out.row_nnz[c] = cnt;
+            if cnt as usize > ell_width {
+                out.is_dense[c] = true;
+                if out.tail_rows < max_dense_rows {
+                    out.dense_map[c] = out.tail_rows as i32;
+                    out.tail_rows += 1;
+                } else {
+                    out.overflow = true;
+                }
+            }
+        }
+        let mut fill = vec![0u32; self.n];
+        self.for_each_nonzero(|r, c, v| {
+            if out.is_dense[c] {
+                let d = out.dense_map[c];
+                if d >= 0 {
+                    out.dense_tail[d as usize * self.m + r] = v;
+                }
+            } else {
+                let z = fill[c] as usize;
+                out.ell_val[c * ell_width + z] = v;
+                out.ell_col[c * ell_width + z] = r as u16;
+                fill[c] += 1;
+            }
+        });
+        out
+    }
+
+    /// Sum of |value| over all stored entries (eq. 2's L1 statistic).
+    pub fn l1_sum(&self) -> f64 {
+        let mut s = 0f64;
+        self.for_each_nonzero(|_r, _c, v| s += v.abs() as f64);
+        s
+    }
+
+    /// Visit every stored non-zero as (row, col, value).
+    pub fn for_each_nonzero<F: FnMut(usize, usize, f32)>(&self, mut f: F) {
+        for r in 0..self.m {
+            if self.is_dense[r] {
+                let d = self.dense_map[r];
+                if d >= 0 {
+                    let row = &self.dense_tail
+                        [d as usize * self.n..(d as usize + 1) * self.n];
+                    for (c, &v) in row.iter().enumerate() {
+                        if v != 0.0 {
+                            f(r, c, v);
+                        }
+                    }
+                }
+            } else {
+                for z in 0..(self.row_nnz[r] as usize).min(self.ell_width) {
+                    let j = r * self.ell_width + z;
+                    f(r, self.ell_col[j] as usize, self.ell_val[j]);
+                }
+            }
+        }
+    }
+
+    fn shallow_clone_structure(&self) -> HybridMatrix {
+        HybridMatrix {
+            m: self.m,
+            n: self.n,
+            ell_width: self.ell_width,
+            ell_val: vec![],
+            ell_col: self.ell_col.clone(),
+            row_nnz: self.row_nnz.clone(),
+            is_dense: self.is_dense.clone(),
+            dense_tail: vec![],
+            dense_map: self.dense_map.clone(),
+            tail_capacity: self.tail_capacity,
+            tail_rows: self.tail_rows,
+            overflow: self.overflow,
+        }
+    }
+}
+
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+impl<T> SendPtr<T> {
+    /// Method (not field) access so edition-2021 closures capture the
+    /// Sync wrapper rather than the raw pointer field.
+    fn get(&self) -> *mut T {
+        self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::twell::gate_matmul_twell;
+    use crate::util::prop::{check, Gen};
+    use crate::util::rng::Pcg32;
+
+    fn sparse_mat(m: usize, n: usize, density: f32, seed: u64) -> Mat {
+        let mut rng = Pcg32::seeded(seed);
+        let mut h = Mat::zeros(m, n);
+        for v in h.data.iter_mut() {
+            if rng.f32() < density {
+                *v = rng.f32() + 0.01;
+            }
+        }
+        h
+    }
+
+    #[test]
+    fn from_dense_roundtrip_with_tail() {
+        let mut h = sparse_mat(16, 64, 0.1, 1);
+        for c in 0..50 {
+            h.data[4 * 64 + c] = 1.0; // heavy row -> tail
+        }
+        let hy = HybridMatrix::from_dense(&h, 8, 4);
+        assert!(hy.is_dense[4]);
+        assert!(!hy.overflow);
+        assert_eq!(hy.to_dense(), h);
+    }
+
+    #[test]
+    fn from_twell_matches_from_dense() {
+        let mut rng = Pcg32::seeded(2);
+        let mut x = Mat::randn(16, 8, 1.0, &mut rng);
+        for v in x.data.iter_mut() {
+            *v -= 0.3;
+        }
+        let wg = Mat::randn(8, 64, 0.3, &mut rng);
+        let tw = gate_matmul_twell(&x, &wg, 32, 1);
+        let (hy, l0, l1) = HybridMatrix::from_twell(&tw, 16, 16);
+        let hg = dense::matmul_relu(&x, &wg);
+        let hy_ref = HybridMatrix::from_dense(&hg, 16, 16);
+        assert_eq!(hy.row_nnz, hy_ref.row_nnz);
+        assert_eq!(hy.is_dense, hy_ref.is_dense);
+        assert!(hy.to_dense().max_abs_diff(&hg) < 1e-4);
+        assert_eq!(l0 as u64, hg.nnz_positive() as u64);
+        let l1_ref: f64 = hg.data.iter().map(|&v| v.abs() as f64).sum();
+        assert!((l1 - l1_ref).abs() / l1_ref.max(1e-9) < 1e-4);
+    }
+
+    #[test]
+    fn matmul_matches_dense() {
+        let mut h = sparse_mat(24, 48, 0.15, 3);
+        for c in 0..40 {
+            h.data[7 * 48 + c] = 0.5; // tail row
+        }
+        let mut rng = Pcg32::seeded(4);
+        let w = Mat::randn(48, 16, 0.5, &mut rng);
+        let hy = HybridMatrix::from_dense(&h, 8, 24);
+        assert!(!hy.overflow);
+        let y = hy.matmul(&w);
+        assert!(y.rel_err(&dense::matmul(&h, &w)) < 1e-4);
+    }
+
+    #[test]
+    fn dense_to_hybrid_matmul_computes_pattern_only() {
+        // pattern = hybrid of hg; compute A @ B at that pattern
+        let hg = sparse_mat(16, 32, 0.2, 5);
+        let pattern = HybridMatrix::from_dense(&hg, 8, 16);
+        let mut rng = Pcg32::seeded(6);
+        let a = Mat::randn(16, 12, 0.5, &mut rng);
+        let b = Mat::randn(12, 32, 0.5, &mut rng);
+        let b_t = b.transpose();
+        let out = pattern.dense_to_hybrid_matmul(&a, &b_t);
+        let full = dense::matmul(&a, &b);
+        let out_dense = out.to_dense();
+        for r in 0..16 {
+            for c in 0..32 {
+                let expect = if hg.at(r, c) != 0.0 { full.at(r, c) } else { 0.0 };
+                assert!(
+                    (out_dense.at(r, c) - expect).abs() < 1e-4,
+                    "({r},{c})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_matches_dense_transpose() {
+        let mut h = sparse_mat(20, 40, 0.12, 7);
+        for c in 0..35 {
+            h.data[3 * 40 + c] = 0.25; // tail row in the source
+        }
+        let hy = HybridMatrix::from_dense(&h, 8, 4);
+        let ht = hy.transpose(8, 40);
+        assert_eq!(ht.to_dense(), h.transpose());
+    }
+
+    #[test]
+    fn transpose_routes_heavy_columns_to_tail() {
+        // a column present in every row transposes to a heavy row
+        let mut h = sparse_mat(32, 16, 0.05, 8);
+        for r in 0..32 {
+            h.data[r * 16 + 5] = 1.0;
+        }
+        let hy = HybridMatrix::from_dense(&h, 8, 8);
+        let ht = hy.transpose(8, 8);
+        assert!(ht.is_dense[5]);
+        assert_eq!(ht.to_dense(), h.transpose());
+    }
+
+    #[test]
+    fn overflow_flag_on_tail_exhaustion() {
+        let mut h = Mat::zeros(8, 32);
+        for r in 0..8 {
+            for c in 0..20 {
+                h.data[r * 32 + c] = 1.0;
+            }
+        }
+        let hy = HybridMatrix::from_dense(&h, 4, 2);
+        assert!(hy.overflow);
+        assert_eq!(hy.tail_rows, 2);
+    }
+
+    #[test]
+    fn l1_injection_touches_pattern_only() {
+        let h = sparse_mat(8, 16, 0.3, 9);
+        let hh = HybridMatrix::from_dense(&h, 8, 2);
+        let mut grad = hh.clone();
+        for v in grad.ell_val.iter_mut() {
+            *v = 0.0;
+        }
+        for v in grad.dense_tail.iter_mut() {
+            *v = 0.0;
+        }
+        grad.inject_l1_grad(&hh, 0.5);
+        let gd = grad.to_dense();
+        for r in 0..8 {
+            for c in 0..16 {
+                let expect = if h.at(r, c) > 0.0 { 0.5 } else { 0.0 };
+                assert_eq!(gd.at(r, c), expect);
+            }
+        }
+    }
+
+    #[test]
+    fn mul_same_pattern_is_elementwise() {
+        let h = sparse_mat(8, 16, 0.4, 10);
+        let a = HybridMatrix::from_dense(&h, 16, 2);
+        let prod = a.mul_same_pattern(&a);
+        let pd = prod.to_dense();
+        for r in 0..8 {
+            for c in 0..16 {
+                assert!((pd.at(r, c) - h.at(r, c) * h.at(r, c)).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn prop_hybrid_preserves_every_nonzero() {
+        check("hybrid partition lossless", 25, 17, |g: &mut Gen| {
+            let m = g.dim(32);
+            let n = g.dim(64);
+            let density = g.f32_in(0.0, 1.0);
+            let width = *g.choose(&[4usize, 8, 16]);
+            let h = sparse_mat(m, n, density, g.rng.next_u64());
+            // tail capacity = m: can never overflow
+            let hy = HybridMatrix::from_dense(&h, width, m);
+            if hy.overflow {
+                return Err("unexpected overflow".into());
+            }
+            if hy.to_dense() != h {
+                return Err(format!("lossy at ({m},{n},{density})"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_transpose_involution() {
+        check("hybrid transpose involution", 20, 19, |g: &mut Gen| {
+            let m = g.dim(24);
+            let n = g.dim(24);
+            let density = g.f32_in(0.0, 0.8);
+            let h = sparse_mat(m, n, density, g.rng.next_u64());
+            let hy = HybridMatrix::from_dense(&h, 8, m);
+            let back = hy.transpose(8, n).transpose(8, m);
+            if back.to_dense() == h {
+                Ok(())
+            } else {
+                Err(format!("involution failed ({m},{n})"))
+            }
+        });
+    }
+
+    #[test]
+    fn prop_matmul_matches_dense_across_routing() {
+        check("hybrid matmul == dense", 20, 23, |g: &mut Gen| {
+            let m = g.dim(24);
+            let n = g.dim(48);
+            let k = g.dim(16);
+            let density = g.f32_in(0.0, 1.0);
+            let width = *g.choose(&[2usize, 6, 12]);
+            let h = sparse_mat(m, n, density, g.rng.next_u64());
+            let mut rng = Pcg32::seeded(g.rng.next_u64());
+            let w = Mat::randn(n, k, 0.5, &mut rng);
+            let hy = HybridMatrix::from_dense(&h, width, m);
+            let err = hy.matmul(&w).rel_err(&dense::matmul(&h, &w));
+            if err < 1e-3 {
+                Ok(())
+            } else {
+                Err(format!("rel err {err}"))
+            }
+        });
+    }
+}

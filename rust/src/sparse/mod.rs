@@ -1,0 +1,22 @@
+//! The paper's sparse kernels, re-realized as multithreaded CPU kernels
+//! (DESIGN.md section 1 "Hardware adaptation").
+//!
+//! * [`dense`]  — tiled dense matmul baseline (the cuBLAS stand-in).
+//! * [`ell`]    — classic ELLPACK format + SpMM (paper section 3.1).
+//! * [`twell`]  — Tile-wise ELLPACK: the pack happens in the matmul
+//!                epilogue, exactly like algorithm 1.
+//! * [`fused`]  — fused up+down projection from TwELL (algorithm 2).
+//! * [`hybrid`] — the ELL+dense training format with dense↔hybrid
+//!                matmuls, transpose and L1 injection (algorithm 3,
+//!                listings 4-7).
+//! * [`ffn`]    — whole feed-forward blocks (inference pipelines and the
+//!                training step with the paper's eq. 4 backward).
+//! * [`par`]    — scoped-thread row parallelism (rayon is not vendored).
+
+pub mod dense;
+pub mod ell;
+pub mod ffn;
+pub mod fused;
+pub mod hybrid;
+pub mod par;
+pub mod twell;

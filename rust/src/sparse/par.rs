@@ -1,0 +1,119 @@
+//! Row-range parallelism on scoped std threads (rayon is not vendored in
+//! this offline environment).  All sparse kernels parallelize over
+//! disjoint output-row blocks — the CPU rendering of "one CTA per row
+//! (block)" — so a static block split suffices.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads (cached; overridable via REPRO_THREADS).
+pub fn num_threads() -> usize {
+    static N: AtomicUsize = AtomicUsize::new(0);
+    let cached = N.load(Ordering::Relaxed);
+    if cached != 0 {
+        return cached;
+    }
+    let n = std::env::var("REPRO_THREADS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        })
+        .max(1);
+    N.store(n, Ordering::Relaxed);
+    n
+}
+
+/// Run `f(lo, hi)` over a static partition of `0..m` across threads.
+/// `f` must only touch output rows in its range (disjointness is the
+/// caller's contract — identical to CUDA grid semantics).
+pub fn for_row_blocks<F>(m: usize, f: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    let t = num_threads().min(m.max(1));
+    if t <= 1 || m < 32 {
+        f(0, m);
+        return;
+    }
+    let chunk = m.div_ceil(t);
+    std::thread::scope(|s| {
+        for i in 0..t {
+            let lo = i * chunk;
+            let hi = ((i + 1) * chunk).min(m);
+            if lo >= hi {
+                break;
+            }
+            let f = &f;
+            s.spawn(move || f(lo, hi));
+        }
+    });
+}
+
+/// Like `for_row_blocks` but hands each block a disjoint mutable slice of
+/// `out` (rows of width `row_w`).
+pub fn for_row_blocks_out<F>(m: usize, row_w: usize, out: &mut [f32], f: F)
+where
+    F: Fn(usize, usize, &mut [f32]) + Sync,
+{
+    assert_eq!(out.len(), m * row_w);
+    let t = num_threads().min(m.max(1));
+    if t <= 1 || m < 32 {
+        f(0, m, out);
+        return;
+    }
+    let chunk = m.div_ceil(t);
+    std::thread::scope(|s| {
+        let mut rest = out;
+        for i in 0..t {
+            let lo = i * chunk;
+            let hi = ((i + 1) * chunk).min(m);
+            if lo >= hi {
+                break;
+            }
+            let (mine, tail) = rest.split_at_mut((hi - lo) * row_w);
+            rest = tail;
+            let f = &f;
+            s.spawn(move || f(lo, hi, mine));
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn covers_all_rows_exactly_once() {
+        let hits = AtomicU64::new(0);
+        for_row_blocks(1000, |lo, hi| {
+            for _ in lo..hi {
+                hits.fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 1000);
+    }
+
+    #[test]
+    fn out_variant_writes_disjoint_slices() {
+        let mut out = vec![0f32; 100 * 4];
+        for_row_blocks_out(100, 4, &mut out, |lo, _hi, block| {
+            for (i, row) in block.chunks_mut(4).enumerate() {
+                row.fill((lo + i) as f32);
+            }
+        });
+        for r in 0..100 {
+            assert_eq!(out[r * 4], r as f32);
+        }
+    }
+
+    #[test]
+    fn small_inputs_run_serial() {
+        let mut out = vec![0f32; 8];
+        for_row_blocks_out(8, 1, &mut out, |lo, hi, block| {
+            assert_eq!((lo, hi), (0, 8));
+            block.fill(1.0);
+        });
+        assert!(out.iter().all(|&x| x == 1.0));
+    }
+}

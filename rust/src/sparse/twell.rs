@@ -1,0 +1,327 @@
+//! TwELL — Tile-wise ELLPACK (paper section 3.2, algorithm 1).
+//!
+//! The format: columns are grouped in tiles of width `tile_n`; within each
+//! tile, the non-zero values and their global column indices are packed at
+//! the start of a `tile_n / comp`-slot region, and the per-tile non-zero
+//! count is stored separately (so no padding sentinel is ever read).
+//!
+//! The defining property vs classic ELL is *materialization in the matmul
+//! epilogue*: the pack needs only the output tile that the matmul just
+//! produced (no cross-CTA view of the row), so `gate_matmul_twell`
+//! performs `ReLU(x @ Wg)` and emits TwELL directly, tile by tile —
+//! exactly the fusion of algorithm 1, with the CPU cache-block playing
+//! the role of the CTA tile.
+
+use crate::sparse::{dense, par};
+use crate::tensor::Mat;
+
+#[derive(Clone, Debug)]
+pub struct TwellMatrix {
+    pub m: usize,
+    pub n: usize,
+    pub tile_n: usize,
+    pub comp: usize,
+    /// packed non-zero values, (m, n / comp)
+    pub values: Vec<f32>,
+    /// packed global column indices, (m, n / comp)
+    pub indices: Vec<u16>,
+    /// per-tile non-zero counts, (m, n_tiles)
+    pub nnz: Vec<u16>,
+    /// true iff some tile had more non-zeros than slots (drop-and-flag,
+    /// appendix B.2.1)
+    pub overflow: bool,
+}
+
+impl TwellMatrix {
+    pub fn n_tiles(&self) -> usize {
+        self.n / self.tile_n
+    }
+
+    pub fn slots(&self) -> usize {
+        self.tile_n / self.comp
+    }
+
+    pub fn packed_cols(&self) -> usize {
+        self.n / self.comp
+    }
+
+    /// Total non-zeros stored.
+    pub fn total_nnz(&self) -> u64 {
+        self.nnz.iter().map(|&z| z as u64).sum()
+    }
+
+    /// Average non-zeros per row (the paper's headline statistic).
+    pub fn avg_nnz_per_row(&self) -> f64 {
+        self.total_nnz() as f64 / self.m as f64
+    }
+
+    /// Storage footprint in bytes (figure 1 accounting: packed 32-bit
+    /// value+index words plus 16-bit counts).
+    pub fn bytes(&self) -> u64 {
+        (self.values.len() * 4 + self.indices.len() * 2 + self.nnz.len() * 2)
+            as u64
+    }
+
+    /// Scatter back to dense (tests / format conversions).
+    pub fn to_dense(&self) -> Mat {
+        let mut out = Mat::zeros(self.m, self.n);
+        let slots = self.slots();
+        let pc = self.packed_cols();
+        for r in 0..self.m {
+            for t in 0..self.n_tiles() {
+                let z = self.nnz[r * self.n_tiles() + t] as usize;
+                for c in 0..z {
+                    let j = r * pc + t * slots + c;
+                    out.data[r * self.n + self.indices[j] as usize] =
+                        self.values[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// Pack an existing dense matrix (used by tests and the ELL
+    /// comparison bench; the hot path uses `gate_matmul_twell`).
+    pub fn from_dense(h: &Mat, tile_n: usize, comp: usize) -> TwellMatrix {
+        assert_eq!(h.cols % tile_n, 0);
+        assert_eq!(tile_n % comp, 0);
+        let (m, n) = (h.rows, h.cols);
+        let n_tiles = n / tile_n;
+        let slots = tile_n / comp;
+        let pc = n / comp;
+        let mut tw = TwellMatrix {
+            m,
+            n,
+            tile_n,
+            comp,
+            values: vec![0.0; m * pc],
+            indices: vec![0; m * pc],
+            nnz: vec![0; m * n_tiles],
+            overflow: false,
+        };
+        for r in 0..m {
+            for t in 0..n_tiles {
+                let mut z = 0usize;
+                for c in 0..tile_n {
+                    let v = h.data[r * n + t * tile_n + c];
+                    if v > 0.0 {
+                        if z < slots {
+                            let j = r * pc + t * slots + z;
+                            tw.values[j] = v;
+                            tw.indices[j] = (t * tile_n + c) as u16;
+                        } else {
+                            tw.overflow = true;
+                        }
+                        z += 1;
+                    }
+                }
+                tw.nnz[r * n_tiles + t] = z.min(slots) as u16;
+            }
+        }
+        tw
+    }
+}
+
+/// Algorithm 1: `h_g = ReLU(x @ Wg)` materialized directly in TwELL.
+///
+/// The matmul runs tile-by-tile over the output; each finished
+/// (row-block, tile_n) tile is packed in the epilogue before moving on —
+/// no second pass over a dense h_g ever happens (the whole point of the
+/// format, section 3.2).
+pub fn gate_matmul_twell(
+    x: &Mat, wg: &Mat, tile_n: usize, comp: usize,
+) -> TwellMatrix {
+    let (m, k, n) = (x.rows, x.cols, wg.cols);
+    assert_eq!(x.cols, wg.rows);
+    assert_eq!(n % tile_n, 0);
+    assert!(n <= u16::MAX as usize + 1, "u16 column indices");
+    let n_tiles = n / tile_n;
+    let slots = tile_n / comp;
+    let pc = n / comp;
+    let mut values = vec![0f32; m * pc];
+    let mut indices = vec![0u16; m * pc];
+    let mut nnz = vec![0u16; m * n_tiles];
+    let overflow = std::sync::atomic::AtomicBool::new(false);
+
+    // parallel over row blocks; each block owns its slice of all three
+    // output arrays (disjoint rows)
+    let values_ptr = SendPtr(values.as_mut_ptr());
+    let indices_ptr = SendPtr(indices.as_mut_ptr());
+    let nnz_ptr = SendPtr(nnz.as_mut_ptr());
+    par::for_row_blocks(m, |lo, hi| {
+        let values = unsafe {
+            std::slice::from_raw_parts_mut(values_ptr.get().add(lo * pc),
+                                           (hi - lo) * pc)
+        };
+        let indices = unsafe {
+            std::slice::from_raw_parts_mut(indices_ptr.get().add(lo * pc),
+                                           (hi - lo) * pc)
+        };
+        let nnz = unsafe {
+            std::slice::from_raw_parts_mut(nnz_ptr.get().add(lo * n_tiles),
+                                           (hi - lo) * n_tiles)
+        };
+        // tile buffer reused across tiles (the "shared memory" tile)
+        let mut tile = vec![0f32; tile_n];
+        for r in lo..hi {
+            let xrow = &x.data[r * k..(r + 1) * k];
+            for t in 0..n_tiles {
+                let n0 = t * tile_n;
+                // --- matmul for this tile (k-major AXPY over the tile) ---
+                tile.fill(0.0);
+                for (kk, &xv) in xrow.iter().enumerate() {
+                    if xv == 0.0 {
+                        continue;
+                    }
+                    dense::axpy(
+                        xv,
+                        &wg.data[kk * n + n0..kk * n + n0 + tile_n],
+                        &mut tile,
+                    );
+                }
+                // --- epilogue: ReLU + TwELL pack (alg. 1 lines 6-18) ----
+                let mut z = 0usize;
+                for (c, &s) in tile.iter().enumerate() {
+                    if s > 0.0 {
+                        if z < slots {
+                            let j = (r - lo) * pc + t * slots + z;
+                            values[j] = s;
+                            indices[j] = (n0 + c) as u16;
+                        } else {
+                            overflow.store(
+                                true,
+                                std::sync::atomic::Ordering::Relaxed,
+                            );
+                        }
+                        z += 1;
+                    }
+                }
+                nnz[(r - lo) * n_tiles + t] = z.min(slots) as u16;
+            }
+        }
+    });
+    TwellMatrix {
+        m,
+        n,
+        tile_n,
+        comp,
+        values,
+        indices,
+        nnz,
+        overflow: overflow.load(std::sync::atomic::Ordering::Relaxed),
+    }
+}
+
+/// Raw pointer wrapper for disjoint-row writes from scoped threads.
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+impl<T> SendPtr<T> {
+    /// Method (not field) access so edition-2021 closures capture the
+    /// Sync wrapper rather than the raw pointer field.
+    fn get(&self) -> *mut T {
+        self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Gen};
+    use crate::util::rng::Pcg32;
+
+    /// Positive inputs + negatively shifted gate weights give a
+    /// controllable expected sparsity: E[x.wg_col] = -bias * E[x].
+    fn sparse_gate(m: usize, k: usize, n: usize, bias: f32, seed: u64)
+        -> (Mat, Mat) {
+        let mut rng = Pcg32::seeded(seed);
+        let mut x = Mat::randn(m, k, 1.0, &mut rng);
+        for v in x.data.iter_mut() {
+            *v = v.abs() + 0.05;
+        }
+        let mut wg = Mat::randn(k, n, 0.3, &mut rng);
+        for v in wg.data.iter_mut() {
+            *v -= bias / k as f32;
+        }
+        (x, wg)
+    }
+
+    #[test]
+    fn fused_pack_equals_pack_of_dense_matmul() {
+        let (x, wg) = sparse_gate(24, 16, 64, 0.0, 1);
+        let tw = gate_matmul_twell(&x, &wg, 32, 2);
+        let hg = dense::matmul_relu(&x, &wg);
+        let tw_ref = TwellMatrix::from_dense(&hg, 32, 2);
+        assert_eq!(tw.indices, tw_ref.indices);
+        assert_eq!(tw.nnz, tw_ref.nnz);
+        for (a, b) in tw.values.iter().zip(&tw_ref.values) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn roundtrip_without_overflow() {
+        let (x, wg) = sparse_gate(16, 8, 64, 0.0, 2);
+        let tw = gate_matmul_twell(&x, &wg, 32, 1); // comp=1: lossless
+        assert!(!tw.overflow);
+        let hg = dense::matmul_relu(&x, &wg);
+        assert!(tw.to_dense().max_abs_diff(&hg) < 1e-4);
+    }
+
+    #[test]
+    fn overflow_flag_set_when_tiles_spill() {
+        let mut rng = Pcg32::seeded(3);
+        let mut x = Mat::randn(8, 8, 1.0, &mut rng);
+        for v in x.data.iter_mut() {
+            *v = v.abs() + 0.5; // all-positive input
+        }
+        let mut wg = Mat::randn(8, 32, 0.3, &mut rng);
+        for v in wg.data.iter_mut() {
+            *v = v.abs() + 0.1; // all-positive weights => dense gate
+        }
+        let tw = gate_matmul_twell(&x, &wg, 32, 8);
+        assert!(tw.overflow);
+        assert!(tw.nnz.iter().all(|&z| z as usize <= 4));
+    }
+
+    #[test]
+    fn nnz_statistics() {
+        let (x, wg) = sparse_gate(64, 16, 128, 12.0, 4);
+        let tw = gate_matmul_twell(&x, &wg, 32, 1);
+        let hg = dense::matmul_relu(&x, &wg);
+        assert_eq!(tw.total_nnz(), hg.nnz_positive() as u64);
+        assert!(tw.avg_nnz_per_row() < 128.0 * 0.5);
+    }
+
+    #[test]
+    fn storage_smaller_than_dense_at_comp() {
+        let (x, wg) = sparse_gate(64, 16, 128, 8.0, 5);
+        let tw = gate_matmul_twell(&x, &wg, 32, 4);
+        assert!(tw.bytes() < (64 * 128 * 4) as u64 / 2);
+    }
+
+    #[test]
+    fn prop_pack_matches_reference_pack() {
+        check("twell fused pack == from_dense", 25, 7, |g: &mut Gen| {
+            let m = 8 * g.usize_in(1, 4);
+            let k = g.usize_in(4, 32);
+            let tiles = g.usize_in(1, 3);
+            let tile_n = *g.choose(&[16usize, 32]);
+            let comp = *g.choose(&[1usize, 2, 4]);
+            let n = tiles * tile_n;
+            let bias = g.f32_in(0.0, 10.0);
+            let (x, wg) = sparse_gate(m, k, n, bias, g.rng.next_u64());
+            let tw = gate_matmul_twell(&x, &wg, tile_n, comp);
+            let tw_ref =
+                TwellMatrix::from_dense(&dense::matmul_relu(&x, &wg), tile_n,
+                                        comp);
+            if tw.indices != tw_ref.indices || tw.nnz != tw_ref.nnz {
+                return Err(format!("index/count mismatch ({m},{k},{n})"));
+            }
+            if tw.overflow != tw_ref.overflow {
+                return Err("overflow flag mismatch".into());
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,116 @@
+//! Row-major f32 matrix used throughout the sparse kernels and the rust
+//! inference engine.  Deliberately minimal: the heavy lifting lives in the
+//! kernels (`sparse/`) which operate on raw slices for performance.
+
+use crate::util::rng::Pcg32;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Mat { rows, cols, data }
+    }
+
+    pub fn randn(rows: usize, cols: usize, std: f32, rng: &mut Pcg32) -> Self {
+        let mut m = Mat::zeros(rows, cols);
+        rng.fill_normal(&mut m.data, std);
+        m
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        &mut self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                t.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        t
+    }
+
+    /// Count of strictly positive entries (the paper's nnz statistic).
+    pub fn nnz_positive(&self) -> usize {
+        self.data.iter().filter(|&&x| x > 0.0).count()
+    }
+
+    pub fn max_abs_diff(&self, other: &Mat) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Relative Frobenius error ||a-b|| / max(||b||, eps).
+    pub fn rel_err(&self, other: &Mat) -> f32 {
+        let mut num = 0f64;
+        let mut den = 0f64;
+        for (a, b) in self.data.iter().zip(&other.data) {
+            num += ((a - b) * (a - b)) as f64;
+            den += (b * b) as f64;
+        }
+        (num.sqrt() / den.sqrt().max(1e-12)) as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indexing_row_major() {
+        let m = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(m.at(0, 2), 3.0);
+        assert_eq!(m.at(1, 0), 4.0);
+        assert_eq!(m.row(1), &[4., 5., 6.]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Pcg32::seeded(1);
+        let m = Mat::randn(5, 7, 1.0, &mut rng);
+        assert_eq!(m.transpose().transpose(), m);
+    }
+
+    #[test]
+    fn nnz_counts_positive_only() {
+        let m = Mat::from_vec(1, 4, vec![1.0, -1.0, 0.0, 0.5]);
+        assert_eq!(m.nnz_positive(), 2);
+    }
+
+    #[test]
+    fn rel_err_zero_for_identical() {
+        let m = Mat::from_vec(1, 3, vec![1.0, 2.0, 3.0]);
+        assert_eq!(m.rel_err(&m), 0.0);
+    }
+}

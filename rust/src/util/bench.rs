@@ -1,0 +1,190 @@
+//! Wall-clock benchmark harness (criterion is not vendored offline).
+//!
+//! Usage mirrors criterion's spirit: warm-up, multiple timed samples,
+//! median + MAD reporting, and paper-style table printing so each bench
+//! binary can regenerate one table/figure of the paper.
+
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    /// median seconds per iteration
+    pub median_s: f64,
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub samples: usize,
+    pub iters_per_sample: usize,
+}
+
+impl BenchResult {
+    pub fn throughput(&self, items: f64) -> f64 {
+        items / self.median_s
+    }
+}
+
+pub struct Bencher {
+    pub warmup: Duration,
+    pub target_sample: Duration,
+    pub samples: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(150),
+            target_sample: Duration::from_millis(60),
+            samples: 11,
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(30),
+            target_sample: Duration::from_millis(15),
+            samples: 5,
+        }
+    }
+
+    /// Benchmark `f`, which performs one logical iteration per call.
+    /// A `std::hint::black_box` around inputs/outputs is the caller's job.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        // warm-up and calibration: how many iters fit in target_sample?
+        let wstart = Instant::now();
+        let mut calib_iters = 0usize;
+        while wstart.elapsed() < self.warmup || calib_iters == 0 {
+            f();
+            calib_iters += 1;
+        }
+        let per_iter = wstart.elapsed().as_secs_f64() / calib_iters as f64;
+        let iters = ((self.target_sample.as_secs_f64() / per_iter).ceil()
+            as usize)
+            .max(1);
+
+        let mut times = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            times.push(t0.elapsed().as_secs_f64() / iters as f64);
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = times[times.len() / 2];
+        let mean = times.iter().sum::<f64>() / times.len() as f64;
+        BenchResult {
+            name: name.to_string(),
+            median_s: median,
+            mean_s: mean,
+            min_s: times[0],
+            samples: self.samples,
+            iters_per_sample: iters,
+        }
+    }
+}
+
+/// Format seconds human-readably.
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Paper-style table printer: fixed-width columns, markdown-ish.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (c, w) in cells.iter().zip(&widths) {
+                s.push_str(&format!(" {:<w$} |", c, w = w));
+            }
+            println!("{s}");
+        };
+        line(&self.headers);
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        println!("{sep}");
+        for row in &self.rows {
+            line(row);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_sleep() {
+        let b = Bencher {
+            warmup: Duration::from_millis(5),
+            target_sample: Duration::from_millis(5),
+            samples: 3,
+        };
+        let r = b.run("sleep", || std::thread::sleep(Duration::from_micros(200)));
+        assert!(r.median_s >= 150e-6, "{}", r.median_s);
+        assert!(r.median_s < 10e-3, "{}", r.median_s);
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(2.0).ends_with(" s"));
+        assert!(fmt_time(2e-3).ends_with(" ms"));
+        assert!(fmt_time(2e-6).ends_with(" µs"));
+        assert!(fmt_time(2e-9).ends_with(" ns"));
+    }
+
+    #[test]
+    fn table_prints() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        t.print(); // just exercising the formatting path
+    }
+
+    #[test]
+    fn throughput() {
+        let r = BenchResult {
+            name: "t".into(),
+            median_s: 0.5,
+            mean_s: 0.5,
+            min_s: 0.5,
+            samples: 1,
+            iters_per_sample: 1,
+        };
+        assert_eq!(r.throughput(100.0), 200.0);
+    }
+}

@@ -1,0 +1,13 @@
+//! Infrastructure substrates built from scratch for the offline testbed:
+//! PRNG (no `rand`), JSON codec (no `serde`), wall-clock bench harness
+//! (no `criterion`), statistics helpers, and a mini property-testing
+//! framework (no `proptest`).
+
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+/// Convenient alias used across the crate.
+pub type Result<T> = anyhow::Result<T>;

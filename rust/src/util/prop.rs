@@ -1,0 +1,115 @@
+//! Mini property-testing framework (proptest is not vendored offline).
+//!
+//! A property is a closure over a `Gen` (seeded PRNG + size hints).  The
+//! runner executes it for many seeds and reports the failing seed on the
+//! first panic-free `Err`, so failures are reproducible by construction.
+
+use super::rng::Pcg32;
+
+pub struct Gen {
+    pub rng: Pcg32,
+    pub case: usize,
+}
+
+impl Gen {
+    /// Dimension that grows with the case index (small cases first, like
+    /// proptest's sizing) in [1, max].
+    pub fn dim(&mut self, max: usize) -> usize {
+        let cap = (self.case / 4 + 2).min(max);
+        1 + self.rng.usize_below(cap)
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.usize_below(hi - lo + 1)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + self.rng.f32() * (hi - lo)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u32() & 1 == 1
+    }
+
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.usize_below(xs.len())]
+    }
+
+    pub fn vec_normal(&mut self, n: usize, std: f32) -> Vec<f32> {
+        let mut v = vec![0.0; n];
+        self.rng.fill_normal(&mut v, std);
+        v
+    }
+
+    /// A sparse non-negative vector with roughly `density` fraction of
+    /// non-zeros (the bread-and-butter input for the sparse kernels).
+    pub fn sparse_vec(&mut self, n: usize, density: f32) -> Vec<f32> {
+        (0..n)
+            .map(|_| {
+                if self.rng.f32() < density {
+                    self.rng.f32() + 0.01
+                } else {
+                    0.0
+                }
+            })
+            .collect()
+    }
+}
+
+/// Run `prop` for `cases` seeds derived from `seed`.  Panics with the
+/// failing case seed embedded in the message.
+pub fn check<F>(name: &str, cases: usize, seed: u64, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let case_seed = seed
+            .wrapping_mul(0x9e37_79b9_7f4a_7c15)
+            .wrapping_add(case as u64);
+        let mut g = Gen { rng: Pcg32::seeded(case_seed), case };
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property {name:?} failed on case {case} (seed {case_seed}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check("trivial", 50, 1, |_g| {
+            n += 1;
+            Ok(())
+        });
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "always-false")]
+    fn failing_property_panics_with_seed() {
+        check("demo", 10, 2, |_g| Err("always-false".into()));
+    }
+
+    #[test]
+    fn sparse_vec_density() {
+        let mut g = Gen { rng: Pcg32::seeded(3), case: 0 };
+        let v = g.sparse_vec(10_000, 0.1);
+        let nnz = v.iter().filter(|&&x| x > 0.0).count();
+        assert!((800..1200).contains(&nnz), "{nnz}");
+        assert!(v.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn dim_bounded() {
+        let mut g = Gen { rng: Pcg32::seeded(4), case: 100 };
+        for _ in 0..100 {
+            let d = g.dim(16);
+            assert!((1..=16).contains(&d));
+        }
+    }
+}

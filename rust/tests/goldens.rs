@@ -1,0 +1,135 @@
+//! Cross-language lockstep: the rust TwELL/hybrid kernels must agree with
+//! the python reference oracle (python/compile/kernels/ref.py) on the
+//! golden vectors dumped by `make artifacts` (aot.py --goldens).
+//!
+//! Skips when artifacts/goldens.json has not been built.
+
+use repro::config::default_paths;
+use repro::sparse::dense;
+use repro::sparse::fused::fused_up_down;
+use repro::sparse::hybrid::HybridMatrix;
+use repro::sparse::twell::gate_matmul_twell;
+use repro::tensor::Mat;
+use repro::util::json::Json;
+
+struct Golden {
+    m: usize,
+    k: usize,
+    n: usize,
+    tile_n: usize,
+    comp: usize,
+    x: Mat,
+    wg_biased: Mat,
+    wu: Mat,
+    wd: Mat,
+    g: Json,
+}
+
+fn load() -> Option<Golden> {
+    let path = default_paths().artifacts.join("goldens.json");
+    if !path.exists() {
+        eprintln!("skipping: {path:?} not built (run `make artifacts`)");
+        return None;
+    }
+    let g = Json::read_file(&path).unwrap();
+    let m = g.get("m").unwrap().as_usize().unwrap();
+    let k = g.get("k").unwrap().as_usize().unwrap();
+    let n = g.get("n").unwrap().as_usize().unwrap();
+    let bias = g.get("gate_bias").unwrap().as_f64().unwrap() as f32;
+    let x = Mat::from_vec(m, k, g.get("x").unwrap().f32_vec().unwrap());
+    let wg = Mat::from_vec(k, n, g.get("wg").unwrap().f32_vec().unwrap());
+    let wu = Mat::from_vec(k, n, g.get("wu").unwrap().f32_vec().unwrap());
+    let wd = Mat::from_vec(n, k, g.get("wd").unwrap().f32_vec().unwrap());
+    // python computed hg = relu(x @ wg - bias); fold the bias into an
+    // augmented gate weight via an extra constant input column
+    let mut x_aug = Mat::zeros(m, k + 1);
+    for r in 0..m {
+        x_aug.row_mut(r)[..k].copy_from_slice(x.row(r));
+        x_aug.row_mut(r)[k] = 1.0;
+    }
+    let mut wg_aug = Mat::zeros(k + 1, n);
+    for kk in 0..k {
+        wg_aug.row_mut(kk).copy_from_slice(wg.row(kk));
+    }
+    for c in 0..n {
+        *wg_aug.at_mut(k, c) = -bias;
+    }
+    Some(Golden {
+        m,
+        k,
+        n,
+        tile_n: g.get("tile_n").unwrap().as_usize().unwrap(),
+        comp: g.get("comp").unwrap().as_usize().unwrap(),
+        x: x_aug,
+        wg_biased: wg_aug,
+        wu,
+        wd,
+        g,
+    })
+}
+
+#[test]
+fn twell_pack_matches_python_reference() {
+    let Some(gd) = load() else { return };
+    let tw = gate_matmul_twell(&gd.x, &gd.wg_biased, gd.tile_n, gd.comp);
+    let h_v = gd.g.get("h_v").unwrap().f32_vec().unwrap();
+    let h_i = gd.g.get("h_i").unwrap().i32_vec().unwrap();
+    let h_nz = gd.g.get("h_nz").unwrap().i32_vec().unwrap();
+    assert_eq!(tw.values.len(), h_v.len());
+    for (i, (a, b)) in tw.values.iter().zip(&h_v).enumerate() {
+        assert!((a - b).abs() < 1e-4, "value[{i}]: {a} vs {b}");
+    }
+    for (i, (a, b)) in tw.indices.iter().zip(&h_i).enumerate() {
+        assert_eq!(*a as i32, *b, "index[{i}]");
+    }
+    for (i, (a, b)) in tw.nnz.iter().zip(&h_nz).enumerate() {
+        assert_eq!(*a as i32, *b, "nnz[{i}]");
+    }
+}
+
+#[test]
+fn fused_ffn_matches_python_reference() {
+    let Some(gd) = load() else { return };
+    let tw = gate_matmul_twell(&gd.x, &gd.wg_biased, gd.tile_n, gd.comp);
+    // the fused kernel consumes the ORIGINAL x (k columns), as python did
+    let mut x = Mat::zeros(gd.m, gd.k);
+    for r in 0..gd.m {
+        x.row_mut(r).copy_from_slice(&gd.x.row(r)[..gd.k]);
+    }
+    let y = fused_up_down(&x, &tw, &gd.wu.transpose(), &gd.wd);
+    let y_ref =
+        Mat::from_vec(gd.m, gd.k, gd.g.get("y_fused").unwrap().f32_vec().unwrap());
+    assert!(y.rel_err(&y_ref) < 1e-3, "rel err {}", y.rel_err(&y_ref));
+}
+
+#[test]
+fn hybrid_partition_and_matmul_match_python_reference() {
+    let Some(gd) = load() else { return };
+    // rebuild hg densely exactly as python did
+    let hg = dense::matmul_relu(&gd.x, &gd.wg_biased);
+    let ell_width = gd.g.get("ell_width").unwrap().as_usize().unwrap();
+    let max_rows = gd.g.get("max_dense_rows").unwrap().as_usize().unwrap();
+    let hyb = HybridMatrix::from_dense(&hg, ell_width, max_rows);
+    let row_nnz = gd.g.get("row_nnz").unwrap().i32_vec().unwrap();
+    let is_dense = gd.g.get("is_dense").unwrap().i32_vec().unwrap();
+    for r in 0..gd.m {
+        assert_eq!(hyb.row_nnz[r] as i32, row_nnz[r], "row {r}");
+        assert_eq!(hyb.is_dense[r] as i32, is_dense[r], "route {r}");
+    }
+    let ell_val = gd.g.get("ell_val").unwrap().f32_vec().unwrap();
+    for r in 0..gd.m {
+        if !hyb.is_dense[r] {
+            for z in 0..hyb.row_nnz[r] as usize {
+                let got = hyb.ell_val[r * ell_width + z];
+                let want = ell_val[r * ell_width + z];
+                assert!((got - want).abs() < 1e-4, "({r},{z})");
+            }
+        }
+    }
+    let w2 = Mat::from_vec(gd.n, gd.k, gd.g.get("w2").unwrap().f32_vec().unwrap());
+    let y = hyb.matmul(&w2);
+    let y_ref = Mat::from_vec(
+        gd.m, gd.k, gd.g.get("y_hybrid").unwrap().f32_vec().unwrap(),
+    );
+    assert!(y.rel_err(&y_ref) < 1e-3, "rel err {}", y.rel_err(&y_ref));
+}

@@ -1,0 +1,190 @@
+//! Integration: AOT artifacts -> PJRT runtime -> training loop.
+//!
+//! These tests require `make artifacts` to have produced the `tiny`
+//! preset; they skip (with a note) when artifacts are absent so
+//! `cargo test` stays usable before the python step.
+
+use repro::config::default_paths;
+use repro::data::corpus::CorpusSpec;
+use repro::data::loader::{Dataset, Loader};
+use repro::runtime::{lit_f32, ModelBundle, Runtime, TrainState};
+
+fn bundle_or_skip() -> Option<(ModelBundle, Runtime)> {
+    let paths = default_paths();
+    if !paths.manifest("tiny").exists() {
+        eprintln!("skipping: artifacts/tiny not built (run `make artifacts`)");
+        return None;
+    }
+    let bundle = ModelBundle::open(&paths.artifacts, "tiny").unwrap();
+    let rt = Runtime::cpu().unwrap();
+    Some((bundle, rt))
+}
+
+#[test]
+fn init_produces_manifest_shapes() {
+    let Some((bundle, mut rt)) = bundle_or_skip() else { return };
+    let params = bundle.init(&mut rt, 0).unwrap();
+    assert_eq!(params.len(), bundle.manifest.params.len());
+    for (lit, spec) in params.iter().zip(&bundle.manifest.params) {
+        let n: usize = spec.shape.iter().product();
+        assert_eq!(lit.element_count(), n, "{}", spec.name);
+    }
+}
+
+#[test]
+fn init_is_deterministic_in_seed() {
+    let Some((bundle, mut rt)) = bundle_or_skip() else { return };
+    let a = bundle.init(&mut rt, 7).unwrap();
+    let b = bundle.init(&mut rt, 7).unwrap();
+    let c = bundle.init(&mut rt, 8).unwrap();
+    let av = a[0].to_vec::<f32>().unwrap();
+    let bv = b[0].to_vec::<f32>().unwrap();
+    let cv = c[0].to_vec::<f32>().unwrap();
+    assert_eq!(av, bv);
+    assert_ne!(av, cv);
+}
+
+#[test]
+fn train_loop_loss_decreases_and_scan_matches() {
+    let Some((bundle, mut rt)) = bundle_or_skip() else { return };
+    let cfg = bundle.manifest.config.clone();
+    let spec = CorpusSpec { n_docs: 120, seed: 3, ..CorpusSpec::default() };
+    let (ds, _bpe) = Dataset::synthetic(&spec, cfg.vocab_size);
+    let mut loader = Loader::new(&ds, cfg.train_batch, cfg.seq_len, 0);
+
+    let mut st = TrainState::init(&bundle, &mut rt, 1).unwrap();
+    let mut first = None;
+    let mut last = 0f32;
+    for _ in 0..30 {
+        let batch = loader.next_batch();
+        let stats = st.step(&bundle, &mut rt, &batch, 3e-3, 0.0).unwrap();
+        assert!(stats.loss.is_finite());
+        assert_eq!(stats.nnz.len(), cfg.n_layers);
+        first.get_or_insert(stats.loss);
+        last = stats.loss;
+    }
+    assert!(
+        last < first.unwrap() * 0.9,
+        "loss did not decrease: {} -> {last}",
+        first.unwrap()
+    );
+
+    // train_step8 must agree with 8 sequential steps (same stream)
+    let mut l1 = Loader::new(&ds, cfg.train_batch, cfg.seq_len, 9);
+    let mut l2 = Loader::new(&ds, cfg.train_batch, cfg.seq_len, 9);
+    let mut a = TrainState::init(&bundle, &mut rt, 2).unwrap();
+    let mut b = TrainState::init(&bundle, &mut rt, 2).unwrap();
+    let k = bundle.manifest.scan_k;
+    let lrs: Vec<f32> = (0..k).map(|i| 1e-3 + i as f32 * 1e-5).collect();
+    let toks = l1.next_batches(k);
+    let stats_k = a.step_k(&bundle, &mut rt, &toks, &lrs, 0.0).unwrap();
+    let mut seq_losses = Vec::new();
+    for lr in &lrs {
+        let batch = l2.next_batch();
+        let s = b.step(&bundle, &mut rt, &batch, *lr, 0.0).unwrap();
+        seq_losses.push(s.loss);
+    }
+    for (ks, ss) in stats_k.iter().zip(&seq_losses) {
+        assert!(
+            (ks.loss - ss).abs() < 1e-3 * ss.abs().max(1.0),
+            "scan {} vs seq {}",
+            ks.loss,
+            ss
+        );
+    }
+}
+
+#[test]
+fn score_and_forward_stats_shapes() {
+    let Some((bundle, mut rt)) = bundle_or_skip() else { return };
+    let cfg = bundle.manifest.config.clone();
+    let st = TrainState::init(&bundle, &mut rt, 3).unwrap();
+    let toks: Vec<i32> = (0..cfg.score_batch * (cfg.seq_len + 1))
+        .map(|i| (i % cfg.vocab_size) as i32)
+        .collect();
+    let (logp, nnz) = st.score(&bundle, &mut rt, &toks).unwrap();
+    assert_eq!(logp.len(), cfg.score_batch * cfg.seq_len);
+    assert_eq!(nnz.len(), cfg.n_layers);
+    assert!(logp.iter().all(|&v| v <= 0.0));
+    // near-uniform logprob at init
+    let mean: f32 = logp.iter().sum::<f32>() / logp.len() as f32;
+    assert!((mean + (cfg.vocab_size as f32).ln()).abs() < 1.0, "{mean}");
+
+    let toks2: Vec<i32> = (0..cfg.score_batch * cfg.seq_len)
+        .map(|i| (i % cfg.vocab_size) as i32)
+        .collect();
+    let stats = st.forward_stats(&bundle, &mut rt, &toks2).unwrap();
+    assert_eq!(stats.len(), cfg.n_layers * cfg.score_batch * cfg.seq_len);
+    assert!(stats.iter().all(|&v| (0.0..=cfg.d_ff as f32).contains(&v)));
+}
+
+#[test]
+fn reinit_touches_only_dead_gate_columns() {
+    let Some((bundle, mut rt)) = bundle_or_skip() else { return };
+    let cfg = bundle.manifest.config.clone();
+    let mut st = TrainState::init(&bundle, &mut rt, 4).unwrap();
+    let before = st.params_f32().unwrap();
+    let mut active = vec![1f32; cfg.n_layers * cfg.d_ff];
+    active[3] = 0.0; // layer 0, neuron 3 dead
+    st.reinit(&bundle, &mut rt, &active, 11, 0.1).unwrap();
+    let after = st.params_f32().unwrap();
+    let names: Vec<&str> = bundle
+        .manifest
+        .params
+        .iter()
+        .map(|p| p.name.as_str())
+        .collect();
+    let wg0 = names.iter().position(|n| *n == "layer0.wg").unwrap();
+    let d = cfg.d_model;
+    let f = cfg.d_ff;
+    let mut changed_cols = std::collections::BTreeSet::new();
+    for r in 0..d {
+        for c in 0..f {
+            if before[wg0][r * f + c] != after[wg0][r * f + c] {
+                changed_cols.insert(c);
+            }
+        }
+    }
+    assert_eq!(changed_cols.into_iter().collect::<Vec<_>>(), vec![3]);
+    for (i, name) in names.iter().enumerate() {
+        if i != wg0 {
+            assert_eq!(before[i], after[i], "{name} must be untouched");
+        }
+    }
+}
+
+#[test]
+fn pallas_twell_ffn_artifact_runs_and_matches_rust_kernels() {
+    // the L1 -> AOT -> rust composition proof: the Pallas TwELL FFN
+    // artifact must agree with the rust sparse kernels on the same data
+    let Some((bundle, mut rt)) = bundle_or_skip() else { return };
+    let cfg = bundle.manifest.config.clone();
+    let path = match bundle.artifact_path("ffn_twell") {
+        Ok(p) => p,
+        Err(_) => return,
+    };
+    use repro::sparse::ffn::{forward_twell, FfnWeights};
+    use repro::tensor::Mat;
+    use repro::util::rng::Pcg32;
+    let mut rng = Pcg32::seeded(5);
+    let m = 32;
+    let (k, n) = (cfg.d_model, cfg.d_ff);
+    let x = Mat::randn(m, k, 1.0, &mut rng);
+    let wg = Mat::randn(k, n, 0.2, &mut rng);
+    let wu = Mat::randn(k, n, 0.2, &mut rng);
+    let wd = Mat::randn(n, k, 0.2, &mut rng);
+    let xl = lit_f32(&x.data, &[m, k]).unwrap();
+    let wgl = lit_f32(&wg.data, &[k, n]).unwrap();
+    let wul = lit_f32(&wu.data, &[k, n]).unwrap();
+    let wdl = lit_f32(&wd.data, &[n, k]).unwrap();
+    let out = rt.call(&path, &[&xl, &wgl, &wul, &wdl]).unwrap();
+    let y_pallas = out[0].to_vec::<f32>().unwrap();
+    // rust kernels on the same data (comp=1, lossless)
+    let w = FfnWeights::new(wg, wu, wd, cfg.twell_tile_n, 1, n, 1.0);
+    let (y_rust, _) = forward_twell(&w, &x);
+    let mut max_err = 0f32;
+    for (a, b) in y_pallas.iter().zip(&y_rust.data) {
+        max_err = max_err.max((a - b).abs());
+    }
+    assert!(max_err < 1e-3, "pallas vs rust max err {max_err}");
+}
