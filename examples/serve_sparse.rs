@@ -1,12 +1,14 @@
-//! Serving demo: load a trained checkpoint, start the dynamic-batching
-//! server with the TwELL FFN backend, fire a wave of concurrent requests
-//! and report latency/throughput (the serving-side view of table 1's
-//! forward-execution column).
+//! Serving demo: load a trained checkpoint, start the continuous-batching
+//! server, fire a wave of concurrent requests and report
+//! latency/throughput for both FFN backends and a sweep of slot counts —
+//! the serving-side view of table 1's forward-execution column, now with
+//! the TwELL pipeline seeing multi-row activations during decode.
 //!
-//! Run: cargo run --release --example serve_sparse -- [--run e2e_s]
+//! Run: cargo run --release --example serve_sparse -- \
+//!        [--run e2e_s] [--slots 8] [--requests 24] [--max-new 12]
 //! (trains a quick tiny model if the run does not exist yet)
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use repro::config::{default_paths, Args, TrainConfig};
 use repro::coordinator::{ckpt::Checkpoint, Trainer};
@@ -14,7 +16,7 @@ use repro::data::bpe::Bpe;
 use repro::data::corpus::CorpusSpec;
 use repro::model::{FfnBackend, Model};
 use repro::runtime::Runtime;
-use repro::serve::{BatchPolicy, ServeMetrics, Server};
+use repro::serve::{ServeMetrics, ServeMode, ServePolicy, Server};
 use repro::util::json::Json;
 
 fn main() -> anyhow::Result<()> {
@@ -22,6 +24,7 @@ fn main() -> anyhow::Result<()> {
     let run = args.get_or("run", "serve_demo");
     let n_requests = args.get_usize("requests", 24)?;
     let max_new = args.get_usize("max-new", 12)?;
+    let slots = args.get_usize("slots", 8)?;
     let paths = default_paths();
     let dir = paths.run_dir(&run);
     if !dir.join("checkpoint.bin").exists() {
@@ -34,44 +37,75 @@ fn main() -> anyhow::Result<()> {
     }
     let ck = Checkpoint::load(&dir.join("checkpoint.bin"))?;
     let bpe = Bpe::from_json(&Json::read_file(&dir.join("tokenizer.json"))?)?;
+    let prompts = [
+        "topic geography : the river",
+        "topic chemistry : the acid reacts",
+        "source : www nih",
+        "topic history : the empire",
+    ];
 
     for (label, backend) in
         [("dense", FfnBackend::Dense), ("twell", FfnBackend::Twell)]
     {
-        let model = Model::from_checkpoint(&ck, backend)?;
-        let server = Server::start(model, BatchPolicy::default());
-        let prompts = [
-            "topic geography : the river",
-            "topic chemistry : the acid reacts",
-            "source : www nih",
-            "topic history : the empire",
-        ];
-        let t0 = Instant::now();
-        let rxs: Vec<_> = (0..n_requests)
-            .map(|i| {
-                server
-                    .submit(bpe.encode(prompts[i % prompts.len()]), max_new)
-                    .1
-            })
-            .collect();
-        let mut metrics = ServeMetrics::default();
-        for rx in rxs {
-            metrics.record(rx.recv()?);
+        // sequential baseline vs the continuous engine at --slots
+        for (mode, eff_slots) in [
+            (ServeMode::Sequential, slots),
+            (ServeMode::Continuous, 1),
+            (ServeMode::Continuous, slots),
+        ] {
+            let model = Model::from_checkpoint(&ck, backend)?;
+            let policy = ServePolicy {
+                slots: eff_slots,
+                max_wait: Duration::from_millis(5),
+                max_context: 256,
+                mode,
+            };
+            let server = Server::start(model, policy);
+            let t0 = Instant::now();
+            let rxs: Vec<_> = (0..n_requests)
+                .map(|i| {
+                    server
+                        .submit(bpe.encode(prompts[i % prompts.len()]),
+                                max_new)
+                        .1
+                })
+                .collect();
+            let mut metrics = ServeMetrics::default();
+            for rx in rxs {
+                metrics.record(rx.recv()?);
+            }
+            let wall = t0.elapsed().as_secs_f64();
+            let stats = server.stats();
+            println!(
+                "{label:>6} {:<22} {n_requests} reqs: p50 {:.1} ms, \
+                 p95 {:.1} ms, {:.0} tok/s ({} backfills)",
+                format!("{mode:?}/{eff_slots} slots"),
+                metrics.p50_ms(),
+                metrics.p95_ms(),
+                metrics.throughput_tok_s(wall),
+                stats.backfilled,
+            );
+            server.shutdown();
         }
-        let wall = t0.elapsed().as_secs_f64();
-        println!(
-            "{label:>6}: {n_requests} reqs, p50 {:.1} ms, p99 {:.1} ms, \
-             {:.0} tok/s",
-            metrics.p50_ms(),
-            metrics.p99_ms(),
-            metrics.throughput_tok_s(wall)
-        );
-        if label == "twell" {
-            let sample = &metrics.completions[0];
-            println!("   sample completion: {:?}",
-                     bpe.decode(&sample.tokens));
-        }
-        server.shutdown();
     }
+
+    // per-token streaming demo on the twell engine
+    let model = Model::from_checkpoint(&ck, FfnBackend::Twell)?;
+    let server = Server::start(model, ServePolicy {
+        slots,
+        max_wait: Duration::from_millis(5),
+        max_context: 256,
+        mode: ServeMode::Continuous,
+    });
+    let (_, tok_rx, done_rx) =
+        server.submit_streaming(bpe.encode(prompts[0]), max_new);
+    print!("streamed:");
+    for t in tok_rx.iter() {
+        print!(" {}", bpe.decode(&[t.token]).trim());
+    }
+    println!();
+    let c = done_rx.recv()?;
+    println!("completion: {:?}", bpe.decode(&c.tokens));
+    server.shutdown();
     Ok(())
 }

@@ -207,10 +207,30 @@ fn cmd_analyze(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let run = args.require("run")?;
-    let n_requests = args.get_usize("requests", 16)?;
+    let n_requests = args.get_usize("requests", 16)?.max(1);
     let max_new = args.get_usize("max-new", 16)?;
-    let (model, bpe) = load_run(run)?;
-    let policy = repro::serve::BatchPolicy::default();
+    // scheduler tunables (continuous-batching engine)
+    let slots = args.get_usize("slots", 8)?;
+    let max_wait_ms = args.get_f64("max-wait-ms", 5.0)?;
+    let max_context = args.get_usize("max-context", 512)?;
+    let mode = match args.get_or("mode", "continuous").as_str() {
+        "seq" | "sequential" => repro::serve::ServeMode::Sequential,
+        "continuous" => repro::serve::ServeMode::Continuous,
+        other => bail!("unknown serve mode {other:?}"),
+    };
+    let backend = match args.get_or("backend", "twell").as_str() {
+        "dense" => FfnBackend::Dense,
+        "twell" => FfnBackend::Twell,
+        other => bail!("unknown backend {other:?}"),
+    };
+    let (mut model, bpe) = load_run(run)?;
+    model.backend = backend;
+    let policy = repro::serve::ServePolicy {
+        slots,
+        max_wait: std::time::Duration::from_secs_f64(max_wait_ms / 1e3),
+        max_context,
+        mode,
+    };
     let server = repro::serve::Server::start(model, policy);
     let mut metrics = repro::serve::ServeMetrics::default();
     let t0 = std::time::Instant::now();
@@ -220,30 +240,50 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "source : www nih",
         "the empire doesn",
     ];
-    let rxs: Vec<_> = (0..n_requests)
+    // stream the first request's tokens to show the per-token channel
+    let (_, stream_rx, first_rx) = server
+        .submit_streaming(bpe.encode(prompts[0]), max_new);
+    let rxs: Vec<_> = (1..n_requests)
         .map(|i| {
             let prompt = bpe.encode(prompts[i % prompts.len()]);
             server.submit(prompt, max_new).1
         })
         .collect();
+    for t in stream_rx.iter() {
+        eprint!("{}", bpe.decode(&[t.token]));
+    }
+    eprintln!();
+    metrics.record(first_rx.recv().context("worker dropped")?);
     for rx in rxs {
         let c = rx.recv().context("worker dropped")?;
         println!(
-            "req {} ({} prefill): {:?} [{:.1} ms]",
+            "req {} ({} prefill): {:?} [queue {:.1} ms, total {:.1} ms]",
             c.id,
             c.prefill_tokens,
             bpe.decode(&c.tokens),
+            c.queue_ms,
             c.total_ms
         );
         metrics.record(c);
     }
     let wall = t0.elapsed().as_secs_f64();
+    let stats = server.stats();
     println!(
-        "served {n_requests} requests: p50 {:.1} ms, p99 {:.1} ms, \
-         {:.0} tok/s",
+        "served {n_requests} requests ({mode:?}, {slots} slots): \
+         p50 {:.1} ms, p95 {:.1} ms, p99 {:.1} ms, {:.0} tok/s",
         metrics.p50_ms(),
+        metrics.p95_ms(),
         metrics.p99_ms(),
         metrics.throughput_tok_s(wall)
+    );
+    println!(
+        "engine: {} steps, {} admissions ({} backfilled), \
+         max active {}, {} fallbacks",
+        stats.steps,
+        stats.admissions,
+        stats.backfilled,
+        stats.max_active,
+        stats.fallbacks
     );
     server.shutdown();
     Ok(())

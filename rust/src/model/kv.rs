@@ -1,13 +1,22 @@
 //! KV-cache incremental decoding for the serving path.
 //!
-//! One cache per sequence; `Model::decode_step` runs a single token
-//! through the network reusing cached keys/values, with the FFN executing
-//! through the configured backend (M=1 rows exercise the same TwELL
-//! pipeline the batched path uses).
+//! Two shapes of decode:
+//!
+//! * `KvCache` + `Model::decode_step` — one cache per sequence, one token
+//!   per call (M=1 rows through the FFN backends).  `greedy_decode` wraps
+//!   it into the shared prefill+argmax loop that `Model::generate` and
+//!   the sequential serving path both use.
+//! * `BatchKvCache` + `Model::decode_step_batch` — a fixed pool of KV
+//!   *slots* in slot-major storage; one call advances every active slot
+//!   at its own position in a single pass, so RMSNorm/QKV/RoPE/attention
+//!   and — crucially — the FFN backends run over a `(B_active, d)`
+//!   activation matrix.  This is what the continuous-batching server
+//!   drives.  Every kernel on the path computes output rows
+//!   independently, so batched decode is bit-exact with the sequential
+//!   path (see the parity tests below).
 
-use crate::model::{FfnBackend, Model};
+use crate::model::Model;
 use crate::sparse::dense;
-use crate::sparse::ffn::{forward_dense, forward_twell};
 use crate::tensor::Mat;
 
 pub struct KvCache {
@@ -27,6 +36,44 @@ impl KvCache {
             len: 0,
             cap,
         }
+    }
+}
+
+/// Pooled KV storage for the continuous-batching engine: `slots`
+/// independent sequences, each with `cap` positions, stored slot-major
+/// (slot `s` owns rows `s*cap .. (s+1)*cap` of every layer matrix).
+/// Retiring a sequence is O(1): reset the slot's length and the rows are
+/// reused by the next admission.
+pub struct BatchKvCache {
+    /// per layer: (slots * cap, d_model) keys / values, post-RoPE
+    pub k: Vec<Mat>,
+    pub v: Vec<Mat>,
+    /// current length of each slot's sequence
+    pub len: Vec<usize>,
+    pub slots: usize,
+    pub cap: usize,
+}
+
+impl BatchKvCache {
+    pub fn new(model: &Model, slots: usize, cap: usize) -> BatchKvCache {
+        assert!(slots > 0 && cap > 0);
+        let d = model.cfg.d_model;
+        BatchKvCache {
+            k: (0..model.cfg.n_layers)
+                .map(|_| Mat::zeros(slots * cap, d))
+                .collect(),
+            v: (0..model.cfg.n_layers)
+                .map(|_| Mat::zeros(slots * cap, d))
+                .collect(),
+            len: vec![0; slots],
+            slots,
+            cap,
+        }
+    }
+
+    /// Free a slot for reuse (retired sequence / new admission).
+    pub fn reset_slot(&mut self, slot: usize) {
+        self.len[slot] = 0;
     }
 }
 
@@ -51,42 +98,14 @@ impl Model {
             super::rope_row(k.row_mut(0), pos, h, dh, self.cfg.rope_theta);
             cache.k[li].row_mut(pos).copy_from_slice(k.row(0));
             cache.v[li].row_mut(pos).copy_from_slice(v.row(0));
-            let scale = 1.0 / (dh as f32).sqrt();
             let mut attn = Mat::zeros(1, d);
-            for head in 0..h {
-                let qh = &q.row(0)[head * dh..(head + 1) * dh];
-                let mut scores = Vec::with_capacity(pos + 1);
-                let mut maxv = f32::NEG_INFINITY;
-                for t in 0..=pos {
-                    let kh =
-                        &cache.k[li].row(t)[head * dh..(head + 1) * dh];
-                    let sc = dense::dot(qh, kh) * scale;
-                    scores.push(sc);
-                    maxv = maxv.max(sc);
-                }
-                let mut z = 0f32;
-                for s in scores.iter_mut() {
-                    *s = (*s - maxv).exp();
-                    z += *s;
-                }
-                let inv = 1.0 / z;
-                let oh = &mut attn.row_mut(0)[head * dh..(head + 1) * dh];
-                for (t, &w) in scores.iter().enumerate() {
-                    let vh =
-                        &cache.v[li].row(t)[head * dh..(head + 1) * dh];
-                    for (o, &vv) in oh.iter_mut().zip(vh) {
-                        *o += w * inv * vv;
-                    }
-                }
-            }
+            attend_one(q.row(0), &cache.k[li], &cache.v[li], 0, pos, h, dh,
+                       attn.row_mut(0));
             let attn_out = dense::matmul(&attn, &layer.wo);
             super::add_inplace(&mut x, &attn_out);
             let normed = super::rmsnorm(&x, &layer.ln_ffn,
                                         self.cfg.rmsnorm_eps);
-            let y = match self.backend {
-                FfnBackend::Dense => forward_dense(&layer.ffn, &normed),
-                FfnBackend::Twell => forward_twell(&layer.ffn, &normed).0,
-            };
+            let y = self.ffn_no_stats(layer, &normed);
             super::add_inplace(&mut x, &y);
         }
         cache.len += 1;
@@ -95,21 +114,135 @@ impl Model {
         logits.data
     }
 
+    /// Advance every active slot by one token in a single batched pass.
+    ///
+    /// `active` holds `(slot, token)` pairs — distinct slots, each fed at
+    /// its *own* position (`cache.len[slot]`).  Returns the next-token
+    /// logits as a `(B_active, vocab)` matrix in the same order.  The
+    /// dense and TwELL FFN backends both see the full `(B_active, d)`
+    /// activation matrix, which is the whole point of continuous
+    /// batching for the sparse pipeline.
+    pub fn decode_step_batch(
+        &self, cache: &mut BatchKvCache, active: &[(usize, u32)],
+    ) -> Mat {
+        let b = active.len();
+        assert!(b > 0, "decode_step_batch with no active slots");
+        for (i, &(slot, _)) in active.iter().enumerate() {
+            assert!(slot < cache.slots, "slot {slot} out of range");
+            assert!(cache.len[slot] < cache.cap, "slot {slot} kv full");
+            for &(other, _) in &active[i + 1..] {
+                assert_ne!(slot, other, "duplicate slot in active set");
+            }
+        }
+        let d = self.cfg.d_model;
+        let h = self.cfg.n_heads;
+        let dh = self.cfg.head_dim();
+        let mut x = Mat::zeros(b, d);
+        for (i, &(_, tok)) in active.iter().enumerate() {
+            x.row_mut(i).copy_from_slice(self.embed.row(tok as usize));
+        }
+        for (li, layer) in self.layers.iter().enumerate() {
+            let normed = super::rmsnorm(&x, &layer.ln_attn,
+                                        self.cfg.rmsnorm_eps);
+            let mut q = dense::matmul(&normed, &layer.wq);
+            let mut k = dense::matmul(&normed, &layer.wk);
+            let v = dense::matmul(&normed, &layer.wv);
+            for (i, &(slot, _)) in active.iter().enumerate() {
+                let pos = cache.len[slot];
+                super::rope_row(q.row_mut(i), pos, h, dh,
+                                self.cfg.rope_theta);
+                super::rope_row(k.row_mut(i), pos, h, dh,
+                                self.cfg.rope_theta);
+                let row = slot * cache.cap + pos;
+                cache.k[li].row_mut(row).copy_from_slice(k.row(i));
+                cache.v[li].row_mut(row).copy_from_slice(v.row(i));
+            }
+            let mut attn = Mat::zeros(b, d);
+            for (i, &(slot, _)) in active.iter().enumerate() {
+                let pos = cache.len[slot];
+                attend_one(q.row(i), &cache.k[li], &cache.v[li],
+                           slot * cache.cap, pos, h, dh, attn.row_mut(i));
+            }
+            let attn_out = dense::matmul(&attn, &layer.wo);
+            super::add_inplace(&mut x, &attn_out);
+            let normed = super::rmsnorm(&x, &layer.ln_ffn,
+                                        self.cfg.rmsnorm_eps);
+            // the batched FFN: (B_active, d) rows through dense or TwELL
+            let y = self.ffn_no_stats(layer, &normed);
+            super::add_inplace(&mut x, &y);
+        }
+        for &(slot, _) in active {
+            cache.len[slot] += 1;
+        }
+        let x = super::rmsnorm(&x, &self.ln_final, self.cfg.rmsnorm_eps);
+        dense::matmul_nt(&x, &self.embed)
+    }
+
     /// Greedy decode: prefill the prompt then emit `max_new` tokens.
     pub fn generate(&self, prompt: &[u32], max_new: usize) -> Vec<u32> {
-        let mut cache = KvCache::new(self, prompt.len() + max_new + 1);
-        let mut logits = Vec::new();
-        for &t in prompt {
-            logits = self.decode_step(&mut cache, t);
-        }
-        let mut out = Vec::with_capacity(max_new);
-        for _ in 0..max_new {
-            let next = argmax(&logits) as u32;
-            out.push(next);
-            logits = self.decode_step(&mut cache, next);
-        }
-        out
+        greedy_decode(self, prompt, max_new, |_, _| {})
     }
+}
+
+/// Causal single-query attention against cached K/V rows
+/// `base .. base+pos` (history) plus `base+pos` (current, already
+/// written): the one attention inner loop both decode shapes share.
+fn attend_one(
+    q: &[f32], kcache: &Mat, vcache: &Mat, base: usize, pos: usize,
+    heads: usize, dh: usize, out: &mut [f32],
+) {
+    let scale = 1.0 / (dh as f32).sqrt();
+    for head in 0..heads {
+        let qh = &q[head * dh..(head + 1) * dh];
+        let mut scores = Vec::with_capacity(pos + 1);
+        let mut maxv = f32::NEG_INFINITY;
+        for t in 0..=pos {
+            let kh = &kcache.row(base + t)[head * dh..(head + 1) * dh];
+            let sc = dense::dot(qh, kh) * scale;
+            scores.push(sc);
+            maxv = maxv.max(sc);
+        }
+        let mut z = 0f32;
+        for s in scores.iter_mut() {
+            *s = (*s - maxv).exp();
+            z += *s;
+        }
+        let inv = 1.0 / z;
+        let oh = &mut out[head * dh..(head + 1) * dh];
+        for (t, &w) in scores.iter().enumerate() {
+            let vh = &vcache.row(base + t)[head * dh..(head + 1) * dh];
+            for (o, &vv) in oh.iter_mut().zip(vh) {
+                *o += w * inv * vv;
+            }
+        }
+    }
+}
+
+/// The shared greedy prefill + decode loop (used by `Model::generate`
+/// and the serving paths): feed the prompt, then argmax `max_new`
+/// tokens, calling `on_token(index, token)` as each one is chosen — the
+/// per-token streaming hook.  The final sampled token is not fed back
+/// (its logits are never needed), which keeps the KV requirement at
+/// `prompt.len() + max_new - 1` positions.
+pub fn greedy_decode(
+    model: &Model, prompt: &[u32], max_new: usize,
+    mut on_token: impl FnMut(usize, u32),
+) -> Vec<u32> {
+    let mut cache = KvCache::new(model, (prompt.len() + max_new).max(1));
+    let mut logits = Vec::new();
+    for &t in prompt {
+        logits = model.decode_step(&mut cache, t);
+    }
+    let mut out = Vec::with_capacity(max_new);
+    for i in 0..max_new {
+        let next = argmax(&logits) as u32;
+        out.push(next);
+        on_token(i, next);
+        if i + 1 < max_new {
+            logits = model.decode_step(&mut cache, next);
+        }
+    }
+    out
 }
 
 pub fn argmax(xs: &[f32]) -> usize {
@@ -126,6 +259,7 @@ pub fn argmax(xs: &[f32]) -> usize {
 mod tests {
     use super::*;
     use crate::model::tests_support::toy_model;
+    use crate::model::FfnBackend;
 
     #[test]
     fn decode_matches_full_forward() {
@@ -167,6 +301,85 @@ mod tests {
         assert_eq!(a, b);
         assert_eq!(a.len(), 5);
         assert!(a.iter().all(|&t| (t as usize) < m.cfg.vocab_size));
+    }
+
+    #[test]
+    fn greedy_decode_streams_every_token_in_order() {
+        let m = toy_model(FfnBackend::Dense);
+        let mut streamed = Vec::new();
+        let out = greedy_decode(&m, &[4, 4, 1], 6, |i, t| {
+            assert_eq!(i, streamed.len());
+            streamed.push(t);
+        });
+        assert_eq!(out, streamed);
+        assert_eq!(out, m.generate(&[4, 4, 1], 6));
+    }
+
+    /// Drive ragged sequences through one BatchKvCache and check every
+    /// step's logits are *bit-exact* with per-sequence `decode_step`.
+    fn batch_parity(backend: FfnBackend) {
+        let m = toy_model(backend);
+        let seqs: [&[u32]; 3] =
+            [&[1, 5, 9, 2, 30], &[7, 7], &[0, 12, 3, 3]];
+        // references: independent single-sequence caches
+        let mut refs: Vec<(KvCache, usize)> =
+            seqs.iter().map(|_| (KvCache::new(&m, 8), 0)).collect();
+        let mut batch = BatchKvCache::new(&m, 3, 8);
+        // step until every sequence is exhausted; shorter ones drop out,
+        // making the active set genuinely ragged
+        for step in 0.. {
+            let active: Vec<(usize, u32)> = seqs
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| step < s.len())
+                .map(|(i, s)| (i, s[step]))
+                .collect();
+            if active.is_empty() {
+                break;
+            }
+            let logits = m.decode_step_batch(&mut batch, &active);
+            assert_eq!(logits.rows, active.len());
+            for (row, &(slot, tok)) in active.iter().enumerate() {
+                let (cache, fed) = &mut refs[slot];
+                let single = m.decode_step(cache, tok);
+                *fed += 1;
+                assert_eq!(single.as_slice(), logits.row(row),
+                           "slot {slot} step {step} not bit-exact");
+            }
+        }
+        for (slot, (_, fed)) in refs.iter().enumerate() {
+            assert_eq!(*fed, seqs[slot].len());
+            assert_eq!(batch.len[slot], seqs[slot].len());
+        }
+    }
+
+    #[test]
+    fn batched_decode_bit_exact_dense() {
+        batch_parity(FfnBackend::Dense);
+    }
+
+    #[test]
+    fn batched_decode_bit_exact_twell() {
+        batch_parity(FfnBackend::Twell);
+    }
+
+    #[test]
+    fn slot_reset_reuses_storage_cleanly() {
+        // decode A in slot 0, retire it, decode B in the same slot: B
+        // must match a fresh single-sequence cache exactly
+        let m = toy_model(FfnBackend::Dense);
+        let mut batch = BatchKvCache::new(&m, 2, 8);
+        for &t in &[9u32, 2, 2, 17] {
+            m.decode_step_batch(&mut batch, &[(0, t)]);
+        }
+        batch.reset_slot(0);
+        assert_eq!(batch.len[0], 0);
+        let mut cache = KvCache::new(&m, 8);
+        for &t in &[5u32, 31, 0] {
+            let lb = m.decode_step_batch(&mut batch, &[(0, t)]);
+            let ls = m.decode_step(&mut cache, t);
+            assert_eq!(ls.as_slice(), lb.row(0));
+        }
     }
 
     #[test]

@@ -7,6 +7,11 @@
 //! causal softmax attention, tied embeddings); the integration test
 //! `forward_parity_with_pjrt` cross-validates against the AOT `forward`
 //! artifact.
+//!
+//! Decoding comes in two shapes (`kv`): the single-sequence
+//! `decode_step`, and `decode_step_batch` over a slot-major
+//! `BatchKvCache`, which the continuous-batching server (`serve`) drives
+//! so the FFN backends see multi-row activations during decode.
 
 pub mod kv;
 
@@ -14,7 +19,8 @@ use anyhow::{bail, Result};
 
 use crate::config::ModelConfig;
 use crate::coordinator::ckpt::Checkpoint;
-use crate::sparse::ffn::{forward_dense, forward_twell, FfnWeights};
+use crate::sparse::ffn::{forward_backend, forward_dense, forward_twell,
+                         FfnWeights};
 use crate::sparse::{dense, par};
 use crate::tensor::Mat;
 
@@ -150,6 +156,13 @@ impl Model {
         // tied embeddings: logits = x @ embed^T (contiguous row dots)
         let logits = dense::matmul_nt(&x, &self.embed);
         (logits, stats)
+    }
+
+    /// FFN through the configured backend without gate statistics — the
+    /// shared dispatch of the decode paths (`kv::decode_step` and
+    /// `kv::decode_step_batch`).
+    pub(crate) fn ffn_no_stats(&self, layer: &Layer, normed: &Mat) -> Mat {
+        forward_backend(&layer.ffn, normed, self.backend == FfnBackend::Twell)
     }
 
     /// Causal multi-head attention with half-split RoPE (mirrors

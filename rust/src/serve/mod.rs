@@ -1,12 +1,27 @@
-//! Serving layer: request router + dynamic batcher over the rust
-//! inference engine (the vllm-router-shaped L3 component).
+//! Serving layer: continuous-batching inference engine over the rust
+//! model (the vllm-shaped L3 component).
 //!
-//! Requests enter a shared queue; the worker drains up to
-//! `max_batch` requests per cycle (waiting at most `max_wait` for the
-//! batch to fill), pads them to a common length, runs prefill through the
-//! batched forward (dense or TwELL backend), then decodes each request
-//! greedily with its KV cache.  Completions return through per-request
-//! channels.
+//! Requests enter a shared queue; the worker thread owns the model plus
+//! a fixed pool of KV *slots* (`BatchKvCache`).  Every engine iteration
+//! it (1) admits queued requests into free slots — no batch barrier, a
+//! request never waits for the current batch to finish — (2) advances
+//! all active slots one token with `Model::decode_step_batch`, which
+//! feeds the FFN backends a `(B_active, d)` activation matrix (so the
+//! TwELL pipeline finally runs batched during decode), and (3) retires
+//! finished sequences immediately, backfilling their slots from the
+//! queue on the next iteration.  Prefill is interleaved token-by-token
+//! with decode (Orca-style iteration-level scheduling), so short and
+//! long requests share the engine without head-of-line blocking.
+//!
+//! Per-token streaming: `submit_streaming` returns a `Receiver<Token>`
+//! that yields each generated token as it is chosen, alongside the
+//! final `Completion`.
+//!
+//! The pre-refactor collect-then-serialize path is kept behind
+//! `ServeMode::Sequential` as the parity baseline; oversized requests
+//! (prompt + max_new beyond the slot capacity) fall back to it
+//! transparently.  Both paths are greedy and share `greedy_decode`, so
+//! served tokens are bit-exact with `Model::generate`.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -16,7 +31,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::model::kv::{argmax, KvCache};
+use crate::model::kv::{argmax, greedy_decode, BatchKvCache};
 use crate::model::Model;
 
 #[derive(Clone, Debug)]
@@ -35,10 +50,20 @@ pub struct Completion {
     pub prefill_tokens: usize,
 }
 
+/// One streamed token, sent the moment the engine samples it.
+#[derive(Clone, Copy, Debug)]
+pub struct Token {
+    pub id: u64,
+    /// 0-based index within the generated tokens
+    pub index: usize,
+    pub token: u32,
+}
+
 struct Pending {
     req: Request,
     enqueued: Instant,
     tx: Sender<Completion>,
+    stream: Option<Sender<Token>>,
 }
 
 #[derive(Default)]
@@ -46,18 +71,54 @@ struct Queue {
     items: VecDeque<Pending>,
 }
 
-/// Dynamic batching policy (the tunables figure 5's serving analogue
-/// sweeps).
-#[derive(Clone, Copy, Debug)]
-pub struct BatchPolicy {
-    pub max_batch: usize,
-    pub max_wait: Duration,
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServeMode {
+    /// Legacy collect-then-serialize loop (kept for parity testing).
+    Sequential,
+    /// Slot-based continuous batching (the default).
+    Continuous,
 }
 
-impl Default for BatchPolicy {
+/// Scheduler tunables (`repro serve` and the serving benches sweep
+/// these).
+#[derive(Clone, Copy, Debug)]
+pub struct ServePolicy {
+    /// KV slot pool size: max concurrently decoding sequences
+    /// (continuous) or max collected batch (sequential).
+    pub slots: usize,
+    /// Sequential mode: how long to wait for the batch to fill.
+    pub max_wait: Duration,
+    /// Per-slot KV capacity; requests needing more positions than this
+    /// are served through the sequential fallback.
+    pub max_context: usize,
+    pub mode: ServeMode,
+}
+
+impl Default for ServePolicy {
     fn default() -> Self {
-        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(5) }
+        ServePolicy {
+            slots: 8,
+            max_wait: Duration::from_millis(5),
+            max_context: 512,
+            mode: ServeMode::Continuous,
+        }
     }
+}
+
+/// Engine counters, exposed for tests and the serve CLI.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EngineStats {
+    /// requests admitted into a KV slot
+    pub admissions: u64,
+    /// admissions that landed while other sequences were mid-decode —
+    /// i.e. backfills into a freed slot, the no-batch-barrier property
+    pub backfilled: u64,
+    /// batched decode steps executed
+    pub steps: u64,
+    /// most simultaneously active slots observed
+    pub max_active: usize,
+    /// oversized requests routed through the sequential fallback
+    pub fallbacks: u64,
 }
 
 pub struct Server {
@@ -65,24 +126,34 @@ pub struct Server {
     stop: Arc<AtomicBool>,
     next_id: AtomicU64,
     worker: Option<std::thread::JoinHandle<()>>,
-    pub policy: BatchPolicy,
+    stats: Arc<Mutex<EngineStats>>,
+    pub policy: ServePolicy,
 }
 
 impl Server {
     /// Spawn the worker thread owning the model.
-    pub fn start(model: Model, policy: BatchPolicy) -> Server {
+    pub fn start(model: Model, policy: ServePolicy) -> Server {
+        assert!(policy.slots > 0, "need at least one slot");
         let queue = Arc::new((Mutex::new(Queue::default()), Condvar::new()));
         let stop = Arc::new(AtomicBool::new(false));
+        let stats = Arc::new(Mutex::new(EngineStats::default()));
         let q2 = queue.clone();
         let s2 = stop.clone();
-        let worker = std::thread::spawn(move || {
-            worker_loop(model, q2, s2, policy);
+        let st2 = stats.clone();
+        let worker = std::thread::spawn(move || match policy.mode {
+            ServeMode::Sequential => {
+                sequential_loop(model, q2, s2, policy, st2)
+            }
+            ServeMode::Continuous => {
+                continuous_loop(model, q2, s2, policy, st2)
+            }
         });
         Server {
             queue,
             stop,
             next_id: AtomicU64::new(0),
             worker: Some(worker),
+            stats,
             policy,
         }
     }
@@ -90,20 +161,46 @@ impl Server {
     /// Enqueue a request; returns (id, completion receiver).
     pub fn submit(&self, prompt: Vec<u32>, max_new: usize)
         -> (u64, Receiver<Completion>) {
+        let (id, _, rx) = self.enqueue(prompt, max_new, false);
+        (id, rx)
+    }
+
+    /// Enqueue a request with per-token streaming; returns
+    /// (id, token receiver, completion receiver).
+    pub fn submit_streaming(&self, prompt: Vec<u32>, max_new: usize)
+        -> (u64, Receiver<Token>, Receiver<Completion>) {
+        let (id, stream_rx, rx) = self.enqueue(prompt, max_new, true);
+        (id, stream_rx.unwrap(), rx)
+    }
+
+    fn enqueue(&self, prompt: Vec<u32>, max_new: usize, stream: bool)
+        -> (u64, Option<Receiver<Token>>, Receiver<Completion>) {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = channel();
+        let (stream_tx, stream_rx) = if stream {
+            let (a, b) = channel();
+            (Some(a), Some(b))
+        } else {
+            (None, None)
+        };
         let (lock, cv) = &*self.queue;
         lock.lock().unwrap().items.push_back(Pending {
             req: Request { id, prompt, max_new },
             enqueued: Instant::now(),
             tx,
+            stream: stream_tx,
         });
         cv.notify_one();
-        (id, rx)
+        (id, stream_rx, rx)
     }
 
     pub fn queue_len(&self) -> usize {
         self.queue.0.lock().unwrap().items.len()
+    }
+
+    /// Snapshot of the engine counters.
+    pub fn stats(&self) -> EngineStats {
+        *self.stats.lock().unwrap()
     }
 
     pub fn shutdown(mut self) {
@@ -125,13 +222,32 @@ impl Drop for Server {
     }
 }
 
-fn worker_loop(
-    model: Model, queue: Arc<(Mutex<Queue>, Condvar)>, stop: Arc<AtomicBool>,
-    policy: BatchPolicy,
+/// Serve one request start-to-finish on the sequential path.
+/// `queue_ms` was measured once, at dequeue.
+fn serve_one(model: &Model, p: Pending, queue_ms: f64) {
+    let tokens = greedy_decode(model, &p.req.prompt, p.req.max_new,
+                               |i, t| {
+        if let Some(stream) = &p.stream {
+            let _ = stream.send(Token { id: p.req.id, index: i, token: t });
+        }
+    });
+    let _ = p.tx.send(Completion {
+        id: p.req.id,
+        tokens,
+        queue_ms,
+        total_ms: p.enqueued.elapsed().as_secs_f64() * 1e3,
+        prefill_tokens: p.req.prompt.len(),
+    });
+}
+
+/// Legacy worker: collect a batch (waiting up to `max_wait` for it to
+/// fill), then serve each request sequentially.
+fn sequential_loop(
+    model: Model, queue: Arc<(Mutex<Queue>, Condvar)>,
+    stop: Arc<AtomicBool>, policy: ServePolicy,
+    stats: Arc<Mutex<EngineStats>>,
 ) {
     loop {
-        // collect a batch: block for the first item, then wait up to
-        // max_wait for more
         let batch: Vec<Pending> = {
             let (lock, cv) = &*queue;
             let mut q = lock.lock().unwrap();
@@ -144,8 +260,7 @@ fn worker_loop(
                 return;
             }
             let deadline = Instant::now() + policy.max_wait;
-            while q.items.len() < policy.max_batch
-                && Instant::now() < deadline
+            while q.items.len() < policy.slots && Instant::now() < deadline
             {
                 let (qq, timeout) = cv
                     .wait_timeout(q, deadline - Instant::now())
@@ -155,42 +270,175 @@ fn worker_loop(
                     break;
                 }
             }
-            let take = q.items.len().min(policy.max_batch);
+            let take = q.items.len().min(policy.slots);
             q.items.drain(..take).collect()
         };
-        if batch.is_empty() {
-            continue;
+        // queue time ends here, at dequeue — measured exactly once
+        let dequeued: Vec<(Pending, f64)> = batch
+            .into_iter()
+            .map(|p| {
+                let q_ms = p.enqueued.elapsed().as_secs_f64() * 1e3;
+                (p, q_ms)
+            })
+            .collect();
+        for (p, q_ms) in dequeued {
+            serve_one(&model, p, q_ms);
+            stats.lock().unwrap().admissions += 1;
         }
-        serve_batch(&model, batch);
     }
 }
 
-/// Run one collected batch: per-request KV prefill + greedy decode.
-fn serve_batch(model: &Model, batch: Vec<Pending>) {
-    for p in batch {
-        let t0 = Instant::now();
-        let queue_ms = p.enqueued.elapsed().as_secs_f64() * 1e3
-            - t0.elapsed().as_secs_f64() * 1e3;
-        let mut cache =
-            KvCache::new(model, p.req.prompt.len() + p.req.max_new + 1);
-        let mut logits = vec![0f32; model.cfg.vocab_size];
-        for &t in &p.req.prompt {
-            logits = model.decode_step(&mut cache, t);
+/// Per-slot state of an in-flight sequence.
+struct Slot {
+    p: Pending,
+    queue_ms: f64,
+    /// next prompt token index to feed (== prompt.len() once decoding)
+    prompt_pos: usize,
+    tokens: Vec<u32>,
+    /// last sampled token, fed on the next iteration
+    next_feed: u32,
+}
+
+/// The continuous-batching engine loop.
+fn continuous_loop(
+    model: Model, queue: Arc<(Mutex<Queue>, Condvar)>,
+    stop: Arc<AtomicBool>, policy: ServePolicy,
+    stats: Arc<Mutex<EngineStats>>,
+) {
+    let cap = policy.max_context;
+    let mut cache = BatchKvCache::new(&model, policy.slots, cap);
+    let mut slots: Vec<Option<Slot>> =
+        (0..policy.slots).map(|_| None).collect();
+    let mut active = 0usize;
+    let model = &model;
+    // fallback requests are served on scoped side threads (the model is
+    // only ever read), so an oversized prompt never stalls the engine;
+    // the scope joins any still-running fallbacks on shutdown
+    std::thread::scope(|scope| loop {
+        // ---- admission: pull queued requests into free slots ----------
+        let admitted: Vec<Pending> = {
+            let (lock, cv) = &*queue;
+            let mut q = lock.lock().unwrap();
+            while active == 0 && q.items.is_empty() {
+                if stop.load(Ordering::Relaxed) {
+                    return;
+                }
+                let (qq, _) = cv
+                    .wait_timeout(q, Duration::from_millis(50))
+                    .unwrap();
+                q = qq;
+            }
+            let take = (policy.slots - active).min(q.items.len());
+            q.items.drain(..take).collect()
+        };
+        for p in admitted {
+            // queue time ends here, at dequeue — measured exactly once
+            let queue_ms = p.enqueued.elapsed().as_secs_f64() * 1e3;
+            if p.req.max_new == 0 {
+                let _ = p.tx.send(Completion {
+                    id: p.req.id,
+                    tokens: Vec::new(),
+                    queue_ms,
+                    total_ms: p.enqueued.elapsed().as_secs_f64() * 1e3,
+                    prefill_tokens: p.req.prompt.len(),
+                });
+                continue;
+            }
+            // needs prompt + max_new - 1 KV positions; oversized or
+            // degenerate requests take the sequential fallback
+            if p.req.prompt.is_empty()
+                || p.req.prompt.len() + p.req.max_new > cap + 1
+            {
+                stats.lock().unwrap().fallbacks += 1;
+                scope.spawn(move || serve_one(model, p, queue_ms));
+                continue;
+            }
+            let si = slots
+                .iter()
+                .position(|s| s.is_none())
+                .expect("admission beyond free slots");
+            cache.reset_slot(si);
+            // a true backfill: some already-admitted sequence has made
+            // progress, i.e. this admission lands mid-decode (not in
+            // the same first wave into an idle engine)
+            let backfill = slots.iter().flatten().any(|s| {
+                s.prompt_pos > 0 || !s.tokens.is_empty()
+            });
+            slots[si] = Some(Slot {
+                p,
+                queue_ms,
+                prompt_pos: 0,
+                tokens: Vec::new(),
+                next_feed: 0,
+            });
+            active += 1;
+            let mut st = stats.lock().unwrap();
+            st.admissions += 1;
+            if backfill {
+                st.backfilled += 1;
+            }
+            st.max_active = st.max_active.max(active);
         }
-        let mut tokens = Vec::with_capacity(p.req.max_new);
-        for _ in 0..p.req.max_new {
-            let next = argmax(&logits) as u32;
-            tokens.push(next);
-            logits = model.decode_step(&mut cache, next);
+        if active == 0 {
+            continue;
         }
-        let _ = p.tx.send(Completion {
-            id: p.req.id,
-            tokens,
-            queue_ms: queue_ms.max(0.0),
-            total_ms: p.enqueued.elapsed().as_secs_f64() * 1e3,
-            prefill_tokens: p.req.prompt.len(),
-        });
-    }
+
+        // ---- one batched engine step over every active slot -----------
+        let feeds: Vec<(usize, u32)> = slots
+            .iter()
+            .enumerate()
+            .filter_map(|(si, s)| {
+                s.as_ref().map(|s| {
+                    let tok = if s.prompt_pos < s.p.req.prompt.len() {
+                        s.p.req.prompt[s.prompt_pos]
+                    } else {
+                        s.next_feed
+                    };
+                    (si, tok)
+                })
+            })
+            .collect();
+        let logits = model.decode_step_batch(&mut cache, &feeds);
+        stats.lock().unwrap().steps += 1;
+
+        // ---- sample / retire --------------------------------------------
+        for (row, &(si, _)) in feeds.iter().enumerate() {
+            let slot = slots[si].as_mut().unwrap();
+            if slot.prompt_pos < slot.p.req.prompt.len() {
+                slot.prompt_pos += 1;
+                if slot.prompt_pos < slot.p.req.prompt.len() {
+                    continue; // still prefilling
+                }
+                // the prompt's last logits arrive this step: fall
+                // through and sample the first token
+            }
+            let next = argmax(logits.row(row)) as u32;
+            let index = slot.tokens.len();
+            slot.tokens.push(next);
+            if let Some(stream) = &slot.p.stream {
+                let _ = stream.send(Token {
+                    id: slot.p.req.id,
+                    index,
+                    token: next,
+                });
+            }
+            if slot.tokens.len() >= slot.p.req.max_new {
+                // finished: retire immediately, slot backfills next
+                // iteration (no batch barrier)
+                let s = slots[si].take().unwrap();
+                active -= 1;
+                let _ = s.p.tx.send(Completion {
+                    id: s.p.req.id,
+                    tokens: s.tokens,
+                    queue_ms: s.queue_ms,
+                    total_ms: s.p.enqueued.elapsed().as_secs_f64() * 1e3,
+                    prefill_tokens: s.p.req.prompt.len(),
+                });
+            } else {
+                slot.next_feed = next;
+            }
+        }
+    })
 }
 
 /// Latency/throughput aggregation for the serving example + benches.
@@ -206,6 +454,12 @@ impl ServeMetrics {
 
     pub fn p50_ms(&self) -> f64 {
         self.latencies(|c| c.total_ms).map(|l| crate::util::stats::median(&l))
+            .unwrap_or(0.0)
+    }
+
+    pub fn p95_ms(&self) -> f64 {
+        self.latencies(|c| c.total_ms)
+            .map(|l| crate::util::stats::percentile(&l, 95.0))
             .unwrap_or(0.0)
     }
 
@@ -245,11 +499,20 @@ mod tests {
     use crate::model::FfnBackend;
     use crate::util::prop::{check, Gen};
 
+    fn policy(slots: usize, mode: ServeMode) -> ServePolicy {
+        ServePolicy {
+            slots,
+            max_wait: Duration::from_millis(2),
+            max_context: 64,
+            mode,
+        }
+    }
+
     #[test]
     fn server_round_trip_matches_direct_generate() {
         let model = toy_model(FfnBackend::Dense);
         let reference = model.generate(&[1, 2, 3], 4);
-        let server = Server::start(model, BatchPolicy::default());
+        let server = Server::start(model, ServePolicy::default());
         let (_, rx) = server.submit(vec![1, 2, 3], 4);
         let c = rx.recv_timeout(Duration::from_secs(30)).unwrap();
         assert_eq!(c.tokens, reference);
@@ -258,12 +521,30 @@ mod tests {
     }
 
     #[test]
+    fn queue_ms_never_exceeds_total_ms() {
+        // both scheduler modes: queue time is measured once at dequeue,
+        // so it must be non-negative and bounded by the total latency
+        for mode in [ServeMode::Sequential, ServeMode::Continuous] {
+            let model = toy_model(FfnBackend::Dense);
+            let server = Server::start(model, policy(2, mode));
+            let rxs: Vec<_> = (0..6u32)
+                .map(|i| server.submit(vec![i % 32, 3], 4).1)
+                .collect();
+            for rx in rxs {
+                let c = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+                assert!(c.queue_ms >= 0.0, "{mode:?}: {}", c.queue_ms);
+                assert!(c.queue_ms <= c.total_ms,
+                        "{mode:?}: queue {} > total {}",
+                        c.queue_ms, c.total_ms);
+            }
+            server.shutdown();
+        }
+    }
+
+    #[test]
     fn many_concurrent_requests_all_complete() {
         let model = toy_model(FfnBackend::Dense);
-        let server = Server::start(
-            model,
-            BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(2) },
-        );
+        let server = Server::start(model, policy(4, ServeMode::Continuous));
         let mut rxs = Vec::new();
         for i in 0..20u32 {
             let (id, rx) = server.submit(vec![i % 32, (i + 1) % 32], 3);
@@ -278,12 +559,54 @@ mod tests {
         server.shutdown();
     }
 
+    /// The headline parity guarantee: N concurrent ragged-length
+    /// requests through the continuous engine produce token-for-token
+    /// what sequential `generate` produces — for both FFN backends.
+    fn continuous_parity(backend: FfnBackend) {
+        let reference_model = toy_model(backend);
+        let prompts: Vec<Vec<u32>> = vec![
+            vec![1, 2, 3, 4, 5, 6, 7],
+            vec![9],
+            vec![30, 30, 2],
+            vec![4, 0, 11, 19, 23],
+            vec![8, 8],
+        ];
+        let max_news = [6usize, 2, 9, 1, 4];
+        let expected: Vec<Vec<u32>> = prompts
+            .iter()
+            .zip(max_news)
+            .map(|(p, n)| reference_model.generate(p, n))
+            .collect();
+        // slots < requests forces mid-flight backfill as well
+        let server =
+            Server::start(reference_model, policy(2, ServeMode::Continuous));
+        let rxs: Vec<_> = prompts
+            .iter()
+            .zip(max_news)
+            .map(|(p, n)| server.submit(p.clone(), n).1)
+            .collect();
+        for (rx, exp) in rxs.into_iter().zip(&expected) {
+            let c = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+            assert_eq!(&c.tokens, exp, "served != generate ({backend:?})");
+        }
+        server.shutdown();
+    }
+
     #[test]
-    fn twell_backend_serves_identically() {
-        let md = toy_model(FfnBackend::Dense);
-        let reference = md.generate(&[5, 7], 4);
-        let mt = toy_model(FfnBackend::Twell);
-        let server = Server::start(mt, BatchPolicy::default());
+    fn continuous_parity_dense() {
+        continuous_parity(FfnBackend::Dense);
+    }
+
+    #[test]
+    fn continuous_parity_twell() {
+        continuous_parity(FfnBackend::Twell);
+    }
+
+    #[test]
+    fn sequential_mode_still_matches_generate() {
+        let model = toy_model(FfnBackend::Dense);
+        let reference = model.generate(&[5, 7], 4);
+        let server = Server::start(model, policy(4, ServeMode::Sequential));
         let (_, rx) = server.submit(vec![5, 7], 4);
         let c = rx.recv_timeout(Duration::from_secs(30)).unwrap();
         assert_eq!(c.tokens, reference);
@@ -291,10 +614,68 @@ mod tests {
     }
 
     #[test]
-    fn prop_batcher_preserves_per_submission_results() {
-        // property: any submission pattern gets every request answered
-        // with the same tokens direct generation would produce
-        check("batcher correctness", 5, 31, |g: &mut Gen| {
+    fn late_arrivals_backfill_freed_slots_mid_flight() {
+        // 6 requests through 2 slots, with staggered lengths so no two
+        // sequences retire on the same engine step: at least 4
+        // admissions must land while the engine is mid-decode on other
+        // sequences, and the active set never exceeds the pool
+        let model = toy_model(FfnBackend::Dense);
+        let expected: Vec<Vec<u32>> =
+            (0..6).map(|i| model.generate(&[3, 1], 2 + i)).collect();
+        let server = Server::start(model, policy(2, ServeMode::Continuous));
+        let rxs: Vec<_> =
+            (0..6).map(|i| server.submit(vec![3, 1], 2 + i).1).collect();
+        for (rx, exp) in rxs.into_iter().zip(&expected) {
+            let c = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+            assert_eq!(&c.tokens, exp);
+        }
+        let st = server.stats();
+        assert_eq!(st.admissions, 6);
+        assert!(st.max_active <= 2, "pool overflow: {}", st.max_active);
+        assert!(st.backfilled >= 4,
+                "expected mid-flight backfills, got {}", st.backfilled);
+        assert!(st.steps > 0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn streaming_yields_every_token_before_completion() {
+        let model = toy_model(FfnBackend::Dense);
+        let reference = model.generate(&[2, 9, 4], 6);
+        let server = Server::start(model, ServePolicy::default());
+        let (id, tok_rx, rx) = server.submit_streaming(vec![2, 9, 4], 6);
+        let c = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        let streamed: Vec<Token> = tok_rx.try_iter().collect();
+        assert_eq!(c.tokens, reference);
+        assert_eq!(streamed.len(), c.tokens.len());
+        for (i, t) in streamed.iter().enumerate() {
+            assert_eq!(t.id, id);
+            assert_eq!(t.index, i);
+            assert_eq!(t.token, c.tokens[i]);
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn oversized_request_takes_sequential_fallback() {
+        let model = toy_model(FfnBackend::Dense);
+        let long_prompt: Vec<u32> = (0..70).map(|i| i % 32).collect();
+        let reference = model.generate(&long_prompt, 3);
+        // max_context 64 < 70 + 3 - 1 => fallback path
+        let server = Server::start(model, policy(2, ServeMode::Continuous));
+        let (_, rx) = server.submit(long_prompt, 3);
+        let c = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        assert_eq!(c.tokens, reference);
+        assert_eq!(server.stats().fallbacks, 1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn prop_scheduler_preserves_per_submission_results() {
+        // property: any submission pattern against any slot count gets
+        // every request answered with the tokens direct generation
+        // would produce
+        check("continuous scheduler correctness", 5, 31, |g: &mut Gen| {
             let model = toy_model(FfnBackend::Dense);
             let n_req = g.usize_in(1, 6);
             let mut expected = Vec::new();
@@ -309,10 +690,7 @@ mod tests {
             }
             let server = Server::start(
                 model,
-                BatchPolicy {
-                    max_batch: g.usize_in(1, 4),
-                    max_wait: Duration::from_millis(1),
-                },
+                policy(g.usize_in(1, 4), ServeMode::Continuous),
             );
             let rxs: Vec<_> = prompts
                 .into_iter()

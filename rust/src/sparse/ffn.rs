@@ -71,6 +71,18 @@ pub fn forward_twell(w: &FfnWeights, x: &Mat) -> (Mat, TwellMatrix) {
     (y, hg)
 }
 
+/// Backend dispatch for the decode paths (single-token and batched),
+/// which do not collect gate statistics.  Both pipelines compute each
+/// output row independently of the others, so the result is bit-exact
+/// whether `x` carries one row or a whole slot pool's worth.
+pub fn forward_backend(w: &FfnWeights, x: &Mat, twell: bool) -> Mat {
+    if twell {
+        forward_twell(w, x).0
+    } else {
+        forward_dense(w, x)
+    }
+}
+
 /// Gradients of one FFN block (weight grads in (N, K) "transposed"
 /// layout where noted — cheap to produce from the sparse path and
 /// layout-identical between the two implementations for comparison).
@@ -273,6 +285,23 @@ mod tests {
         }
         let dy = Mat::randn(m, k, 1.0, &mut rng);
         (w, x, dy)
+    }
+
+    #[test]
+    fn forward_backend_is_row_independent() {
+        // the guarantee the batched decode path relies on: running B rows
+        // at once is bit-identical to running each row alone
+        let (w, x, _) = setup(6, 16, 64, 0.5, 9);
+        for twell in [false, true] {
+            let batched = forward_backend(&w, &x, twell);
+            for r in 0..x.rows {
+                let mut single = Mat::zeros(1, x.cols);
+                single.row_mut(0).copy_from_slice(x.row(r));
+                let y1 = forward_backend(&w, &single, twell);
+                assert_eq!(y1.row(0), batched.row(r),
+                           "row {r} diverges (twell={twell})");
+            }
+        }
     }
 
     #[test]
