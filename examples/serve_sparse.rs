@@ -5,7 +5,8 @@
 //! the TwELL pipeline seeing multi-row activations during decode.
 //!
 //! Run: cargo run --release --example serve_sparse -- \
-//!        [--run e2e_s] [--slots 8] [--requests 24] [--max-new 12]
+//!        [--run e2e_s] [--slots 8] [--requests 24] [--max-new 12] \
+//!        [--kv-blocks 128] [--kv-block-size 16]
 //! (trains a quick tiny model if the run does not exist yet)
 
 use std::time::{Duration, Instant};
@@ -25,6 +26,9 @@ fn main() -> anyhow::Result<()> {
     let n_requests = args.get_usize("requests", 24)?;
     let max_new = args.get_usize("max-new", 12)?;
     let slots = args.get_usize("slots", 8)?;
+    // paged KV pool: shared by all slots, sized in blocks
+    let kv_block_size = args.get_usize("kv-block-size", 16)?;
+    let kv_blocks = args.get_usize("kv-blocks", 128)?;
     let paths = default_paths();
     let dir = paths.run_dir(&run);
     if !dir.join("checkpoint.bin").exists() {
@@ -57,7 +61,8 @@ fn main() -> anyhow::Result<()> {
             let policy = ServePolicy {
                 slots: eff_slots,
                 max_wait: Duration::from_millis(5),
-                max_context: 256,
+                kv_block_size,
+                kv_blocks,
                 mode,
             };
             let server = Server::start(model, policy);
@@ -67,9 +72,9 @@ fn main() -> anyhow::Result<()> {
                     server
                         .submit(bpe.encode(prompts[i % prompts.len()]),
                                 max_new)
-                        .1
+                        .map(|(_, rx)| rx)
                 })
-                .collect();
+                .collect::<anyhow::Result<_>>()?;
             let mut metrics = ServeMetrics::default();
             for rx in rxs {
                 metrics.record(rx.recv()?);
@@ -94,11 +99,12 @@ fn main() -> anyhow::Result<()> {
     let server = Server::start(model, ServePolicy {
         slots,
         max_wait: Duration::from_millis(5),
-        max_context: 256,
+        kv_block_size,
+        kv_blocks,
         mode: ServeMode::Continuous,
     });
     let (_, tok_rx, done_rx) =
-        server.submit_streaming(bpe.encode(prompts[0]), max_new);
+        server.submit_streaming(bpe.encode(prompts[0]), max_new)?;
     print!("streamed:");
     for t in tok_rx.iter() {
         print!(" {}", bpe.decode(&[t.token]).trim());

@@ -9,12 +9,14 @@
 //! monotonically 1 → 8 slots for the TwELL backend.
 //!
 //! Prints the usual paper-style table plus one machine-readable JSON
-//! line (`{"bench": "serve_throughput", "rows": [...]}`) so the perf
-//! trajectory can scrape the numbers.
+//! line (`{"bench": "serve_throughput", "rows": [...]}`), and persists
+//! the same report to `BENCH_serve_throughput.json` at the repo root
+//! so the perf trajectory populates across PRs.
 
 use std::time::{Duration, Instant};
 
 use repro::config::ModelConfig;
+use repro::model::kv::kv_positions_needed;
 use repro::model::{FfnBackend, Layer, Model};
 use repro::serve::{ServeMetrics, ServeMode, ServePolicy, Server};
 use repro::sparse::ffn::synth_sparse_ffn;
@@ -80,10 +82,16 @@ fn run_wave(backend: FfnBackend, slots: usize, n_requests: usize,
     -> (f64, f64, f64, u64) {
     let model = synthetic_model(4, 30.0, backend);
     let vocab = model.cfg.vocab_size;
+    // paged KV pool sized so every slot can hold one request's worst
+    // case at once (the bench measures batching, not memory pressure)
+    let kv_block_size = 16;
+    let kv_blocks = slots
+        * kv_positions_needed(prompt_len, max_new).div_ceil(kv_block_size);
     let server = Server::start(model, ServePolicy {
         slots,
         max_wait: Duration::from_millis(2),
-        max_context: prompt_len + max_new + 1,
+        kv_block_size,
+        kv_blocks,
         mode: ServeMode::Continuous,
     });
     let t0 = Instant::now();
@@ -93,7 +101,7 @@ fn run_wave(backend: FfnBackend, slots: usize, n_requests: usize,
             let prompt: Vec<u32> = (0..prompt_len)
                 .map(|j| ((i * 131 + j * 31) % vocab) as u32)
                 .collect();
-            server.submit(prompt, max_new).1
+            server.submit(prompt, max_new).expect("request fits pool").1
         })
         .collect();
     let mut metrics = ServeMetrics::default();
@@ -160,4 +168,12 @@ fn main() {
         ("rows", Json::Arr(rows)),
     ]);
     println!("{report}");
+    // persist at the repo root so the perf trajectory can track the
+    // numbers across PRs, not just scrape stdout
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("BENCH_serve_throughput.json");
+    match report.write_file(&out) {
+        Ok(()) => println!("wrote {}", out.display()),
+        Err(e) => eprintln!("failed to write {}: {e}", out.display()),
+    }
 }

@@ -209,10 +209,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let run = args.require("run")?;
     let n_requests = args.get_usize("requests", 16)?.max(1);
     let max_new = args.get_usize("max-new", 16)?;
-    // scheduler tunables (continuous-batching engine)
+    // scheduler tunables (continuous-batching engine, paged KV pool)
     let slots = args.get_usize("slots", 8)?;
     let max_wait_ms = args.get_f64("max-wait-ms", 5.0)?;
-    let max_context = args.get_usize("max-context", 512)?;
+    let kv_block_size = args.get_usize("kv-block-size", 16)?;
+    let kv_blocks = args.get_usize("kv-blocks", 256)?;
     let mode = match args.get_or("mode", "continuous").as_str() {
         "seq" | "sequential" => repro::serve::ServeMode::Sequential,
         "continuous" => repro::serve::ServeMode::Continuous,
@@ -228,7 +229,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let policy = repro::serve::ServePolicy {
         slots,
         max_wait: std::time::Duration::from_secs_f64(max_wait_ms / 1e3),
-        max_context,
+        kv_block_size,
+        kv_blocks,
         mode,
     };
     let server = repro::serve::Server::start(model, policy);
@@ -242,13 +244,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     ];
     // stream the first request's tokens to show the per-token channel
     let (_, stream_rx, first_rx) = server
-        .submit_streaming(bpe.encode(prompts[0]), max_new);
+        .submit_streaming(bpe.encode(prompts[0]), max_new)?;
     let rxs: Vec<_> = (1..n_requests)
         .map(|i| {
             let prompt = bpe.encode(prompts[i % prompts.len()]);
-            server.submit(prompt, max_new).1
+            server.submit(prompt, max_new).map(|(_, rx)| rx)
         })
-        .collect();
+        .collect::<Result<_>>()?;
     for t in stream_rx.iter() {
         eprint!("{}", bpe.decode(&[t.token]));
     }
@@ -269,7 +271,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let wall = t0.elapsed().as_secs_f64();
     let stats = server.stats();
     println!(
-        "served {n_requests} requests ({mode:?}, {slots} slots): \
+        "served {n_requests} requests ({mode:?}, {slots} slots, \
+         {kv_blocks} KV blocks x {kv_block_size} positions): \
          p50 {:.1} ms, p95 {:.1} ms, p99 {:.1} ms, {:.0} tok/s",
         metrics.p50_ms(),
         metrics.p95_ms(),

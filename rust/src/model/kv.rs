@@ -6,14 +6,27 @@
 //!   per call (M=1 rows through the FFN backends).  `greedy_decode` wraps
 //!   it into the shared prefill+argmax loop that `Model::generate` and
 //!   the sequential serving path both use.
-//! * `BatchKvCache` + `Model::decode_step_batch` — a fixed pool of KV
-//!   *slots* in slot-major storage; one call advances every active slot
-//!   at its own position in a single pass, so RMSNorm/QKV/RoPE/attention
-//!   and — crucially — the FFN backends run over a `(B_active, d)`
-//!   activation matrix.  This is what the continuous-batching server
-//!   drives.  Every kernel on the path computes output rows
-//!   independently, so batched decode is bit-exact with the sequential
-//!   path (see the parity tests below).
+//! * `PagedKvCache` + `Model::decode_step_batch` — a *paged* KV pool
+//!   shared by every in-flight sequence, vLLM-style: physical storage is
+//!   a global array of fixed-size blocks (`block_size` positions each),
+//!   and each sequence slot owns a block *table* that maps its logical
+//!   positions onto physical blocks.  Blocks are allocated from a free
+//!   list as tokens are actually written and returned when the sequence
+//!   retires, so short and long requests share physical KV memory
+//!   instead of each stranding a fixed `max_context` region.  One
+//!   `decode_step_batch` call advances every active slot at its own
+//!   position in a single pass, so RMSNorm/QKV/RoPE/attention and —
+//!   crucially — the FFN backends run over a `(B_active, d)` activation
+//!   matrix.  Every kernel on the path computes output rows
+//!   independently, so batched paged decode is bit-exact with the
+//!   sequential path (see the parity tests below).
+//!
+//! Admission bookkeeping: `reserve` earmarks a slot's worst-case block
+//! count up front (the scheduler admits only when `available_blocks`
+//! covers it), while physical blocks are still allocated lazily as
+//! positions are written — `blocks_in_use` therefore tracks tokens
+//! actually held, and a reserved sequence can never hit an exhausted
+//! free list mid-decode.
 
 use crate::model::Model;
 use crate::sparse::dense;
@@ -39,41 +52,104 @@ impl KvCache {
     }
 }
 
-/// Pooled KV storage for the continuous-batching engine: `slots`
-/// independent sequences, each with `cap` positions, stored slot-major
-/// (slot `s` owns rows `s*cap .. (s+1)*cap` of every layer matrix).
-/// Retiring a sequence is O(1): reset the slot's length and the rows are
-/// reused by the next admission.
-pub struct BatchKvCache {
-    /// per layer: (slots * cap, d_model) keys / values, post-RoPE
+/// Paged KV storage for the continuous-batching engine: `num_blocks`
+/// physical blocks of `block_size` positions each, shared by `slots`
+/// sequences through per-slot block tables.  Retiring a sequence
+/// returns its blocks to the free list in O(blocks).
+pub struct PagedKvCache {
+    /// per layer: (num_blocks * block_size, d_model) keys / values,
+    /// post-RoPE; row `b * block_size + o` is offset `o` of physical
+    /// block `b`
     pub k: Vec<Mat>,
     pub v: Vec<Mat>,
     /// current length of each slot's sequence
     pub len: Vec<usize>,
     pub slots: usize,
-    pub cap: usize,
+    pub block_size: usize,
+    pub num_blocks: usize,
+    /// per-slot block table: physical block id of each logical block
+    tables: Vec<Vec<usize>>,
+    /// free physical block ids (LIFO)
+    free: Vec<usize>,
+    /// per-slot worst-case block reservation made at admission
+    reserved: Vec<usize>,
+    /// sum of reservations across all slots
+    committed: usize,
 }
 
-impl BatchKvCache {
-    pub fn new(model: &Model, slots: usize, cap: usize) -> BatchKvCache {
-        assert!(slots > 0 && cap > 0);
+impl PagedKvCache {
+    pub fn new(
+        model: &Model, slots: usize, num_blocks: usize, block_size: usize,
+    ) -> PagedKvCache {
+        assert!(slots > 0 && num_blocks > 0 && block_size > 0);
         let d = model.cfg.d_model;
-        BatchKvCache {
+        PagedKvCache {
             k: (0..model.cfg.n_layers)
-                .map(|_| Mat::zeros(slots * cap, d))
+                .map(|_| Mat::zeros(num_blocks * block_size, d))
                 .collect(),
             v: (0..model.cfg.n_layers)
-                .map(|_| Mat::zeros(slots * cap, d))
+                .map(|_| Mat::zeros(num_blocks * block_size, d))
                 .collect(),
             len: vec![0; slots],
             slots,
-            cap,
+            block_size,
+            num_blocks,
+            tables: vec![Vec::new(); slots],
+            free: (0..num_blocks).rev().collect(),
+            reserved: vec![0; slots],
+            committed: 0,
         }
     }
 
-    /// Free a slot for reuse (retired sequence / new admission).
-    pub fn reset_slot(&mut self, slot: usize) {
+    /// Blocks needed to hold `positions` KV entries.
+    pub fn blocks_for(&self, positions: usize) -> usize {
+        positions.div_ceil(self.block_size)
+    }
+
+    /// Blocks not yet promised to any slot — the admission budget.
+    pub fn available_blocks(&self) -> usize {
+        self.num_blocks - self.committed
+    }
+
+    /// Physical blocks currently allocated (grows with tokens actually
+    /// written, not with reservations).
+    pub fn blocks_in_use(&self) -> usize {
+        self.num_blocks - self.free.len()
+    }
+
+    /// Earmark the slot's worst-case block count (admission).  The slot
+    /// must be retired/empty and the reservation must fit the budget —
+    /// the scheduler checks `available_blocks` first.
+    pub fn reserve(&mut self, slot: usize, positions: usize) {
+        assert!(self.len[slot] == 0 && self.reserved[slot] == 0,
+                "slot {slot} still holds a sequence");
+        let need = self.blocks_for(positions);
+        assert!(need <= self.available_blocks(),
+                "reservation of {need} blocks exceeds the budget");
+        self.reserved[slot] = need;
+        self.committed += need;
+    }
+
+    /// Retire a slot: return its physical blocks to the free list and
+    /// release its reservation.
+    pub fn release_slot(&mut self, slot: usize) {
+        self.free.append(&mut self.tables[slot]);
+        self.committed -= self.reserved[slot];
+        self.reserved[slot] = 0;
         self.len[slot] = 0;
+    }
+
+    /// Make sure the block holding position `pos == len[slot]` is
+    /// allocated, pulling from the free list when `pos` opens a new
+    /// block.  Reservation guarantees the free list cannot be empty.
+    fn ensure_block(&mut self, slot: usize, pos: usize) {
+        if pos == self.tables[slot].len() * self.block_size {
+            assert!(self.tables[slot].len() < self.reserved[slot],
+                    "slot {slot} grew past its reservation");
+            let b = self.free.pop()
+                .expect("free list empty despite reservation");
+            self.tables[slot].push(b);
+        }
     }
 }
 
@@ -99,8 +175,8 @@ impl Model {
             cache.k[li].row_mut(pos).copy_from_slice(k.row(0));
             cache.v[li].row_mut(pos).copy_from_slice(v.row(0));
             let mut attn = Mat::zeros(1, d);
-            attend_one(q.row(0), &cache.k[li], &cache.v[li], 0, pos, h, dh,
-                       attn.row_mut(0));
+            attend_one(q.row(0), &cache.k[li], &cache.v[li], |t| t, pos, h,
+                       dh, attn.row_mut(0));
             let attn_out = dense::matmul(&attn, &layer.wo);
             super::add_inplace(&mut x, &attn_out);
             let normed = super::rmsnorm(&x, &layer.ln_ffn,
@@ -121,15 +197,21 @@ impl Model {
     /// logits as a `(B_active, vocab)` matrix in the same order.  The
     /// dense and TwELL FFN backends both see the full `(B_active, d)`
     /// activation matrix, which is the whole point of continuous
-    /// batching for the sparse pipeline.
+    /// batching for the sparse pipeline.  K/V rows land in paged
+    /// storage: each step may pull a fresh block from the free list
+    /// (covered by the slot's reservation), and reads resolve through
+    /// the slot's block table instead of a contiguous stride — the
+    /// table walk is done once per step, up front.
     pub fn decode_step_batch(
-        &self, cache: &mut BatchKvCache, active: &[(usize, u32)],
+        &self, cache: &mut PagedKvCache, active: &[(usize, u32)],
     ) -> Mat {
         let b = active.len();
         assert!(b > 0, "decode_step_batch with no active slots");
         for (i, &(slot, _)) in active.iter().enumerate() {
             assert!(slot < cache.slots, "slot {slot} out of range");
-            assert!(cache.len[slot] < cache.cap, "slot {slot} kv full");
+            assert!(cache.len[slot]
+                        < cache.reserved[slot] * cache.block_size,
+                    "slot {slot} kv full (reserve before decoding)");
             for &(other, _) in &active[i + 1..] {
                 assert_ne!(slot, other, "duplicate slot in active set");
             }
@@ -137,6 +219,21 @@ impl Model {
         let d = self.cfg.d_model;
         let h = self.cfg.n_heads;
         let dh = self.cfg.head_dim();
+        // resolve each slot's physical rows once per step: the block
+        // tables are fixed for the rest of the step (the current
+        // position's block is allocated here) and shared by every layer
+        // and head, so the attention loop below does plain indexed
+        // loads instead of per-access div/mod table walks
+        let row_lists: Vec<Vec<usize>> = active
+            .iter()
+            .map(|&(slot, _)| {
+                let pos = cache.len[slot];
+                cache.ensure_block(slot, pos);
+                let bs = cache.block_size;
+                let table = &cache.tables[slot];
+                (0..=pos).map(|t| table[t / bs] * bs + t % bs).collect()
+            })
+            .collect();
         let mut x = Mat::zeros(b, d);
         for (i, &(_, tok)) in active.iter().enumerate() {
             x.row_mut(i).copy_from_slice(self.embed.row(tok as usize));
@@ -153,15 +250,16 @@ impl Model {
                                 self.cfg.rope_theta);
                 super::rope_row(k.row_mut(i), pos, h, dh,
                                 self.cfg.rope_theta);
-                let row = slot * cache.cap + pos;
+                let row = row_lists[i][pos];
                 cache.k[li].row_mut(row).copy_from_slice(k.row(i));
                 cache.v[li].row_mut(row).copy_from_slice(v.row(i));
             }
             let mut attn = Mat::zeros(b, d);
             for (i, &(slot, _)) in active.iter().enumerate() {
                 let pos = cache.len[slot];
+                let rows = &row_lists[i];
                 attend_one(q.row(i), &cache.k[li], &cache.v[li],
-                           slot * cache.cap, pos, h, dh, attn.row_mut(i));
+                           |t| rows[t], pos, h, dh, attn.row_mut(i));
             }
             let attn_out = dense::matmul(&attn, &layer.wo);
             super::add_inplace(&mut x, &attn_out);
@@ -184,12 +282,24 @@ impl Model {
     }
 }
 
-/// Causal single-query attention against cached K/V rows
-/// `base .. base+pos` (history) plus `base+pos` (current, already
-/// written): the one attention inner loop both decode shapes share.
+/// KV positions a greedy request occupies: the prompt plus every
+/// generated token except the last (its logits are never needed).  The
+/// single source of truth for cache sizing and scheduler admission —
+/// don't re-derive this bound anywhere else.
+pub fn kv_positions_needed(prompt_len: usize, max_new: usize) -> usize {
+    prompt_len + max_new.saturating_sub(1)
+}
+
+/// Causal single-query attention against cached K/V positions
+/// `0 .. pos` (history) plus `pos` (current, already written), with
+/// `row_of` mapping a logical position to its physical storage row —
+/// the identity for the contiguous `KvCache`, a block-table walk for
+/// `PagedKvCache`.  The one attention inner loop both decode shapes
+/// share.
 fn attend_one(
-    q: &[f32], kcache: &Mat, vcache: &Mat, base: usize, pos: usize,
-    heads: usize, dh: usize, out: &mut [f32],
+    q: &[f32], kcache: &Mat, vcache: &Mat,
+    row_of: impl Fn(usize) -> usize, pos: usize, heads: usize, dh: usize,
+    out: &mut [f32],
 ) {
     let scale = 1.0 / (dh as f32).sqrt();
     for head in 0..heads {
@@ -197,7 +307,7 @@ fn attend_one(
         let mut scores = Vec::with_capacity(pos + 1);
         let mut maxv = f32::NEG_INFINITY;
         for t in 0..=pos {
-            let kh = &kcache.row(base + t)[head * dh..(head + 1) * dh];
+            let kh = &kcache.row(row_of(t))[head * dh..(head + 1) * dh];
             let sc = dense::dot(qh, kh) * scale;
             scores.push(sc);
             maxv = maxv.max(sc);
@@ -210,7 +320,7 @@ fn attend_one(
         let inv = 1.0 / z;
         let oh = &mut out[head * dh..(head + 1) * dh];
         for (t, &w) in scores.iter().enumerate() {
-            let vh = &vcache.row(base + t)[head * dh..(head + 1) * dh];
+            let vh = &vcache.row(row_of(t))[head * dh..(head + 1) * dh];
             for (o, &vv) in oh.iter_mut().zip(vh) {
                 *o += w * inv * vv;
             }
@@ -223,12 +333,17 @@ fn attend_one(
 /// tokens, calling `on_token(index, token)` as each one is chosen — the
 /// per-token streaming hook.  The final sampled token is not fed back
 /// (its logits are never needed), which keeps the KV requirement at
-/// `prompt.len() + max_new - 1` positions.
+/// `kv_positions_needed` positions.  An empty prompt yields an empty
+/// result: no token was ever fed, so there are no logits to sample.
 pub fn greedy_decode(
     model: &Model, prompt: &[u32], max_new: usize,
     mut on_token: impl FnMut(usize, u32),
 ) -> Vec<u32> {
-    let mut cache = KvCache::new(model, (prompt.len() + max_new).max(1));
+    if prompt.is_empty() || max_new == 0 {
+        return Vec::new();
+    }
+    let cap = kv_positions_needed(prompt.len(), max_new);
+    let mut cache = KvCache::new(model, cap);
     let mut logits = Vec::new();
     for &t in prompt {
         logits = model.decode_step(&mut cache, t);
@@ -245,7 +360,11 @@ pub fn greedy_decode(
     out
 }
 
+/// Index of the largest element (first wins on ties).  Panics on empty
+/// input: an empty logits slice means no token was ever fed, and
+/// silently answering "token 0" fabricates output.
 pub fn argmax(xs: &[f32]) -> usize {
+    assert!(!xs.is_empty(), "argmax over empty logits");
     let mut best = 0;
     for (i, &x) in xs.iter().enumerate() {
         if x > xs[best] {
@@ -304,6 +423,16 @@ mod tests {
     }
 
     #[test]
+    fn generate_with_empty_prompt_emits_nothing() {
+        // no token fed => no logits => nothing to sample (the old code
+        // answered with a fabricated argmax-of-nothing token 0)
+        let m = toy_model(FfnBackend::Dense);
+        assert!(m.generate(&[], 5).is_empty());
+        assert!(greedy_decode(&m, &[], 3, |_, _| panic!("streamed a \
+            token for an empty prompt")).is_empty());
+    }
+
+    #[test]
     fn greedy_decode_streams_every_token_in_order() {
         let m = toy_model(FfnBackend::Dense);
         let mut streamed = Vec::new();
@@ -315,8 +444,19 @@ mod tests {
         assert_eq!(out, m.generate(&[4, 4, 1], 6));
     }
 
-    /// Drive ragged sequences through one BatchKvCache and check every
-    /// step's logits are *bit-exact* with per-sequence `decode_step`.
+    #[test]
+    fn kv_positions_needed_is_the_exact_bound() {
+        // prompt + max_new - 1: the last sampled token is never fed
+        assert_eq!(kv_positions_needed(3, 4), 6);
+        assert_eq!(kv_positions_needed(5, 1), 5);
+        assert_eq!(kv_positions_needed(2, 0), 2);
+        assert_eq!(kv_positions_needed(0, 0), 0);
+    }
+
+    /// Drive ragged sequences through one PagedKvCache with a block
+    /// size smaller than the sequences (so attention genuinely walks
+    /// multi-block tables) and check every step's logits are
+    /// *bit-exact* with per-sequence `decode_step`.
     fn batch_parity(backend: FfnBackend) {
         let m = toy_model(backend);
         let seqs: [&[u32]; 3] =
@@ -324,7 +464,10 @@ mod tests {
         // references: independent single-sequence caches
         let mut refs: Vec<(KvCache, usize)> =
             seqs.iter().map(|_| (KvCache::new(&m, 8), 0)).collect();
-        let mut batch = BatchKvCache::new(&m, 3, 8);
+        let mut batch = PagedKvCache::new(&m, 3, 16, 2);
+        for (slot, s) in seqs.iter().enumerate() {
+            batch.reserve(slot, s.len());
+        }
         // step until every sequence is exhausted; shorter ones drop out,
         // making the active set genuinely ragged
         for step in 0.. {
@@ -364,16 +507,20 @@ mod tests {
     }
 
     #[test]
-    fn slot_reset_reuses_storage_cleanly() {
+    fn slot_release_reuses_blocks_cleanly() {
         // decode A in slot 0, retire it, decode B in the same slot: B
-        // must match a fresh single-sequence cache exactly
+        // must match a fresh single-sequence cache exactly even though
+        // it recycles A's physical blocks
         let m = toy_model(FfnBackend::Dense);
-        let mut batch = BatchKvCache::new(&m, 2, 8);
+        let mut batch = PagedKvCache::new(&m, 2, 8, 2);
+        batch.reserve(0, 4);
         for &t in &[9u32, 2, 2, 17] {
             m.decode_step_batch(&mut batch, &[(0, t)]);
         }
-        batch.reset_slot(0);
+        batch.release_slot(0);
         assert_eq!(batch.len[0], 0);
+        assert_eq!(batch.blocks_in_use(), 0);
+        batch.reserve(0, 3);
         let mut cache = KvCache::new(&m, 8);
         for &t in &[5u32, 31, 0] {
             let lb = m.decode_step_batch(&mut batch, &[(0, t)]);
@@ -383,7 +530,50 @@ mod tests {
     }
 
     #[test]
+    fn paged_blocks_track_actual_tokens_not_capacity() {
+        // the acceptance criterion: physical blocks in use grow with
+        // tokens actually held — not with the reservation, and nothing
+        // like slots * max_context
+        let m = toy_model(FfnBackend::Dense);
+        let mut cache = PagedKvCache::new(&m, 4, 32, 4);
+        assert_eq!(cache.blocks_in_use(), 0);
+        cache.reserve(0, 16); // worst case: 4 blocks promised
+        assert_eq!(cache.blocks_in_use(), 0); // ...but none allocated yet
+        for (n, &t) in [9u32, 2, 2, 17, 5].iter().enumerate() {
+            m.decode_step_batch(&mut cache, &[(0, t)]);
+            assert_eq!(cache.blocks_in_use(), (n + 1).div_ceil(4));
+        }
+        // 5 tokens held -> 2 blocks, despite the 4-block reservation
+        assert_eq!(cache.blocks_in_use(), 2);
+        cache.release_slot(0);
+        assert_eq!(cache.blocks_in_use(), 0);
+        assert_eq!(cache.available_blocks(), 32);
+    }
+
+    #[test]
+    fn reservations_bound_the_admission_budget() {
+        let m = toy_model(FfnBackend::Dense);
+        let mut cache = PagedKvCache::new(&m, 2, 8, 4);
+        assert_eq!(cache.available_blocks(), 8);
+        assert_eq!(cache.blocks_for(10), 3);
+        cache.reserve(0, 10); // 3 blocks
+        assert_eq!(cache.available_blocks(), 5);
+        cache.reserve(1, 20); // 5 blocks
+        assert_eq!(cache.available_blocks(), 0);
+        cache.release_slot(0);
+        assert_eq!(cache.available_blocks(), 3);
+        cache.release_slot(1);
+        assert_eq!(cache.available_blocks(), 8);
+    }
+
+    #[test]
     fn argmax_picks_max() {
         assert_eq!(argmax(&[0.1, 3.0, -1.0, 3.0]), 1); // first max wins
+    }
+
+    #[test]
+    #[should_panic(expected = "argmax over empty logits")]
+    fn argmax_rejects_empty_logits() {
+        argmax(&[]);
     }
 }

@@ -9,9 +9,10 @@
 //! artifact.
 //!
 //! Decoding comes in two shapes (`kv`): the single-sequence
-//! `decode_step`, and `decode_step_batch` over a slot-major
-//! `BatchKvCache`, which the continuous-batching server (`serve`) drives
-//! so the FFN backends see multi-row activations during decode.
+//! `decode_step`, and `decode_step_batch` over a block-paged
+//! `PagedKvCache`, which the continuous-batching server (`serve`)
+//! drives so the FFN backends see multi-row activations during decode
+//! while sequences share physical KV memory.
 
 pub mod kv;
 

@@ -2,26 +2,43 @@
 //! model (the vllm-shaped L3 component).
 //!
 //! Requests enter a shared queue; the worker thread owns the model plus
-//! a fixed pool of KV *slots* (`BatchKvCache`).  Every engine iteration
-//! it (1) admits queued requests into free slots — no batch barrier, a
-//! request never waits for the current batch to finish — (2) advances
-//! all active slots one token with `Model::decode_step_batch`, which
-//! feeds the FFN backends a `(B_active, d)` activation matrix (so the
-//! TwELL pipeline finally runs batched during decode), and (3) retires
-//! finished sequences immediately, backfilling their slots from the
-//! queue on the next iteration.  Prefill is interleaved token-by-token
-//! with decode (Orca-style iteration-level scheduling), so short and
-//! long requests share the engine without head-of-line blocking.
+//! a *paged* KV pool (`PagedKvCache`): physical KV storage is a global
+//! array of fixed-size blocks (`kv_block_size` positions each,
+//! `kv_blocks` total), and each admitted sequence maps its logical
+//! positions onto physical blocks through a per-slot block table that
+//! grows on demand.  Long and short requests therefore share physical
+//! KV memory instead of each stranding a fixed `max_context` region,
+//! and an oversized prompt needs no special path — any request that
+//! fits the pool is batched like every other.
+//!
+//! Every engine iteration the worker (1) admits queued requests in
+//! FIFO order while a sequence slot is free AND the pool's block budget
+//! covers the request's worst case (`kv_positions_needed`) — under
+//! memory pressure admission *waits* for retiring sequences to return
+//! blocks rather than overcommitting — (2) advances all active slots
+//! one token with `Model::decode_step_batch`, which feeds the FFN
+//! backends a `(B_active, d)` activation matrix (the TwELL pipeline
+//! runs batched during decode), and (3) retires finished sequences
+//! immediately, returning their blocks to the free list and
+//! backfilling their slots from the queue on the next iteration (no
+//! batch barrier).  Prefill is interleaved token-by-token with decode
+//! (Orca-style iteration-level scheduling), so short and long requests
+//! share the engine without head-of-line blocking.
+//!
+//! Degenerate requests (empty prompt, or `max_new == 0`) are answered
+//! with an empty `Completion`: an empty prompt produces no logits, so
+//! there is nothing to sample.  A request whose worst case exceeds the
+//! *entire* pool could never be admitted, so `submit` rejects it up
+//! front with an actionable error instead of queueing it forever.
 //!
 //! Per-token streaming: `submit_streaming` returns a `Receiver<Token>`
 //! that yields each generated token as it is chosen, alongside the
 //! final `Completion`.
 //!
 //! The pre-refactor collect-then-serialize path is kept behind
-//! `ServeMode::Sequential` as the parity baseline; oversized requests
-//! (prompt + max_new beyond the slot capacity) fall back to it
-//! transparently.  Both paths are greedy and share `greedy_decode`, so
-//! served tokens are bit-exact with `Model::generate`.
+//! `ServeMode::Sequential` as the parity baseline.  Both paths are
+//! greedy and share `greedy_decode`, so served tokens are bit-exact
+//! with `Model::generate`.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -29,9 +46,11 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
-use crate::model::kv::{argmax, greedy_decode, BatchKvCache};
+use crate::model::kv::{
+    argmax, greedy_decode, kv_positions_needed, PagedKvCache,
+};
 use crate::model::Model;
 
 #[derive(Clone, Debug)]
@@ -88,9 +107,12 @@ pub struct ServePolicy {
     pub slots: usize,
     /// Sequential mode: how long to wait for the batch to fill.
     pub max_wait: Duration,
-    /// Per-slot KV capacity; requests needing more positions than this
-    /// are served through the sequential fallback.
-    pub max_context: usize,
+    /// Positions per physical KV block (paging granularity).
+    pub kv_block_size: usize,
+    /// Total physical KV blocks shared by all slots; the admission
+    /// budget is `kv_blocks * kv_block_size` positions pool-wide, not
+    /// per slot.
+    pub kv_blocks: usize,
     pub mode: ServeMode,
 }
 
@@ -99,7 +121,8 @@ impl Default for ServePolicy {
         ServePolicy {
             slots: 8,
             max_wait: Duration::from_millis(5),
-            max_context: 512,
+            kv_block_size: 16,
+            kv_blocks: 256,
             mode: ServeMode::Continuous,
         }
     }
@@ -117,7 +140,9 @@ pub struct EngineStats {
     pub steps: u64,
     /// most simultaneously active slots observed
     pub max_active: usize,
-    /// oversized requests routed through the sequential fallback
+    /// requests routed through the (removed) sequential fallback —
+    /// always 0 since the paged cache serves any request that fits the
+    /// pool; kept so dashboards and the acceptance checks can assert it
     pub fallbacks: u64,
 }
 
@@ -158,23 +183,46 @@ impl Server {
         }
     }
 
-    /// Enqueue a request; returns (id, completion receiver).
+    /// Enqueue a request; returns (id, completion receiver).  Errors if
+    /// the request's worst-case KV footprint exceeds the whole pool (it
+    /// could never be admitted).
     pub fn submit(&self, prompt: Vec<u32>, max_new: usize)
-        -> (u64, Receiver<Completion>) {
-        let (id, _, rx) = self.enqueue(prompt, max_new, false);
-        (id, rx)
+        -> Result<(u64, Receiver<Completion>)> {
+        let (id, _, rx) = self.enqueue(prompt, max_new, false)?;
+        Ok((id, rx))
     }
 
     /// Enqueue a request with per-token streaming; returns
     /// (id, token receiver, completion receiver).
     pub fn submit_streaming(&self, prompt: Vec<u32>, max_new: usize)
-        -> (u64, Receiver<Token>, Receiver<Completion>) {
-        let (id, stream_rx, rx) = self.enqueue(prompt, max_new, true);
-        (id, stream_rx.unwrap(), rx)
+        -> Result<(u64, Receiver<Token>, Receiver<Completion>)> {
+        let (id, stream_rx, rx) = self.enqueue(prompt, max_new, true)?;
+        Ok((id, stream_rx.unwrap(), rx))
     }
 
     fn enqueue(&self, prompt: Vec<u32>, max_new: usize, stream: bool)
-        -> (u64, Option<Receiver<Token>>, Receiver<Completion>) {
+        -> Result<(u64, Option<Receiver<Token>>, Receiver<Completion>)> {
+        // reject impossible requests up front, with a message the
+        // caller can act on — once queued they could only wait forever.
+        // Degenerate requests (empty prompt / max_new == 0) are exempt:
+        // the engine answers them with an empty completion using no KV.
+        // The sequential path sizes its cache per request, no limit.
+        if self.policy.mode == ServeMode::Continuous
+            && !prompt.is_empty()
+            && max_new > 0
+        {
+            let need = kv_positions_needed(prompt.len(), max_new);
+            let pool = self.policy.kv_blocks * self.policy.kv_block_size;
+            if need > pool {
+                bail!(
+                    "request needs {need} KV positions but the pool \
+                     holds {pool} ({} blocks x {} positions); raise \
+                     --kv-blocks or lower max_new",
+                    self.policy.kv_blocks,
+                    self.policy.kv_block_size
+                );
+            }
+        }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = channel();
         let (stream_tx, stream_rx) = if stream {
@@ -191,7 +239,7 @@ impl Server {
             stream: stream_tx,
         });
         cv.notify_one();
-        (id, stream_rx, rx)
+        Ok((id, stream_rx, rx))
     }
 
     pub fn queue_len(&self) -> usize {
@@ -299,23 +347,29 @@ struct Slot {
     next_feed: u32,
 }
 
-/// The continuous-batching engine loop.
+/// The continuous-batching engine loop over the paged KV pool.
 fn continuous_loop(
     model: Model, queue: Arc<(Mutex<Queue>, Condvar)>,
     stop: Arc<AtomicBool>, policy: ServePolicy,
     stats: Arc<Mutex<EngineStats>>,
 ) {
-    let cap = policy.max_context;
-    let mut cache = BatchKvCache::new(&model, policy.slots, cap);
+    let mut cache = PagedKvCache::new(
+        &model, policy.slots, policy.kv_blocks, policy.kv_block_size,
+    );
     let mut slots: Vec<Option<Slot>> =
         (0..policy.slots).map(|_| None).collect();
     let mut active = 0usize;
-    let model = &model;
-    // fallback requests are served on scoped side threads (the model is
-    // only ever read), so an oversized prompt never stalls the engine;
-    // the scope joins any still-running fallbacks on shutdown
-    std::thread::scope(|scope| loop {
-        // ---- admission: pull queued requests into free slots ----------
+    enum Admit {
+        /// answered or installed this wave
+        Take,
+        /// worst case exceeds the whole pool: can never be served
+        Reject,
+        /// head of the queue waits for blocks / a slot to free up
+        Wait,
+    }
+    loop {
+        // ---- admission: pull queued requests in FIFO order while the
+        // block budget and slot pool cover them ------------------------
         let admitted: Vec<Pending> = {
             let (lock, cv) = &*queue;
             let mut q = lock.lock().unwrap();
@@ -328,13 +382,62 @@ fn continuous_loop(
                     .unwrap();
                 q = qq;
             }
-            let take = (policy.slots - active).min(q.items.len());
-            q.items.drain(..take).collect()
+            let mut take = Vec::new();
+            let mut budget = cache.available_blocks();
+            let mut free_slots = policy.slots - active;
+            loop {
+                let decision = match q.items.front() {
+                    None => break,
+                    Some(p) if p.req.max_new == 0
+                        || p.req.prompt.is_empty() =>
+                    {
+                        // degenerate: answered without a slot or blocks
+                        Admit::Take
+                    }
+                    Some(p) => {
+                        let need = cache.blocks_for(kv_positions_needed(
+                            p.req.prompt.len(),
+                            p.req.max_new,
+                        ));
+                        if need > cache.num_blocks {
+                            Admit::Reject
+                        } else if free_slots == 0 || need > budget {
+                            Admit::Wait
+                        } else {
+                            budget -= need;
+                            free_slots -= 1;
+                            Admit::Take
+                        }
+                    }
+                };
+                match decision {
+                    Admit::Take => {
+                        take.push(q.items.pop_front().unwrap());
+                    }
+                    Admit::Reject => {
+                        // unreachable through submit (which validates
+                        // against the pool), kept as a safety net so a
+                        // broken invariant degrades to a dropped
+                        // channel instead of an admission livelock
+                        let p = q.items.pop_front().unwrap();
+                        log::warn!(
+                            "request {} needs more KV than the whole \
+                             pool ({} blocks); rejecting",
+                            p.req.id,
+                            cache.num_blocks
+                        );
+                    }
+                    Admit::Wait => break, // FIFO: keep arrival order
+                }
+            }
+            take
         };
         for p in admitted {
             // queue time ends here, at dequeue — measured exactly once
             let queue_ms = p.enqueued.elapsed().as_secs_f64() * 1e3;
-            if p.req.max_new == 0 {
+            if p.req.max_new == 0 || p.req.prompt.is_empty() {
+                // nothing to generate — an empty prompt has no logits
+                // to sample (see `argmax`): empty completion, no slot
                 let _ = p.tx.send(Completion {
                     id: p.req.id,
                     tokens: Vec::new(),
@@ -344,20 +447,14 @@ fn continuous_loop(
                 });
                 continue;
             }
-            // needs prompt + max_new - 1 KV positions; oversized or
-            // degenerate requests take the sequential fallback
-            if p.req.prompt.is_empty()
-                || p.req.prompt.len() + p.req.max_new > cap + 1
-            {
-                stats.lock().unwrap().fallbacks += 1;
-                scope.spawn(move || serve_one(model, p, queue_ms));
-                continue;
-            }
             let si = slots
                 .iter()
                 .position(|s| s.is_none())
                 .expect("admission beyond free slots");
-            cache.reset_slot(si);
+            cache.reserve(
+                si,
+                kv_positions_needed(p.req.prompt.len(), p.req.max_new),
+            );
             // a true backfill: some already-admitted sequence has made
             // progress, i.e. this admission lands mid-decode (not in
             // the same first wave into an idle engine)
@@ -423,9 +520,11 @@ fn continuous_loop(
                 });
             }
             if slot.tokens.len() >= slot.p.req.max_new {
-                // finished: retire immediately, slot backfills next
-                // iteration (no batch barrier)
+                // finished: retire immediately — blocks go back to the
+                // free list and the slot backfills next iteration (no
+                // batch barrier)
                 let s = slots[si].take().unwrap();
+                cache.release_slot(si);
                 active -= 1;
                 let _ = s.p.tx.send(Completion {
                     id: s.p.req.id,
@@ -438,7 +537,7 @@ fn continuous_loop(
                 slot.next_feed = next;
             }
         }
-    })
+    }
 }
 
 /// Latency/throughput aggregation for the serving example + benches.
@@ -503,7 +602,8 @@ mod tests {
         ServePolicy {
             slots,
             max_wait: Duration::from_millis(2),
-            max_context: 64,
+            kv_block_size: 8,
+            kv_blocks: 64,
             mode,
         }
     }
@@ -513,7 +613,7 @@ mod tests {
         let model = toy_model(FfnBackend::Dense);
         let reference = model.generate(&[1, 2, 3], 4);
         let server = Server::start(model, ServePolicy::default());
-        let (_, rx) = server.submit(vec![1, 2, 3], 4);
+        let (_, rx) = server.submit(vec![1, 2, 3], 4).unwrap();
         let c = rx.recv_timeout(Duration::from_secs(30)).unwrap();
         assert_eq!(c.tokens, reference);
         assert_eq!(c.prefill_tokens, 3);
@@ -528,7 +628,7 @@ mod tests {
             let model = toy_model(FfnBackend::Dense);
             let server = Server::start(model, policy(2, mode));
             let rxs: Vec<_> = (0..6u32)
-                .map(|i| server.submit(vec![i % 32, 3], 4).1)
+                .map(|i| server.submit(vec![i % 32, 3], 4).unwrap().1)
                 .collect();
             for rx in rxs {
                 let c = rx.recv_timeout(Duration::from_secs(60)).unwrap();
@@ -547,7 +647,8 @@ mod tests {
         let server = Server::start(model, policy(4, ServeMode::Continuous));
         let mut rxs = Vec::new();
         for i in 0..20u32 {
-            let (id, rx) = server.submit(vec![i % 32, (i + 1) % 32], 3);
+            let (id, rx) =
+                server.submit(vec![i % 32, (i + 1) % 32], 3).unwrap();
             rxs.push((id, rx));
         }
         for (id, rx) in rxs {
@@ -583,7 +684,7 @@ mod tests {
         let rxs: Vec<_> = prompts
             .iter()
             .zip(max_news)
-            .map(|(p, n)| server.submit(p.clone(), n).1)
+            .map(|(p, n)| server.submit(p.clone(), n).unwrap().1)
             .collect();
         for (rx, exp) in rxs.into_iter().zip(&expected) {
             let c = rx.recv_timeout(Duration::from_secs(60)).unwrap();
@@ -607,7 +708,7 @@ mod tests {
         let model = toy_model(FfnBackend::Dense);
         let reference = model.generate(&[5, 7], 4);
         let server = Server::start(model, policy(4, ServeMode::Sequential));
-        let (_, rx) = server.submit(vec![5, 7], 4);
+        let (_, rx) = server.submit(vec![5, 7], 4).unwrap();
         let c = rx.recv_timeout(Duration::from_secs(30)).unwrap();
         assert_eq!(c.tokens, reference);
         server.shutdown();
@@ -624,7 +725,7 @@ mod tests {
             (0..6).map(|i| model.generate(&[3, 1], 2 + i)).collect();
         let server = Server::start(model, policy(2, ServeMode::Continuous));
         let rxs: Vec<_> =
-            (0..6).map(|i| server.submit(vec![3, 1], 2 + i).1).collect();
+            (0..6).map(|i| server.submit(vec![3, 1], 2 + i).unwrap().1).collect();
         for (rx, exp) in rxs.into_iter().zip(&expected) {
             let c = rx.recv_timeout(Duration::from_secs(60)).unwrap();
             assert_eq!(&c.tokens, exp);
@@ -643,7 +744,8 @@ mod tests {
         let model = toy_model(FfnBackend::Dense);
         let reference = model.generate(&[2, 9, 4], 6);
         let server = Server::start(model, ServePolicy::default());
-        let (id, tok_rx, rx) = server.submit_streaming(vec![2, 9, 4], 6);
+        let (id, tok_rx, rx) =
+            server.submit_streaming(vec![2, 9, 4], 6).unwrap();
         let c = rx.recv_timeout(Duration::from_secs(30)).unwrap();
         let streamed: Vec<Token> = tok_rx.try_iter().collect();
         assert_eq!(c.tokens, reference);
@@ -657,17 +759,138 @@ mod tests {
     }
 
     #[test]
-    fn oversized_request_takes_sequential_fallback() {
+    fn long_prompt_served_by_paged_engine_without_fallback() {
+        // the acceptance criterion: a request needing more positions
+        // than a fixed per-slot share would hold (72 > 128/2 = 64, the
+        // old design's max_context) is served by the paged continuous
+        // engine itself — bit-exact with generate, zero fallbacks —
+        // because it borrows blocks the idle slot isn't using
         let model = toy_model(FfnBackend::Dense);
         let long_prompt: Vec<u32> = (0..70).map(|i| i % 32).collect();
         let reference = model.generate(&long_prompt, 3);
-        // max_context 64 < 70 + 3 - 1 => fallback path
-        let server = Server::start(model, policy(2, ServeMode::Continuous));
-        let (_, rx) = server.submit(long_prompt, 3);
+        let server = Server::start(model, ServePolicy {
+            slots: 2,
+            max_wait: Duration::from_millis(2),
+            kv_block_size: 8,
+            kv_blocks: 16, // 128 positions pool-wide
+            mode: ServeMode::Continuous,
+        });
+        let (_, rx) = server.submit(long_prompt, 3).unwrap();
         let c = rx.recv_timeout(Duration::from_secs(60)).unwrap();
         assert_eq!(c.tokens, reference);
-        assert_eq!(server.stats().fallbacks, 1);
+        assert_eq!(server.stats().fallbacks, 0);
         server.shutdown();
+    }
+
+    #[test]
+    fn empty_prompt_gets_empty_completion() {
+        // an empty prompt produces no logits, so there is nothing to
+        // argmax — the old code fabricated token 0; both scheduler
+        // modes must now answer with an empty completion
+        for mode in [ServeMode::Sequential, ServeMode::Continuous] {
+            let model = toy_model(FfnBackend::Dense);
+            let server = Server::start(model, policy(2, mode));
+            let (id, rx) = server.submit(Vec::new(), 4).unwrap();
+            let c = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+            assert_eq!(c.id, id);
+            assert!(c.tokens.is_empty(),
+                    "{mode:?}: fabricated tokens {:?}", c.tokens);
+            assert_eq!(c.prefill_tokens, 0);
+            server.shutdown();
+        }
+    }
+
+    #[test]
+    fn request_at_exact_pool_capacity_is_served() {
+        // kv_positions_needed(13, 4) = 16 = 4 blocks of 4: fills the
+        // pool exactly; an off-by-one in either the allocator or the
+        // admission bound would reject or overflow it
+        let model = toy_model(FfnBackend::Dense);
+        let prompt: Vec<u32> = (0..13).map(|i| i % 32).collect();
+        let reference = model.generate(&prompt, 4);
+        let server = Server::start(model, ServePolicy {
+            slots: 2,
+            max_wait: Duration::from_millis(2),
+            kv_block_size: 4,
+            kv_blocks: 4,
+            mode: ServeMode::Continuous,
+        });
+        let (_, rx) = server.submit(prompt, 4).unwrap();
+        let c = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        assert_eq!(c.tokens, reference);
+        server.shutdown();
+    }
+
+    #[test]
+    fn admission_waits_for_free_blocks_instead_of_panicking() {
+        // each request needs kv_positions_needed(2, 6) = 7 positions =
+        // 2 blocks of 4; the pool holds 3 blocks, so only one request
+        // fits at a time even though 4 slots exist — later admissions
+        // must wait for retiring sequences to free blocks, not panic
+        // or overcommit
+        let model = toy_model(FfnBackend::Dense);
+        let expected: Vec<Vec<u32>> = (0..5u32)
+            .map(|i| model.generate(&[i % 32, 3], 6))
+            .collect();
+        let server = Server::start(model, ServePolicy {
+            slots: 4,
+            max_wait: Duration::from_millis(2),
+            kv_block_size: 4,
+            kv_blocks: 3,
+            mode: ServeMode::Continuous,
+        });
+        let rxs: Vec<_> = (0..5u32)
+            .map(|i| server.submit(vec![i % 32, 3], 6).unwrap().1)
+            .collect();
+        for (rx, exp) in rxs.into_iter().zip(&expected) {
+            let c = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+            assert_eq!(&c.tokens, exp);
+        }
+        let st = server.stats();
+        assert_eq!(st.admissions, 5);
+        assert_eq!(st.max_active, 1,
+                   "block budget must serialize admissions");
+        server.shutdown();
+    }
+
+    #[test]
+    fn impossible_request_rejected_at_submit() {
+        // worst case beyond the whole pool (64 blocks x 8 = 512
+        // positions) can never be admitted: submit must say so rather
+        // than queue the request forever or drop its channel silently
+        let model = toy_model(FfnBackend::Dense);
+        let server = Server::start(model, policy(2, ServeMode::Continuous));
+        let err = server.submit(vec![1], 600).unwrap_err();
+        assert!(err.to_string().contains("KV positions"), "{err}");
+        // a request that exactly fits is still accepted
+        assert!(server.submit(vec![1], 512).is_ok());
+        // degenerate requests use no KV: exempt from the bound (the
+        // engine answers them with an empty completion immediately)
+        let (_, rx) = server.submit(Vec::new(), 600).unwrap();
+        assert!(rx
+            .recv_timeout(Duration::from_secs(30))
+            .unwrap()
+            .tokens
+            .is_empty());
+        server.shutdown();
+    }
+
+    #[test]
+    fn shutdown_drains_queued_requests() {
+        // shutdown while requests are still queued: the worker drains
+        // the queue before exiting, so every receiver gets its
+        // completion (shutdown joins the worker, hence the short
+        // post-shutdown recv timeout)
+        let model = toy_model(FfnBackend::Dense);
+        let expected = model.generate(&[1, 2], 3);
+        let server = Server::start(model, policy(1, ServeMode::Continuous));
+        let rxs: Vec<_> =
+            (0..4).map(|_| server.submit(vec![1, 2], 3).unwrap().1).collect();
+        server.shutdown();
+        for rx in rxs {
+            let c = rx.recv_timeout(Duration::from_secs(1)).unwrap();
+            assert_eq!(c.tokens, expected);
+        }
     }
 
     #[test]
@@ -694,9 +917,10 @@ mod tests {
             );
             let rxs: Vec<_> = prompts
                 .into_iter()
-                .map(|p| server.submit(p, 2).1)
+                .map(|p| server.submit(p, 2).map(|r| r.1))
                 .collect();
             for (rx, exp) in rxs.into_iter().zip(&expected) {
+                let rx = rx.map_err(|e| format!("submit: {e}"))?;
                 let c = rx
                     .recv_timeout(Duration::from_secs(60))
                     .map_err(|e| format!("timeout: {e}"))?;

@@ -84,8 +84,14 @@ pub fn linfit(xs: &[f64], ys: &[f64]) -> (f64, f64) {
 }
 
 /// Fixed-width histogram over [lo, hi); values outside are clamped.
+/// A degenerate range (`hi <= lo`) has zero bin width — there is no
+/// meaningful binning, so the histogram is all zeros rather than
+/// letting the NaN/inf division silently dump every value into bin 0.
 pub fn histogram(xs: &[f64], lo: f64, hi: f64, bins: usize) -> Vec<usize> {
     let mut h = vec![0usize; bins];
+    if bins == 0 || hi <= lo {
+        return h;
+    }
     let w = (hi - lo) / bins as f64;
     for &x in xs {
         let b = (((x - lo) / w) as isize).clamp(0, bins as isize - 1);
@@ -143,5 +149,14 @@ mod tests {
         let xs = [0.1, 0.2, 0.9, 1.5, -3.0];
         let h = histogram(&xs, 0.0, 1.0, 2);
         assert_eq!(h, vec![3, 2]); // -3 clamps to bin 0, 1.5 to bin 1
+    }
+
+    #[test]
+    fn histogram_degenerate_range_is_all_zero() {
+        // hi == lo used to divide by a zero bin width (NaN cast landed
+        // everything in bin 0); now the histogram is explicitly empty
+        assert_eq!(histogram(&[1.0, 2.0, 3.0], 2.0, 2.0, 4), vec![0; 4]);
+        assert_eq!(histogram(&[1.0], 5.0, 1.0, 3), vec![0; 3]); // hi < lo
+        assert!(histogram(&[1.0], 0.0, 1.0, 0).is_empty());
     }
 }
