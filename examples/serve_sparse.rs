@@ -6,7 +6,7 @@
 //!
 //! Run: cargo run --release --example serve_sparse -- \
 //!        [--run e2e_s] [--slots 8] [--requests 24] [--max-new 12] \
-//!        [--kv-blocks 128] [--kv-block-size 16]
+//!        [--kv-blocks 128] [--kv-block-size 16] [--prefill-chunk 16]
 //! (trains a quick tiny model if the run does not exist yet)
 
 use std::time::{Duration, Instant};
@@ -29,6 +29,9 @@ fn main() -> anyhow::Result<()> {
     // paged KV pool: shared by all slots, sized in blocks
     let kv_block_size = args.get_usize("kv-block-size", 16)?;
     let kv_blocks = args.get_usize("kv-blocks", 128)?;
+    // prompt tokens fed per prefilling slot per engine iteration;
+    // defaults to one KV block
+    let prefill_chunk = args.get_usize("prefill-chunk", kv_block_size)?;
     let paths = default_paths();
     let dir = paths.run_dir(&run);
     if !dir.join("checkpoint.bin").exists() {
@@ -63,6 +66,7 @@ fn main() -> anyhow::Result<()> {
                 max_wait: Duration::from_millis(5),
                 kv_block_size,
                 kv_blocks,
+                prefill_chunk,
                 mode,
             };
             let server = Server::start(model, policy);
@@ -83,12 +87,15 @@ fn main() -> anyhow::Result<()> {
             let stats = server.stats();
             println!(
                 "{label:>6} {:<22} {n_requests} reqs: p50 {:.1} ms, \
-                 p95 {:.1} ms, {:.0} tok/s ({} backfills)",
+                 p95 {:.1} ms, ttft p50 {:.1} ms, {:.0} tok/s \
+                 ({} backfills, {} prefill chunks)",
                 format!("{mode:?}/{eff_slots} slots"),
                 metrics.p50_ms(),
                 metrics.p95_ms(),
+                metrics.p50_first_token_ms(),
                 metrics.throughput_tok_s(wall),
                 stats.backfilled,
+                stats.prefill_chunks,
             );
             server.shutdown();
         }
@@ -101,6 +108,7 @@ fn main() -> anyhow::Result<()> {
         max_wait: Duration::from_millis(5),
         kv_block_size,
         kv_blocks,
+        prefill_chunk,
         mode: ServeMode::Continuous,
     });
     let (_, tok_rx, done_rx) =

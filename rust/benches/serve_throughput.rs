@@ -1,12 +1,16 @@
 //! Continuous-batching serving throughput: tokens/sec and p50/p95
-//! request latency vs KV slot count (1/4/8/16), for both FFN backends.
+//! request latency vs KV slot count (1/4/8/16), for both FFN backends,
+//! plus a time-to-first-token sweep over the prefill chunk size on
+//! long prompts (4x the KV block).
 //!
-//! The claim under test is the ISSUE's acceptance criterion (and the
-//! Polar-Sparsity shape): decode throughput grows with the number of
-//! slots because `decode_step_batch` hands the FFN backends a
-//! `(B_active, d)` activation matrix, amortizing the gate + fused
-//! kernels across concurrent sequences — tokens/sec should increase
-//! monotonically 1 → 8 slots for the TwELL backend.
+//! Two claims under test: decode throughput grows with the number of
+//! slots because the batched step hands the FFN backends a multi-row
+//! activation matrix, amortizing the gate + fused kernels across
+//! concurrent sequences (tokens/sec should increase monotonically
+//! 1 → 8 slots for the TwELL backend); and block-granular chunked
+//! prefill collapses TTFT on long prompts versus the token-by-token
+//! baseline, since prefill finishes in ceil(L / chunk) engine
+//! iterations instead of L.
 //!
 //! Prints the usual paper-style table plus one machine-readable JSON
 //! line (`{"bench": "serve_throughput", "rows": [...]}`), and persists
@@ -76,15 +80,16 @@ fn synthetic_model(layers: usize, target_nnz: f64, backend: FfnBackend)
     }
 }
 
-/// One serving wave; returns (tok/s, p50 ms, p95 ms, backfills).
+/// One serving wave; returns (tok/s, p50 ms, p95 ms, TTFT p50 ms,
+/// backfills).
 fn run_wave(backend: FfnBackend, slots: usize, n_requests: usize,
-            prompt_len: usize, max_new: usize)
-    -> (f64, f64, f64, u64) {
+            prompt_len: usize, max_new: usize, kv_block_size: usize,
+            prefill_chunk: usize)
+    -> (f64, f64, f64, f64, u64) {
     let model = synthetic_model(4, 30.0, backend);
     let vocab = model.cfg.vocab_size;
     // paged KV pool sized so every slot can hold one request's worst
     // case at once (the bench measures batching, not memory pressure)
-    let kv_block_size = 16;
     let kv_blocks = slots
         * kv_positions_needed(prompt_len, max_new).div_ceil(kv_block_size);
     let server = Server::start(model, ServePolicy {
@@ -92,6 +97,7 @@ fn run_wave(backend: FfnBackend, slots: usize, n_requests: usize,
         max_wait: Duration::from_millis(2),
         kv_block_size,
         kv_blocks,
+        prefill_chunk,
         mode: ServeMode::Continuous,
     });
     let t0 = Instant::now();
@@ -114,45 +120,58 @@ fn run_wave(backend: FfnBackend, slots: usize, n_requests: usize,
         metrics.throughput_tok_s(wall),
         metrics.p50_ms(),
         metrics.p95_ms(),
+        metrics.p50_first_token_ms(),
         stats.backfilled,
     );
     server.shutdown();
     out
 }
 
+fn backend_label(backend: FfnBackend) -> &'static str {
+    match backend {
+        FfnBackend::Dense => "dense",
+        FfnBackend::Twell => "twell",
+    }
+}
+
 fn main() {
     let (n_requests, prompt_len, max_new) = (32, 8, 16);
+    let kv_block_size = 16usize;
     println!("== continuous-batching serve throughput ==");
     println!(
         "synthetic 4L d=128 f=352 model, nnz≈30; {n_requests} requests, \
          prompt {prompt_len}, max_new {max_new}\n"
     );
     let mut table = Table::new(&[
-        "backend", "slots", "tok/s", "p50 ms", "p95 ms", "backfills",
+        "backend", "slots", "tok/s", "p50 ms", "p95 ms", "ttft p50",
+        "backfills",
     ]);
     let mut rows = Vec::new();
     for backend in [FfnBackend::Dense, FfnBackend::Twell] {
-        let label = match backend {
-            FfnBackend::Dense => "dense",
-            FfnBackend::Twell => "twell",
-        };
+        let label = backend_label(backend);
         for &slots in &[1usize, 4, 8, 16] {
-            let (tok_s, p50, p95, backfills) =
-                run_wave(backend, slots, n_requests, prompt_len, max_new);
+            let (tok_s, p50, p95, ttft, backfills) = run_wave(
+                backend, slots, n_requests, prompt_len, max_new,
+                kv_block_size, kv_block_size,
+            );
             table.row(&[
                 label.to_string(),
                 slots.to_string(),
                 format!("{tok_s:.0}"),
                 format!("{p50:.1}"),
                 format!("{p95:.1}"),
+                format!("{ttft:.1}"),
                 backfills.to_string(),
             ]);
             rows.push(Json::obj(vec![
                 ("backend", Json::str(label)),
                 ("slots", Json::Num(slots as f64)),
+                ("prompt_len", Json::Num(prompt_len as f64)),
+                ("prefill_chunk", Json::Num(kv_block_size as f64)),
                 ("tok_s", Json::Num(tok_s)),
                 ("p50_ms", Json::Num(p50)),
                 ("p95_ms", Json::Num(p95)),
+                ("first_token_ms", Json::Num(ttft)),
                 ("backfills", Json::Num(backfills as f64)),
             ]));
         }
@@ -162,6 +181,57 @@ fn main() {
         "\nshape check: tokens/sec should rise monotonically 1 -> 8 \
          slots (batched decode amortizes the FFN kernels); p50 rises \
          slowly with slots while total wall time collapses."
+    );
+
+    // ---- TTFT vs prefill chunk: long prompts (4x the KV block) through
+    // chunk 1 (the old token-by-token prefill baseline), one block per
+    // step (the default), and whole-prompt chunks ------------------------
+    let (ttft_requests, long_prompt, ttft_max_new, ttft_slots) =
+        (16usize, 4 * kv_block_size, 8usize, 4usize);
+    println!(
+        "\n== time-to-first-token vs prefill chunk ==\n\
+         prompt {long_prompt} (4x the {kv_block_size}-position KV \
+         block), {ttft_requests} requests, max_new {ttft_max_new}, \
+         {ttft_slots} slots; chunk 1 is the single-token-prefill \
+         baseline\n"
+    );
+    let mut ttft_table = Table::new(&[
+        "backend", "chunk", "ttft p50 ms", "p50 ms", "tok/s",
+    ]);
+    for backend in [FfnBackend::Dense, FfnBackend::Twell] {
+        let label = backend_label(backend);
+        for &prefill_chunk in &[1usize, kv_block_size, long_prompt] {
+            let (tok_s, p50, p95, ttft, backfills) = run_wave(
+                backend, ttft_slots, ttft_requests, long_prompt,
+                ttft_max_new, kv_block_size, prefill_chunk,
+            );
+            ttft_table.row(&[
+                label.to_string(),
+                prefill_chunk.to_string(),
+                format!("{ttft:.1}"),
+                format!("{p50:.1}"),
+                format!("{tok_s:.0}"),
+            ]);
+            // same row schema as the slot sweep above, so trajectory
+            // tooling can index every row uniformly
+            rows.push(Json::obj(vec![
+                ("backend", Json::str(label)),
+                ("slots", Json::Num(ttft_slots as f64)),
+                ("prompt_len", Json::Num(long_prompt as f64)),
+                ("prefill_chunk", Json::Num(prefill_chunk as f64)),
+                ("tok_s", Json::Num(tok_s)),
+                ("p50_ms", Json::Num(p50)),
+                ("p95_ms", Json::Num(p95)),
+                ("first_token_ms", Json::Num(ttft)),
+                ("backfills", Json::Num(backfills as f64)),
+            ]));
+        }
+    }
+    ttft_table.print();
+    println!(
+        "\nshape check: ttft p50 should drop sharply from chunk 1 to \
+         one block per step — prefill takes ceil(L / chunk) engine \
+         iterations instead of L."
     );
     let report = Json::obj(vec![
         ("bench", Json::str("serve_throughput")),

@@ -214,6 +214,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let max_wait_ms = args.get_f64("max-wait-ms", 5.0)?;
     let kv_block_size = args.get_usize("kv-block-size", 16)?;
     let kv_blocks = args.get_usize("kv-blocks", 256)?;
+    // prompt tokens fed per prefilling slot per engine iteration;
+    // defaults to one KV block (1 = legacy token-by-token prefill)
+    let prefill_chunk =
+        args.get_usize("prefill-chunk", kv_block_size)?;
     let mode = match args.get_or("mode", "continuous").as_str() {
         "seq" | "sequential" => repro::serve::ServeMode::Sequential,
         "continuous" => repro::serve::ServeMode::Continuous,
@@ -231,6 +235,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         max_wait: std::time::Duration::from_secs_f64(max_wait_ms / 1e3),
         kv_block_size,
         kv_blocks,
+        prefill_chunk,
         mode,
     };
     let server = repro::serve::Server::start(model, policy);
@@ -259,11 +264,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     for rx in rxs {
         let c = rx.recv().context("worker dropped")?;
         println!(
-            "req {} ({} prefill): {:?} [queue {:.1} ms, total {:.1} ms]",
+            "req {} ({} prefill): {:?} [queue {:.1} ms, first token \
+             {:.1} ms, total {:.1} ms]",
             c.id,
             c.prefill_tokens,
             bpe.decode(&c.tokens),
             c.queue_ms,
+            c.first_token_ms,
             c.total_ms
         );
         metrics.record(c);
@@ -272,20 +279,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let stats = server.stats();
     println!(
         "served {n_requests} requests ({mode:?}, {slots} slots, \
-         {kv_blocks} KV blocks x {kv_block_size} positions): \
-         p50 {:.1} ms, p95 {:.1} ms, p99 {:.1} ms, {:.0} tok/s",
+         {kv_blocks} KV blocks x {kv_block_size} positions, prefill \
+         chunk {prefill_chunk}): p50 {:.1} ms, p95 {:.1} ms, p99 \
+         {:.1} ms, ttft p50 {:.1} ms, {:.0} tok/s",
         metrics.p50_ms(),
         metrics.p95_ms(),
         metrics.p99_ms(),
+        metrics.p50_first_token_ms(),
         metrics.throughput_tok_s(wall)
     );
     println!(
-        "engine: {} steps, {} admissions ({} backfilled), \
-         max active {}, {} fallbacks",
+        "engine: {} steps, {} prefill chunks, {} admissions \
+         ({} backfilled), max active {}, {} abandoned, {} fallbacks",
         stats.steps,
+        stats.prefill_chunks,
         stats.admissions,
         stats.backfilled,
         stats.max_active,
+        stats.abandoned,
         stats.fallbacks
     );
     server.shutdown();

@@ -14,12 +14,14 @@
 //!   list as tokens are actually written and returned when the sequence
 //!   retires, so short and long requests share physical KV memory
 //!   instead of each stranding a fixed `max_context` region.  One
-//!   `decode_step_batch` call advances every active slot at its own
-//!   position in a single pass, so RMSNorm/QKV/RoPE/attention and —
-//!   crucially — the FFN backends run over a `(B_active, d)` activation
-//!   matrix.  Every kernel on the path computes output rows
-//!   independently, so batched paged decode is bit-exact with the
-//!   sequential path (see the parity tests below).
+//!   `prefill_decode_step` call advances every active slot by a token
+//!   *span* — a multi-token prompt chunk during prefill, one sampled
+//!   token during decode (`decode_step_batch` is the all-spans-length-1
+//!   case) — in a single pass, so RMSNorm/QKV/RoPE/attention and —
+//!   crucially — the FFN backends run over a `(sum of span lengths, d)`
+//!   activation matrix.  Every kernel on the path computes output rows
+//!   independently, so batched paged decode and chunked prefill are
+//!   bit-exact with the sequential path (see the parity tests below).
 //!
 //! Admission bookkeeping: `reserve` earmarks a slot's worst-case block
 //! count up front (the scheduler admits only when `available_blocks`
@@ -164,6 +166,7 @@ impl Model {
         let pos = cache.len;
         let mut x = Mat::zeros(1, d);
         x.row_mut(0).copy_from_slice(self.embed.row(token as usize));
+        let mut scores = Vec::new();
         for (li, layer) in self.layers.iter().enumerate() {
             let normed = super::rmsnorm(&x, &layer.ln_attn,
                                         self.cfg.rmsnorm_eps);
@@ -176,7 +179,7 @@ impl Model {
             cache.v[li].row_mut(pos).copy_from_slice(v.row(0));
             let mut attn = Mat::zeros(1, d);
             attend_one(q.row(0), &cache.k[li], &cache.v[li], |t| t, pos, h,
-                       dh, attn.row_mut(0));
+                       dh, attn.row_mut(0), &mut scores);
             let attn_out = dense::matmul(&attn, &layer.wo);
             super::add_inplace(&mut x, &attn_out);
             let normed = super::rmsnorm(&x, &layer.ln_ffn,
@@ -190,90 +193,151 @@ impl Model {
         logits.data
     }
 
-    /// Advance every active slot by one token in a single batched pass.
+    /// Advance every active slot by one token in a single batched pass
+    /// — the all-spans-length-1 case of `prefill_decode_step`.
     ///
     /// `active` holds `(slot, token)` pairs — distinct slots, each fed at
     /// its *own* position (`cache.len[slot]`).  Returns the next-token
-    /// logits as a `(B_active, vocab)` matrix in the same order.  The
-    /// dense and TwELL FFN backends both see the full `(B_active, d)`
-    /// activation matrix, which is the whole point of continuous
-    /// batching for the sparse pipeline.  K/V rows land in paged
-    /// storage: each step may pull a fresh block from the free list
-    /// (covered by the slot's reservation), and reads resolve through
-    /// the slot's block table instead of a contiguous stride — the
-    /// table walk is done once per step, up front.
+    /// logits as a `(B_active, vocab)` matrix in the same order.
     pub fn decode_step_batch(
         &self, cache: &mut PagedKvCache, active: &[(usize, u32)],
     ) -> Mat {
-        let b = active.len();
-        assert!(b > 0, "decode_step_batch with no active slots");
-        for (i, &(slot, _)) in active.iter().enumerate() {
+        let toks: Vec<[u32; 1]> = active.iter().map(|&(_, t)| [t]).collect();
+        let feeds: Vec<(usize, &[u32])> = active
+            .iter()
+            .zip(&toks)
+            .map(|(&(slot, _), tok)| (slot, &tok[..]))
+            .collect();
+        self.prefill_decode_step(cache, &feeds)
+    }
+
+    /// One engine iteration over per-slot token *spans*: each `(slot,
+    /// span)` entry feeds `span.len()` consecutive tokens starting at
+    /// the slot's current position — a prompt chunk during prefill, a
+    /// single sampled token during decode.  Returns one logits row per
+    /// entry: the next-token logits after that entry's *last* span
+    /// token, in feed order.
+    ///
+    /// Attention is causal within the chunk: span token `j` (logical
+    /// position `start + j`) attends over all cached history plus span
+    /// tokens `0..=j`, whose K/V rows are written — whole blocks at a
+    /// time for block-sized chunks — into paged storage before the
+    /// layer's attention loop reads them back.  Every kernel on the
+    /// path computes its output rows independently, so chunked prefill
+    /// is bit-exact with feeding the same tokens one step at a time
+    /// (the parity tests below are the contract).  The dense and TwELL
+    /// FFN backends see the full `(sum of span lengths, d)` activation
+    /// matrix, which is where the sparse kernels amortize best.
+    pub fn prefill_decode_step(
+        &self, cache: &mut PagedKvCache, feeds: &[(usize, &[u32])],
+    ) -> Mat {
+        assert!(!feeds.is_empty(), "prefill_decode_step with no feeds");
+        for (i, &(slot, span)) in feeds.iter().enumerate() {
             assert!(slot < cache.slots, "slot {slot} out of range");
-            assert!(cache.len[slot]
-                        < cache.reserved[slot] * cache.block_size,
+            assert!(!span.is_empty(), "slot {slot} fed an empty span");
+            assert!(cache.len[slot] + span.len()
+                        <= cache.reserved[slot] * cache.block_size,
                     "slot {slot} kv full (reserve before decoding)");
-            for &(other, _) in &active[i + 1..] {
-                assert_ne!(slot, other, "duplicate slot in active set");
+            for &(other, _) in &feeds[i + 1..] {
+                assert_ne!(slot, other, "duplicate slot in feed set");
             }
         }
         let d = self.cfg.d_model;
         let h = self.cfg.n_heads;
         let dh = self.cfg.head_dim();
-        // resolve each slot's physical rows once per step: the block
-        // tables are fixed for the rest of the step (the current
-        // position's block is allocated here) and shared by every layer
-        // and head, so the attention loop below does plain indexed
-        // loads instead of per-access div/mod table walks
-        let row_lists: Vec<Vec<usize>> = active
+        // per entry: the slot's start position, its row offset into the
+        // packed (sum of span lengths, d) activation matrix, and the
+        // physical row of every logical position it can attend to
+        // (history + its own span).  Block tables are resolved once per
+        // step — the span's blocks are allocated here, covered by the
+        // slot's reservation — and shared by every layer and head, so
+        // the attention loop below does plain indexed loads instead of
+        // per-access div/mod table walks.
+        let mut offsets = Vec::with_capacity(feeds.len());
+        let mut total = 0usize;
+        for &(_, span) in feeds {
+            offsets.push(total);
+            total += span.len();
+        }
+        let starts: Vec<usize> =
+            feeds.iter().map(|&(slot, _)| cache.len[slot]).collect();
+        let row_lists: Vec<Vec<usize>> = feeds
             .iter()
-            .map(|&(slot, _)| {
-                let pos = cache.len[slot];
-                cache.ensure_block(slot, pos);
+            .zip(&starts)
+            .map(|(&(slot, span), &start)| {
+                for pos in start..start + span.len() {
+                    cache.ensure_block(slot, pos);
+                }
                 let bs = cache.block_size;
                 let table = &cache.tables[slot];
-                (0..=pos).map(|t| table[t / bs] * bs + t % bs).collect()
+                (0..start + span.len())
+                    .map(|t| table[t / bs] * bs + t % bs)
+                    .collect()
             })
             .collect();
-        let mut x = Mat::zeros(b, d);
-        for (i, &(_, tok)) in active.iter().enumerate() {
-            x.row_mut(i).copy_from_slice(self.embed.row(tok as usize));
+        let mut x = Mat::zeros(total, d);
+        for (&(_, span), &off) in feeds.iter().zip(&offsets) {
+            for (j, &tok) in span.iter().enumerate() {
+                x.row_mut(off + j)
+                    .copy_from_slice(self.embed.row(tok as usize));
+            }
         }
+        let mut scores = Vec::new();
         for (li, layer) in self.layers.iter().enumerate() {
             let normed = super::rmsnorm(&x, &layer.ln_attn,
                                         self.cfg.rmsnorm_eps);
             let mut q = dense::matmul(&normed, &layer.wq);
             let mut k = dense::matmul(&normed, &layer.wk);
             let v = dense::matmul(&normed, &layer.wv);
-            for (i, &(slot, _)) in active.iter().enumerate() {
-                let pos = cache.len[slot];
-                super::rope_row(q.row_mut(i), pos, h, dh,
-                                self.cfg.rope_theta);
-                super::rope_row(k.row_mut(i), pos, h, dh,
-                                self.cfg.rope_theta);
-                let row = row_lists[i][pos];
-                cache.k[li].row_mut(row).copy_from_slice(k.row(i));
-                cache.v[li].row_mut(row).copy_from_slice(v.row(i));
+            // RoPE + paged K/V writes for every span token, before the
+            // attention loop reads any of them back
+            for (i, &(_, span)) in feeds.iter().enumerate() {
+                for j in 0..span.len() {
+                    let r = offsets[i] + j;
+                    let pos = starts[i] + j;
+                    super::rope_row(q.row_mut(r), pos, h, dh,
+                                    self.cfg.rope_theta);
+                    super::rope_row(k.row_mut(r), pos, h, dh,
+                                    self.cfg.rope_theta);
+                    let prow = row_lists[i][pos];
+                    cache.k[li].row_mut(prow).copy_from_slice(k.row(r));
+                    cache.v[li].row_mut(prow).copy_from_slice(v.row(r));
+                }
             }
-            let mut attn = Mat::zeros(b, d);
-            for (i, &(slot, _)) in active.iter().enumerate() {
-                let pos = cache.len[slot];
+            let mut attn = Mat::zeros(total, d);
+            for (i, &(_, span)) in feeds.iter().enumerate() {
                 let rows = &row_lists[i];
-                attend_one(q.row(i), &cache.k[li], &cache.v[li],
-                           |t| rows[t], pos, h, dh, attn.row_mut(i));
+                for j in 0..span.len() {
+                    let r = offsets[i] + j;
+                    // causal: history plus span tokens 0..=j
+                    attend_one(q.row(r), &cache.k[li], &cache.v[li],
+                               |t| rows[t], starts[i] + j, h, dh,
+                               attn.row_mut(r), &mut scores);
+                }
             }
             let attn_out = dense::matmul(&attn, &layer.wo);
             super::add_inplace(&mut x, &attn_out);
             let normed = super::rmsnorm(&x, &layer.ln_ffn,
                                         self.cfg.rmsnorm_eps);
-            // the batched FFN: (B_active, d) rows through dense or TwELL
+            // the batched FFN: (sum of span lengths, d) rows through
+            // dense or TwELL
             let y = self.ffn_no_stats(layer, &normed);
             super::add_inplace(&mut x, &y);
         }
-        for &(slot, _) in active {
-            cache.len[slot] += 1;
+        for &(slot, span) in feeds {
+            cache.len[slot] += span.len();
         }
-        let x = super::rmsnorm(&x, &self.ln_final, self.cfg.rmsnorm_eps);
-        dense::matmul_nt(&x, &self.embed)
+        // logits only for each entry's last span token — the rows the
+        // scheduler samples from; row independence makes selecting
+        // before the final norm identical to norming everything first
+        let mut last = Mat::zeros(feeds.len(), d);
+        for (i, &(_, span)) in feeds.iter().enumerate() {
+            last.row_mut(i)
+                .copy_from_slice(x.row(offsets[i] + span.len() - 1));
+        }
+        let last =
+            super::rmsnorm(&last, &self.ln_final, self.cfg.rmsnorm_eps);
+        dense::matmul_nt(&last, &self.embed)
     }
 
     /// Greedy decode: prefill the prompt then emit `max_new` tokens.
@@ -295,21 +359,24 @@ pub fn kv_positions_needed(prompt_len: usize, max_new: usize) -> usize {
 /// `row_of` mapping a logical position to its physical storage row —
 /// the identity for the contiguous `KvCache`, a block-table walk for
 /// `PagedKvCache`.  The one attention inner loop both decode shapes
-/// share.
+/// share.  `scores` is caller-owned scratch, resized here and reused
+/// across heads (and across calls): this is the hottest loop in
+/// decode, and it used to heap-allocate a fresh Vec per head per step.
 fn attend_one(
     q: &[f32], kcache: &Mat, vcache: &Mat,
     row_of: impl Fn(usize) -> usize, pos: usize, heads: usize, dh: usize,
-    out: &mut [f32],
+    out: &mut [f32], scores: &mut Vec<f32>,
 ) {
     let scale = 1.0 / (dh as f32).sqrt();
+    scores.clear();
+    scores.resize(pos + 1, 0.0);
     for head in 0..heads {
         let qh = &q[head * dh..(head + 1) * dh];
-        let mut scores = Vec::with_capacity(pos + 1);
         let mut maxv = f32::NEG_INFINITY;
-        for t in 0..=pos {
+        for (t, s) in scores.iter_mut().enumerate() {
             let kh = &kcache.row(row_of(t))[head * dh..(head + 1) * dh];
             let sc = dense::dot(qh, kh) * scale;
-            scores.push(sc);
+            *s = sc;
             maxv = maxv.max(sc);
         }
         let mut z = 0f32;
@@ -504,6 +571,93 @@ mod tests {
     #[test]
     fn batched_decode_bit_exact_twell() {
         batch_parity(FfnBackend::Twell);
+    }
+
+    /// Chunked prefill must be *bit-exact* with feeding the same prompt
+    /// token-by-token, for every chunk size — including chunks that
+    /// straddle block boundaries and chunks larger than the prompt.
+    fn chunked_prefill_parity(backend: FfnBackend) {
+        let m = toy_model(backend);
+        let prompt: Vec<u32> = (0..11).map(|i| (i * 5 + 1) % 32).collect();
+        // reference: token-by-token through the single-sequence cache
+        let mut cache = KvCache::new(&m, 16);
+        let mut expect = Vec::new();
+        for &t in &prompt {
+            expect = m.decode_step(&mut cache, t);
+        }
+        for chunk in [1usize, 2, 4, 64] {
+            let mut paged = PagedKvCache::new(&m, 1, 8, 2);
+            paged.reserve(0, prompt.len());
+            let mut logits = None;
+            for span in prompt.chunks(chunk) {
+                logits =
+                    Some(m.prefill_decode_step(&mut paged, &[(0, span)]));
+            }
+            let logits = logits.unwrap();
+            assert_eq!(logits.rows, 1);
+            assert_eq!(expect.as_slice(), logits.row(0),
+                       "chunk {chunk} not bit-exact ({backend:?})");
+            assert_eq!(paged.len[0], prompt.len());
+            paged.release_slot(0);
+            assert_eq!(paged.blocks_in_use(), 0);
+        }
+    }
+
+    #[test]
+    fn chunked_prefill_bit_exact_dense() {
+        chunked_prefill_parity(FfnBackend::Dense);
+    }
+
+    #[test]
+    fn chunked_prefill_bit_exact_twell() {
+        chunked_prefill_parity(FfnBackend::Twell);
+    }
+
+    /// A ragged mixed feed — one slot prefilling multi-token chunks
+    /// while another advances token-by-token in the same matrix — must
+    /// leave both sequences exactly where independent single-sequence
+    /// decoding leaves them.
+    fn mixed_prefill_decode_parity(backend: FfnBackend) {
+        let m = toy_model(backend);
+        let long: Vec<u32> = (0..9).map(|i| (i * 3) % 32).collect();
+        let short: Vec<u32> = vec![7, 19, 2];
+        let run_ref = |toks: &[u32]| {
+            let mut c = KvCache::new(&m, 16);
+            let mut l = Vec::new();
+            for &t in toks {
+                l = m.decode_step(&mut c, t);
+            }
+            l
+        };
+        let mut paged = PagedKvCache::new(&m, 2, 16, 2);
+        paged.reserve(0, long.len());
+        paged.reserve(1, short.len());
+        let mut logits_long = Vec::new();
+        let mut logits_short = Vec::new();
+        for step in 0..3 {
+            let feeds: Vec<(usize, &[u32])> = vec![
+                (0, &long[step * 3..step * 3 + 3]),
+                (1, &short[step..step + 1]),
+            ];
+            let l = m.prefill_decode_step(&mut paged, &feeds);
+            assert_eq!(l.rows, 2);
+            logits_long = l.row(0).to_vec();
+            logits_short = l.row(1).to_vec();
+        }
+        assert_eq!(run_ref(&long), logits_long,
+                   "chunked slot diverged ({backend:?})");
+        assert_eq!(run_ref(&short), logits_short,
+                   "single-token slot diverged ({backend:?})");
+    }
+
+    #[test]
+    fn mixed_prefill_decode_bit_exact_dense() {
+        mixed_prefill_decode_parity(FfnBackend::Dense);
+    }
+
+    #[test]
+    fn mixed_prefill_decode_bit_exact_twell() {
+        mixed_prefill_decode_parity(FfnBackend::Twell);
     }
 
     #[test]

@@ -15,15 +15,24 @@
 //! FIFO order while a sequence slot is free AND the pool's block budget
 //! covers the request's worst case (`kv_positions_needed`) — under
 //! memory pressure admission *waits* for retiring sequences to return
-//! blocks rather than overcommitting — (2) advances all active slots
-//! one token with `Model::decode_step_batch`, which feeds the FFN
-//! backends a `(B_active, d)` activation matrix (the TwELL pipeline
-//! runs batched during decode), and (3) retires finished sequences
-//! immediately, returning their blocks to the free list and
-//! backfilling their slots from the queue on the next iteration (no
-//! batch barrier).  Prefill is interleaved token-by-token with decode
-//! (Orca-style iteration-level scheduling), so short and long requests
-//! share the engine without head-of-line blocking.
+//! blocks rather than overcommitting — (2) retires sequences whose
+//! caller dropped every receiver (their blocks return to the free list
+//! instead of decoding into a dead channel), (3) advances all active
+//! slots with `Model::prefill_decode_step`: a prefilling slot feeds up
+//! to `prefill_chunk` prompt tokens (one KV block by default) while a
+//! decoding slot feeds its last sampled token, so a mixed batch
+//! presents a `(sum of span lengths, d)` activation matrix to the FFN
+//! backends (the TwELL pipeline runs batched exactly where it pays
+//! most: long-prompt prefill) and writes whole blocks of K/V rows per
+//! step, and (4) retires finished sequences immediately, returning
+//! their blocks to the free list and backfilling their slots from the
+//! queue on the next iteration (no batch barrier).  Prefill is
+//! interleaved with decode chunk-by-chunk (Orca-style iteration-level
+//! scheduling), so a length-L prompt completes prefill in
+//! `ceil(L / prefill_chunk)` iterations without starving decode, and
+//! chunked prefill stays bit-exact with the token-by-token path (the
+//! parity tests are the contract).  Each `Completion` reports
+//! `first_token_ms` (TTFT), which is what chunking improves.
 //!
 //! Degenerate requests (empty prompt, or `max_new == 0`) are answered
 //! with an empty `Completion`: an empty prompt produces no logits, so
@@ -31,7 +40,7 @@
 //! *entire* pool could never be admitted, so `submit` rejects it up
 //! front with an actionable error instead of queueing it forever.
 //!
-//! Per-token streaming: `submit_streaming` returns a `Receiver<Token>`
+//! Per-token streaming: `submit_streaming` returns an `Rx<Token>`
 //! that yields each generated token as it is chosen, alongside the
 //! final `Completion`.
 //!
@@ -41,9 +50,10 @@
 //! with `Model::generate`.
 
 use std::collections::VecDeque;
+use std::ops::Deref;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, Weak};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
@@ -65,6 +75,10 @@ pub struct Completion {
     pub id: u64,
     pub tokens: Vec<u32>,
     pub queue_ms: f64,
+    /// Time from enqueue to the *first generated token* (TTFT) — the
+    /// latency prefill chunking improves.  Equals `total_ms` for empty
+    /// completions, which never sample a token.
+    pub first_token_ms: f64,
     pub total_ms: f64,
     pub prefill_tokens: usize,
 }
@@ -78,11 +92,40 @@ pub struct Token {
     pub token: u32,
 }
 
+/// Receiver handed out by `submit`/`submit_streaming`: derefs to the
+/// underlying `mpsc::Receiver` (so `recv`/`recv_timeout`/`iter` work
+/// unchanged) and additionally carries a liveness token the engine
+/// watches.  Dropping an `Rx` is how a caller abandons a request —
+/// once every receiver is gone the scheduler retires the slot early
+/// and returns its KV blocks, instead of decoding to `max_new` into a
+/// dead channel.
+pub struct Rx<T> {
+    rx: Receiver<T>,
+    _alive: Arc<()>,
+}
+
+impl<T> Deref for Rx<T> {
+    type Target = Receiver<T>;
+    fn deref(&self) -> &Receiver<T> {
+        &self.rx
+    }
+}
+
 struct Pending {
     req: Request,
     enqueued: Instant,
     tx: Sender<Completion>,
     stream: Option<Sender<Token>>,
+    /// liveness of the caller-side receivers (completion + optional
+    /// stream): when every watch fails to upgrade, nobody can observe
+    /// this request's results anymore
+    watch: Vec<Weak<()>>,
+}
+
+impl Pending {
+    fn abandoned(&self) -> bool {
+        self.watch.iter().all(|w| w.upgrade().is_none())
+    }
 }
 
 #[derive(Default)]
@@ -113,6 +156,13 @@ pub struct ServePolicy {
     /// budget is `kv_blocks * kv_block_size` positions pool-wide, not
     /// per slot.
     pub kv_blocks: usize,
+    /// Max prompt tokens fed per prefilling slot per engine iteration
+    /// (continuous mode; clamped to >= 1).  One KV block per step —
+    /// the default — is the sweet spot: block-aligned chunks keep the
+    /// paged grow path trivial, and a length-L prompt finishes prefill
+    /// in `ceil(L / prefill_chunk)` iterations.  1 reproduces the old
+    /// token-by-token prefill.
+    pub prefill_chunk: usize,
     pub mode: ServeMode,
 }
 
@@ -123,6 +173,7 @@ impl Default for ServePolicy {
             max_wait: Duration::from_millis(5),
             kv_block_size: 16,
             kv_blocks: 256,
+            prefill_chunk: 16,
             mode: ServeMode::Continuous,
         }
     }
@@ -136,8 +187,15 @@ pub struct EngineStats {
     /// admissions that landed while other sequences were mid-decode —
     /// i.e. backfills into a freed slot, the no-batch-barrier property
     pub backfilled: u64,
-    /// batched decode steps executed
+    /// batched engine steps executed
     pub steps: u64,
+    /// prompt chunks fed (one per prefilling slot per engine step): a
+    /// length-L prompt finishes prefill in `ceil(L / prefill_chunk)`
+    /// chunks
+    pub prefill_chunks: u64,
+    /// requests retired early because the caller dropped every
+    /// receiver; their KV blocks returned to the pool immediately
+    pub abandoned: u64,
     /// most simultaneously active slots observed
     pub max_active: usize,
     /// requests routed through the (removed) sequential fallback —
@@ -187,7 +245,7 @@ impl Server {
     /// the request's worst-case KV footprint exceeds the whole pool (it
     /// could never be admitted).
     pub fn submit(&self, prompt: Vec<u32>, max_new: usize)
-        -> Result<(u64, Receiver<Completion>)> {
+        -> Result<(u64, Rx<Completion>)> {
         let (id, _, rx) = self.enqueue(prompt, max_new, false)?;
         Ok((id, rx))
     }
@@ -195,13 +253,13 @@ impl Server {
     /// Enqueue a request with per-token streaming; returns
     /// (id, token receiver, completion receiver).
     pub fn submit_streaming(&self, prompt: Vec<u32>, max_new: usize)
-        -> Result<(u64, Receiver<Token>, Receiver<Completion>)> {
+        -> Result<(u64, Rx<Token>, Rx<Completion>)> {
         let (id, stream_rx, rx) = self.enqueue(prompt, max_new, true)?;
         Ok((id, stream_rx.unwrap(), rx))
     }
 
     fn enqueue(&self, prompt: Vec<u32>, max_new: usize, stream: bool)
-        -> Result<(u64, Option<Receiver<Token>>, Receiver<Completion>)> {
+        -> Result<(u64, Option<Rx<Token>>, Rx<Completion>)> {
         // reject impossible requests up front, with a message the
         // caller can act on — once queued they could only wait forever.
         // Degenerate requests (empty prompt / max_new == 0) are exempt:
@@ -225,8 +283,12 @@ impl Server {
         }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = channel();
+        let rx = Rx { rx, _alive: Arc::new(()) };
+        let mut watch = vec![Arc::downgrade(&rx._alive)];
         let (stream_tx, stream_rx) = if stream {
             let (a, b) = channel();
+            let b = Rx { rx: b, _alive: Arc::new(()) };
+            watch.push(Arc::downgrade(&b._alive));
             (Some(a), Some(b))
         } else {
             (None, None)
@@ -237,6 +299,7 @@ impl Server {
             enqueued: Instant::now(),
             tx,
             stream: stream_tx,
+            watch,
         });
         cv.notify_one();
         Ok((id, stream_rx, rx))
@@ -273,17 +336,24 @@ impl Drop for Server {
 /// Serve one request start-to-finish on the sequential path.
 /// `queue_ms` was measured once, at dequeue.
 fn serve_one(model: &Model, p: Pending, queue_ms: f64) {
+    let mut first_token_ms = None;
     let tokens = greedy_decode(model, &p.req.prompt, p.req.max_new,
                                |i, t| {
+        if i == 0 {
+            first_token_ms =
+                Some(p.enqueued.elapsed().as_secs_f64() * 1e3);
+        }
         if let Some(stream) = &p.stream {
             let _ = stream.send(Token { id: p.req.id, index: i, token: t });
         }
     });
+    let total_ms = p.enqueued.elapsed().as_secs_f64() * 1e3;
     let _ = p.tx.send(Completion {
         id: p.req.id,
         tokens,
         queue_ms,
-        total_ms: p.enqueued.elapsed().as_secs_f64() * 1e3,
+        first_token_ms: first_token_ms.unwrap_or(total_ms),
+        total_ms,
         prefill_tokens: p.req.prompt.len(),
     });
 }
@@ -307,8 +377,13 @@ fn sequential_loop(
             if stop.load(Ordering::Relaxed) && q.items.is_empty() {
                 return;
             }
+            // fill the batch up to max_wait — but not while stopping:
+            // a shutdown with requests still queued used to sit out
+            // the whole deadline before draining
             let deadline = Instant::now() + policy.max_wait;
-            while q.items.len() < policy.slots && Instant::now() < deadline
+            while !stop.load(Ordering::Relaxed)
+                && q.items.len() < policy.slots
+                && Instant::now() < deadline
             {
                 let (qq, timeout) = cv
                     .wait_timeout(q, deadline - Instant::now())
@@ -330,6 +405,11 @@ fn sequential_loop(
             })
             .collect();
         for (p, q_ms) in dequeued {
+            if p.abandoned() {
+                // every receiver is gone: nobody can observe a result
+                stats.lock().unwrap().abandoned += 1;
+                continue;
+            }
             serve_one(&model, p, q_ms);
             stats.lock().unwrap().admissions += 1;
         }
@@ -345,6 +425,8 @@ struct Slot {
     tokens: Vec<u32>,
     /// last sampled token, fed on the next iteration
     next_feed: u32,
+    /// enqueue-to-first-sample latency, set when token 0 is chosen
+    first_token_ms: Option<f64>,
 }
 
 /// The continuous-batching engine loop over the paged KV pool.
@@ -359,6 +441,7 @@ fn continuous_loop(
     let mut slots: Vec<Option<Slot>> =
         (0..policy.slots).map(|_| None).collect();
     let mut active = 0usize;
+    let chunk = policy.prefill_chunk.max(1);
     enum Admit {
         /// answered or installed this wave
         Take,
@@ -388,10 +471,12 @@ fn continuous_loop(
             loop {
                 let decision = match q.items.front() {
                     None => break,
+                    // abandoned or degenerate requests take no slot or
+                    // blocks, so they never have to wait for either
+                    Some(p) if p.abandoned() => Admit::Take,
                     Some(p) if p.req.max_new == 0
                         || p.req.prompt.is_empty() =>
                     {
-                        // degenerate: answered without a slot or blocks
                         Admit::Take
                     }
                     Some(p) => {
@@ -435,14 +520,22 @@ fn continuous_loop(
         for p in admitted {
             // queue time ends here, at dequeue — measured exactly once
             let queue_ms = p.enqueued.elapsed().as_secs_f64() * 1e3;
+            if p.abandoned() {
+                // the caller vanished while the request was queued:
+                // don't spend a slot (or any KV blocks) on it
+                stats.lock().unwrap().abandoned += 1;
+                continue;
+            }
             if p.req.max_new == 0 || p.req.prompt.is_empty() {
                 // nothing to generate — an empty prompt has no logits
                 // to sample (see `argmax`): empty completion, no slot
+                let total_ms = p.enqueued.elapsed().as_secs_f64() * 1e3;
                 let _ = p.tx.send(Completion {
                     id: p.req.id,
                     tokens: Vec::new(),
                     queue_ms,
-                    total_ms: p.enqueued.elapsed().as_secs_f64() * 1e3,
+                    first_token_ms: total_ms,
+                    total_ms,
                     prefill_tokens: p.req.prompt.len(),
                 });
                 continue;
@@ -467,6 +560,7 @@ fn continuous_loop(
                 prompt_pos: 0,
                 tokens: Vec::new(),
                 next_feed: 0,
+                first_token_ms: None,
             });
             active += 1;
             let mut st = stats.lock().unwrap();
@@ -476,41 +570,73 @@ fn continuous_loop(
             }
             st.max_active = st.max_active.max(active);
         }
+        // ---- reap abandoned sequences: a caller that dropped every
+        // receiver can never observe the result, so decoding on would
+        // only burn compute and strand KV blocks --------------------------
+        for (si, entry) in slots.iter_mut().enumerate() {
+            if entry.as_ref().is_some_and(|s| s.p.abandoned()) {
+                *entry = None;
+                cache.release_slot(si);
+                active -= 1;
+                stats.lock().unwrap().abandoned += 1;
+            }
+        }
         if active == 0 {
             continue;
         }
 
-        // ---- one batched engine step over every active slot -----------
-        let feeds: Vec<(usize, u32)> = slots
+        // ---- one batched engine step over every active slot: a
+        // prefilling slot feeds its next prompt chunk (up to one KV
+        // block by default), a decoding slot feeds its last sample ----
+        let prefilling = slots
+            .iter()
+            .flatten()
+            .filter(|s| s.prompt_pos < s.p.req.prompt.len())
+            .count() as u64;
+        let feeds: Vec<(usize, &[u32])> = slots
             .iter()
             .enumerate()
             .filter_map(|(si, s)| {
                 s.as_ref().map(|s| {
-                    let tok = if s.prompt_pos < s.p.req.prompt.len() {
-                        s.p.req.prompt[s.prompt_pos]
-                    } else {
-                        s.next_feed
-                    };
-                    (si, tok)
+                    let span: &[u32] =
+                        if s.prompt_pos < s.p.req.prompt.len() {
+                            let end = (s.prompt_pos + chunk)
+                                .min(s.p.req.prompt.len());
+                            &s.p.req.prompt[s.prompt_pos..end]
+                        } else {
+                            std::slice::from_ref(&s.next_feed)
+                        };
+                    (si, span)
                 })
             })
             .collect();
-        let logits = model.decode_step_batch(&mut cache, &feeds);
-        stats.lock().unwrap().steps += 1;
+        let logits = model.prefill_decode_step(&mut cache, &feeds);
+        let fed: Vec<(usize, usize)> =
+            feeds.iter().map(|&(si, span)| (si, span.len())).collect();
+        drop(feeds);
+        {
+            let mut st = stats.lock().unwrap();
+            st.steps += 1;
+            st.prefill_chunks += prefilling;
+        }
 
         // ---- sample / retire --------------------------------------------
-        for (row, &(si, _)) in feeds.iter().enumerate() {
+        for (row, &(si, n_fed)) in fed.iter().enumerate() {
             let slot = slots[si].as_mut().unwrap();
             if slot.prompt_pos < slot.p.req.prompt.len() {
-                slot.prompt_pos += 1;
+                slot.prompt_pos += n_fed;
                 if slot.prompt_pos < slot.p.req.prompt.len() {
                     continue; // still prefilling
                 }
-                // the prompt's last logits arrive this step: fall
-                // through and sample the first token
+                // the prompt's last logits arrive with its final
+                // chunk: fall through and sample the first token
             }
             let next = argmax(logits.row(row)) as u32;
             let index = slot.tokens.len();
+            if index == 0 {
+                slot.first_token_ms =
+                    Some(slot.p.enqueued.elapsed().as_secs_f64() * 1e3);
+            }
             slot.tokens.push(next);
             if let Some(stream) = &slot.p.stream {
                 let _ = stream.send(Token {
@@ -526,11 +652,14 @@ fn continuous_loop(
                 let s = slots[si].take().unwrap();
                 cache.release_slot(si);
                 active -= 1;
+                let total_ms =
+                    s.p.enqueued.elapsed().as_secs_f64() * 1e3;
                 let _ = s.p.tx.send(Completion {
                     id: s.p.req.id,
                     tokens: s.tokens,
                     queue_ms: s.queue_ms,
-                    total_ms: s.p.enqueued.elapsed().as_secs_f64() * 1e3,
+                    first_token_ms: s.first_token_ms.unwrap_or(total_ms),
+                    total_ms,
                     prefill_tokens: s.p.req.prompt.len(),
                 });
             } else {
@@ -565,6 +694,19 @@ impl ServeMetrics {
     pub fn p99_ms(&self) -> f64 {
         self.latencies(|c| c.total_ms)
             .map(|l| crate::util::stats::percentile(&l, 99.0))
+            .unwrap_or(0.0)
+    }
+
+    /// Median time-to-first-token — the latency prefill chunking buys.
+    pub fn p50_first_token_ms(&self) -> f64 {
+        self.latencies(|c| c.first_token_ms)
+            .map(|l| crate::util::stats::median(&l))
+            .unwrap_or(0.0)
+    }
+
+    pub fn p95_first_token_ms(&self) -> f64 {
+        self.latencies(|c| c.first_token_ms)
+            .map(|l| crate::util::stats::percentile(&l, 95.0))
             .unwrap_or(0.0)
     }
 
@@ -604,6 +746,7 @@ mod tests {
             max_wait: Duration::from_millis(2),
             kv_block_size: 8,
             kv_blocks: 64,
+            prefill_chunk: 8,
             mode,
         }
     }
@@ -703,6 +846,149 @@ mod tests {
         continuous_parity(FfnBackend::Twell);
     }
 
+    /// Chunk 1 (the old token-by-token path), one KV block, and a
+    /// chunk larger than every prompt must all serve bit-identical
+    /// tokens — with slots < requests, so mixed prefill+decode feeds
+    /// and ragged spans happen inside one engine step.
+    fn chunked_prefill_serving_parity(backend: FfnBackend) {
+        let reference_model = toy_model(backend);
+        let prompts: Vec<Vec<u32>> = vec![
+            (0..17).map(|i| (i * 3 + 1) % 32).collect(),
+            vec![5],
+            (0..9).map(|i| (i * 7) % 32).collect(),
+        ];
+        let expected: Vec<Vec<u32>> = prompts
+            .iter()
+            .map(|p| reference_model.generate(p, 4))
+            .collect();
+        for prefill_chunk in [1usize, 8, 64] {
+            let server = Server::start(toy_model(backend), ServePolicy {
+                prefill_chunk,
+                ..policy(2, ServeMode::Continuous)
+            });
+            let rxs: Vec<_> = prompts
+                .iter()
+                .map(|p| server.submit(p.clone(), 4).unwrap().1)
+                .collect();
+            for (rx, exp) in rxs.into_iter().zip(&expected) {
+                let c = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+                assert_eq!(&c.tokens, exp,
+                           "chunk {prefill_chunk} ({backend:?})");
+            }
+            server.shutdown();
+        }
+    }
+
+    #[test]
+    fn chunked_prefill_serving_parity_dense() {
+        chunked_prefill_serving_parity(FfnBackend::Dense);
+    }
+
+    #[test]
+    fn chunked_prefill_serving_parity_twell() {
+        chunked_prefill_serving_parity(FfnBackend::Twell);
+    }
+
+    #[test]
+    fn prefill_completes_in_ceil_len_over_chunk_steps() {
+        // a 13-token prompt through chunk 4: exactly ceil(13/4) = 4
+        // prefill chunks (the first token samples on chunk 4), then
+        // max_new - 1 = 2 pure decode steps
+        let model = toy_model(FfnBackend::Dense);
+        let prompt: Vec<u32> = (0..13).map(|i| i % 32).collect();
+        let reference = model.generate(&prompt, 3);
+        let server = Server::start(model, ServePolicy {
+            slots: 1,
+            max_wait: Duration::from_millis(2),
+            kv_block_size: 4,
+            kv_blocks: 8,
+            prefill_chunk: 4,
+            mode: ServeMode::Continuous,
+        });
+        let (_, rx) = server.submit(prompt, 3).unwrap();
+        let c = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        assert_eq!(c.tokens, reference);
+        let st = server.stats();
+        assert_eq!(st.prefill_chunks, 4, "ceil(13 / 4) chunks");
+        assert_eq!(st.steps, 4 + 2, "chunked prefill + decode steps");
+        server.shutdown();
+    }
+
+    #[test]
+    fn first_token_ms_is_ordered_between_queue_and_total() {
+        // TTFT sanity on both scheduler modes: sampled strictly after
+        // dequeue and before the completion is sealed
+        for mode in [ServeMode::Sequential, ServeMode::Continuous] {
+            let model = toy_model(FfnBackend::Dense);
+            let server = Server::start(model, policy(2, mode));
+            let rxs: Vec<_> = (0..5u32)
+                .map(|i| server.submit(vec![i % 32; 12], 4).unwrap().1)
+                .collect();
+            let (_, empty_rx) = server.submit(Vec::new(), 4).unwrap();
+            for rx in rxs {
+                let c = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+                assert!(c.queue_ms <= c.first_token_ms,
+                        "{mode:?}: queue {} > first {}",
+                        c.queue_ms, c.first_token_ms);
+                assert!(c.first_token_ms <= c.total_ms,
+                        "{mode:?}: first {} > total {}",
+                        c.first_token_ms, c.total_ms);
+            }
+            // an empty completion never samples: TTFT == total
+            let c = empty_rx.recv_timeout(Duration::from_secs(30)).unwrap();
+            assert_eq!(c.first_token_ms, c.total_ms);
+            server.shutdown();
+        }
+    }
+
+    #[test]
+    fn dropped_receiver_frees_slot_and_blocks_early() {
+        // request A reserves the whole pool and would decode for 500
+        // tokens; its caller vanishes immediately.  The engine must
+        // notice the dead channel, retire A, and hand the blocks to B
+        // — not decode A to completion into the void while B starves.
+        let model = toy_model(FfnBackend::Dense);
+        let expected_b = model.generate(&[4, 9], 4);
+        let server = Server::start(model, ServePolicy {
+            slots: 2,
+            max_wait: Duration::from_millis(2),
+            kv_block_size: 16,
+            kv_blocks: 32, // 512 positions: exactly A's worst case
+            prefill_chunk: 16,
+            mode: ServeMode::Continuous,
+        });
+        let (_, rx_a) = server.submit(vec![1, 2, 3], 500).unwrap();
+        drop(rx_a); // caller abandons A
+        let (_, rx_b) = server.submit(vec![4, 9], 4).unwrap();
+        let c = rx_b.recv_timeout(Duration::from_secs(60)).unwrap();
+        assert_eq!(c.tokens, expected_b);
+        assert_eq!(server.stats().abandoned, 1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn sequential_shutdown_skips_the_batch_fill_wait() {
+        // with a queued request and a huge max_wait, shutdown must not
+        // sit out the batch-fill deadline before draining
+        let model = toy_model(FfnBackend::Dense);
+        let expected = model.generate(&[1, 2], 3);
+        let server = Server::start(model, ServePolicy {
+            slots: 4,
+            max_wait: Duration::from_secs(30),
+            kv_block_size: 8,
+            kv_blocks: 64,
+            prefill_chunk: 8,
+            mode: ServeMode::Sequential,
+        });
+        let (_, rx) = server.submit(vec![1, 2], 3).unwrap();
+        let t0 = Instant::now();
+        server.shutdown(); // joins the worker
+        assert!(t0.elapsed() < Duration::from_secs(5),
+                "shutdown waited out max_wait: {:?}", t0.elapsed());
+        let c = rx.recv_timeout(Duration::from_secs(1)).unwrap();
+        assert_eq!(c.tokens, expected);
+    }
+
     #[test]
     fn sequential_mode_still_matches_generate() {
         let model = toy_model(FfnBackend::Dense);
@@ -773,6 +1059,7 @@ mod tests {
             max_wait: Duration::from_millis(2),
             kv_block_size: 8,
             kv_blocks: 16, // 128 positions pool-wide
+            prefill_chunk: 8,
             mode: ServeMode::Continuous,
         });
         let (_, rx) = server.submit(long_prompt, 3).unwrap();
@@ -813,6 +1100,7 @@ mod tests {
             max_wait: Duration::from_millis(2),
             kv_block_size: 4,
             kv_blocks: 4,
+            prefill_chunk: 4,
             mode: ServeMode::Continuous,
         });
         let (_, rx) = server.submit(prompt, 4).unwrap();
@@ -837,6 +1125,7 @@ mod tests {
             max_wait: Duration::from_millis(2),
             kv_block_size: 4,
             kv_blocks: 3,
+            prefill_chunk: 4,
             mode: ServeMode::Continuous,
         });
         let rxs: Vec<_> = (0..5u32)

@@ -11,12 +11,25 @@ pub fn mean(xs: &[f64]) -> f64 {
     }
 }
 
+/// Largest value; 0 for empty input — `mean`/`max`/`min`/`percentile`
+/// all share the 0-for-empty contract so report code can call them
+/// unguarded (the old ±infinity answers leaked into JSON, which has no
+/// encoding for them).
 pub fn max(xs: &[f64]) -> f64 {
-    xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+    }
 }
 
+/// Smallest value; 0 for empty input (see `max`).
 pub fn min(xs: &[f64]) -> f64 {
-    xs.iter().cloned().fold(f64::INFINITY, f64::min)
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
 }
 
 pub fn variance(xs: &[f64]) -> f64 {
@@ -28,11 +41,15 @@ pub fn stddev(xs: &[f64]) -> f64 {
     variance(xs).sqrt()
 }
 
-/// Percentile via linear interpolation on the sorted copy (p in [0,100]).
+/// Percentile via linear interpolation on the sorted copy (p in
+/// [0,100]); 0 for empty input.  Sorts by IEEE total order, so a NaN
+/// in the data lands at the end instead of panicking the comparator.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
-    assert!(!xs.is_empty());
+    if xs.is_empty() {
+        return 0.0;
+    }
     let mut s = xs.to_vec();
-    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    s.sort_by(|a, b| a.total_cmp(b));
     let rank = (p / 100.0) * (s.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -149,6 +166,27 @@ mod tests {
         let xs = [0.1, 0.2, 0.9, 1.5, -3.0];
         let h = histogram(&xs, 0.0, 1.0, 2);
         assert_eq!(h, vec![3, 2]); // -3 clamps to bin 0, 1.5 to bin 1
+    }
+
+    #[test]
+    fn empty_inputs_share_the_zero_contract() {
+        // max/min used to answer -inf/+inf on empty input and
+        // percentile asserted; all now match mean's 0-for-empty
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(max(&[]), 0.0);
+        assert_eq!(min(&[]), 0.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(median(&[]), 0.0);
+    }
+
+    #[test]
+    fn percentile_survives_nan() {
+        // partial_cmp().unwrap() used to panic on NaN; total_cmp
+        // sorts NaN after every finite value instead
+        let xs = [2.0, f64::NAN, 1.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 2.0);
+        assert!(percentile(&xs, 100.0).is_nan());
     }
 
     #[test]
