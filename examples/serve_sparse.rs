@@ -6,8 +6,11 @@
 //!
 //! Run: cargo run --release --example serve_sparse -- \
 //!        [--run e2e_s] [--slots 8] [--requests 24] [--max-new 12] \
-//!        [--kv-blocks 128] [--kv-block-size 16] [--prefill-chunk 16]
-//! (trains a quick tiny model if the run does not exist yet)
+//!        [--kv-blocks 128] [--kv-block-size 16] [--prefill-chunk 16] \
+//!        [--temperature 0.8] [--top-k 40] [--top-p 0.95] [--seed 0]
+//! (trains a quick tiny model if the run does not exist yet;
+//! temperature 0 — the default — decodes greedily, and request i
+//! samples with seed `--seed + i` so runs stay reproducible)
 
 use std::time::{Duration, Instant};
 
@@ -15,6 +18,7 @@ use repro::config::{default_paths, Args, TrainConfig};
 use repro::coordinator::{ckpt::Checkpoint, Trainer};
 use repro::data::bpe::Bpe;
 use repro::data::corpus::CorpusSpec;
+use repro::model::sample::SamplingParams;
 use repro::model::{FfnBackend, Model};
 use repro::runtime::Runtime;
 use repro::serve::{ServeMetrics, ServeMode, ServePolicy, Server};
@@ -32,6 +36,18 @@ fn main() -> anyhow::Result<()> {
     // prompt tokens fed per prefilling slot per engine iteration;
     // defaults to one KV block
     let prefill_chunk = args.get_usize("prefill-chunk", kv_block_size)?;
+    // per-request sampling (temperature 0 = greedy argmax)
+    let base_params = SamplingParams {
+        temperature: args.get_f64("temperature", 0.0)? as f32,
+        top_k: args.get_usize("top-k", 0)?,
+        top_p: args.get_f64("top-p", 1.0)? as f32,
+        seed: args.get_usize("seed", 0)? as u64,
+    };
+    base_params.validate()?;
+    let params_for = |i: usize| SamplingParams {
+        seed: base_params.seed.wrapping_add(i as u64),
+        ..base_params
+    };
     let paths = default_paths();
     let dir = paths.run_dir(&run);
     if !dir.join("checkpoint.bin").exists() {
@@ -74,8 +90,11 @@ fn main() -> anyhow::Result<()> {
             let rxs: Vec<_> = (0..n_requests)
                 .map(|i| {
                     server
-                        .submit(bpe.encode(prompts[i % prompts.len()]),
-                                max_new)
+                        .submit_sampled(
+                            bpe.encode(prompts[i % prompts.len()]),
+                            max_new,
+                            params_for(i),
+                        )
                         .map(|(_, rx)| rx)
                 })
                 .collect::<anyhow::Result<_>>()?;
@@ -111,8 +130,11 @@ fn main() -> anyhow::Result<()> {
         prefill_chunk,
         mode: ServeMode::Continuous,
     });
-    let (_, tok_rx, done_rx) =
-        server.submit_streaming(bpe.encode(prompts[0]), max_new)?;
+    let (_, tok_rx, done_rx) = server.submit_streaming_sampled(
+        bpe.encode(prompts[0]),
+        max_new,
+        params_for(0),
+    )?;
     print!("streamed:");
     for t in tok_rx.iter() {
         print!(" {}", bpe.decode(&[t.token]).trim());

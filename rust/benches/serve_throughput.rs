@@ -1,7 +1,9 @@
 //! Continuous-batching serving throughput: tokens/sec and p50/p95
 //! request latency vs KV slot count (1/4/8/16), for both FFN backends,
 //! plus a time-to-first-token sweep over the prefill chunk size on
-//! long prompts (4x the KV block).
+//! long prompts (4x the KV block), plus a sampled-decode sweep
+//! (greedy argmax vs temperature 0.8 / top-p 0.95 per-request
+//! sampling) showing what stochastic decoding costs on the hot loop.
 //!
 //! Two claims under test: decode throughput grows with the number of
 //! slots because the batched step hands the FFN backends a multi-row
@@ -21,6 +23,7 @@ use std::time::{Duration, Instant};
 
 use repro::config::ModelConfig;
 use repro::model::kv::kv_positions_needed;
+use repro::model::sample::SamplingParams;
 use repro::model::{FfnBackend, Layer, Model};
 use repro::serve::{ServeMetrics, ServeMode, ServePolicy, Server};
 use repro::sparse::ffn::synth_sparse_ffn;
@@ -81,10 +84,12 @@ fn synthetic_model(layers: usize, target_nnz: f64, backend: FfnBackend)
 }
 
 /// One serving wave; returns (tok/s, p50 ms, p95 ms, TTFT p50 ms,
-/// backfills).
+/// backfills).  Request i samples with seed `params.seed + i`, so a
+/// sampled wave exercises genuinely divergent decode traffic while
+/// staying reproducible run to run.
 fn run_wave(backend: FfnBackend, slots: usize, n_requests: usize,
             prompt_len: usize, max_new: usize, kv_block_size: usize,
-            prefill_chunk: usize)
+            prefill_chunk: usize, params: SamplingParams)
     -> (f64, f64, f64, f64, u64) {
     let model = synthetic_model(4, 30.0, backend);
     let vocab = model.cfg.vocab_size;
@@ -107,7 +112,14 @@ fn run_wave(backend: FfnBackend, slots: usize, n_requests: usize,
             let prompt: Vec<u32> = (0..prompt_len)
                 .map(|j| ((i * 131 + j * 31) % vocab) as u32)
                 .collect();
-            server.submit(prompt, max_new).expect("request fits pool").1
+            let req_params = SamplingParams {
+                seed: params.seed.wrapping_add(i as u64),
+                ..params
+            };
+            server
+                .submit_sampled(prompt, max_new, req_params)
+                .expect("request fits pool")
+                .1
         })
         .collect();
     let mut metrics = ServeMetrics::default();
@@ -152,7 +164,7 @@ fn main() {
         for &slots in &[1usize, 4, 8, 16] {
             let (tok_s, p50, p95, ttft, backfills) = run_wave(
                 backend, slots, n_requests, prompt_len, max_new,
-                kv_block_size, kv_block_size,
+                kv_block_size, kv_block_size, SamplingParams::greedy(),
             );
             table.row(&[
                 label.to_string(),
@@ -168,6 +180,8 @@ fn main() {
                 ("slots", Json::Num(slots as f64)),
                 ("prompt_len", Json::Num(prompt_len as f64)),
                 ("prefill_chunk", Json::Num(kv_block_size as f64)),
+                ("temperature", Json::Num(0.0)),
+                ("top_p", Json::Num(1.0)),
                 ("tok_s", Json::Num(tok_s)),
                 ("p50_ms", Json::Num(p50)),
                 ("p95_ms", Json::Num(p95)),
@@ -204,6 +218,7 @@ fn main() {
             let (tok_s, p50, p95, ttft, backfills) = run_wave(
                 backend, ttft_slots, ttft_requests, long_prompt,
                 ttft_max_new, kv_block_size, prefill_chunk,
+                SamplingParams::greedy(),
             );
             ttft_table.row(&[
                 label.to_string(),
@@ -219,6 +234,8 @@ fn main() {
                 ("slots", Json::Num(ttft_slots as f64)),
                 ("prompt_len", Json::Num(long_prompt as f64)),
                 ("prefill_chunk", Json::Num(prefill_chunk as f64)),
+                ("temperature", Json::Num(0.0)),
+                ("top_p", Json::Num(1.0)),
                 ("tok_s", Json::Num(tok_s)),
                 ("p50_ms", Json::Num(p50)),
                 ("p95_ms", Json::Num(p95)),
@@ -232,6 +249,70 @@ fn main() {
         "\nshape check: ttft p50 should drop sharply from chunk 1 to \
          one block per step — prefill takes ceil(L / chunk) engine \
          iterations instead of L."
+    );
+
+    // ---- sampled decode: greedy argmax vs temperature 0.8 / top-p 0.95
+    // per-request sampling — the processor pipeline (sort + softmax +
+    // nucleus cut over the vocab) runs once per sampled token, so this
+    // sweep prices stochastic decoding on the hot decode loop -----------
+    let sample_slots = 8usize;
+    println!(
+        "\n== sampled decode: greedy vs t=0.8 top-p=0.95 ==\n\
+         {n_requests} requests, prompt {prompt_len}, max_new \
+         {max_new}, {sample_slots} slots; each request draws from its \
+         own seeded RNG, so sampled traffic genuinely diverges\n"
+    );
+    let mut sample_table = Table::new(&[
+        "backend", "sampling", "tok/s", "p50 ms", "p95 ms", "ttft p50",
+    ]);
+    let sweeps = [
+        ("greedy", SamplingParams::greedy()),
+        (
+            "t=0.8 top-p=0.95",
+            SamplingParams {
+                temperature: 0.8,
+                top_k: 0,
+                top_p: 0.95,
+                seed: 7,
+            },
+        ),
+    ];
+    for backend in [FfnBackend::Dense, FfnBackend::Twell] {
+        let label = backend_label(backend);
+        for (sampling, params) in sweeps {
+            let (tok_s, p50, p95, ttft, backfills) = run_wave(
+                backend, sample_slots, n_requests, prompt_len, max_new,
+                kv_block_size, kv_block_size, params,
+            );
+            sample_table.row(&[
+                label.to_string(),
+                sampling.to_string(),
+                format!("{tok_s:.0}"),
+                format!("{p50:.1}"),
+                format!("{p95:.1}"),
+                format!("{ttft:.1}"),
+            ]);
+            rows.push(Json::obj(vec![
+                ("backend", Json::str(label)),
+                ("slots", Json::Num(sample_slots as f64)),
+                ("prompt_len", Json::Num(prompt_len as f64)),
+                ("prefill_chunk", Json::Num(kv_block_size as f64)),
+                ("temperature", Json::Num(params.temperature as f64)),
+                ("top_p", Json::Num(params.top_p as f64)),
+                ("tok_s", Json::Num(tok_s)),
+                ("p50_ms", Json::Num(p50)),
+                ("p95_ms", Json::Num(p95)),
+                ("first_token_ms", Json::Num(ttft)),
+                ("backfills", Json::Num(backfills as f64)),
+            ]));
+        }
+    }
+    sample_table.print();
+    println!(
+        "\nshape check: sampled decode should track greedy closely — \
+         the pipeline is O(V log V) per token on a small vocab, so the \
+         FFN still dominates; a large gap means the sampler is \
+         allocating or sorting more than it should."
     );
     let report = Json::obj(vec![
         ("bench", Json::str("serve_throughput")),

@@ -218,6 +218,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // defaults to one KV block (1 = legacy token-by-token prefill)
     let prefill_chunk =
         args.get_usize("prefill-chunk", kv_block_size)?;
+    // per-request sampling: temperature 0 (the default) is greedy;
+    // request i gets seed `--seed + i`, so the run is reproducible
+    // while streams still diverge across requests
+    let temperature = args.get_f64("temperature", 0.0)? as f32;
+    let top_k = args.get_usize("top-k", 0)?;
+    let top_p = args.get_f64("top-p", 1.0)? as f32;
+    let seed = args.get_usize("seed", 0)? as u64;
+    let base_params = repro::model::sample::SamplingParams {
+        temperature,
+        top_k,
+        top_p,
+        seed,
+    };
+    base_params.validate()?;
     let mode = match args.get_or("mode", "continuous").as_str() {
         "seq" | "sequential" => repro::serve::ServeMode::Sequential,
         "continuous" => repro::serve::ServeMode::Continuous,
@@ -247,13 +261,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "source : www nih",
         "the empire doesn",
     ];
+    let params_for = |i: usize| repro::model::sample::SamplingParams {
+        seed: seed.wrapping_add(i as u64),
+        ..base_params
+    };
     // stream the first request's tokens to show the per-token channel
-    let (_, stream_rx, first_rx) = server
-        .submit_streaming(bpe.encode(prompts[0]), max_new)?;
+    let (_, stream_rx, first_rx) = server.submit_streaming_sampled(
+        bpe.encode(prompts[0]),
+        max_new,
+        params_for(0),
+    )?;
     let rxs: Vec<_> = (1..n_requests)
         .map(|i| {
             let prompt = bpe.encode(prompts[i % prompts.len()]);
-            server.submit(prompt, max_new).map(|(_, rx)| rx)
+            server
+                .submit_sampled(prompt, max_new, params_for(i))
+                .map(|(_, rx)| rx)
         })
         .collect::<Result<_>>()?;
     for t in stream_rx.iter() {
@@ -277,11 +300,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     let wall = t0.elapsed().as_secs_f64();
     let stats = server.stats();
+    let sampling = if temperature == 0.0 {
+        "greedy".to_string()
+    } else {
+        format!("t={temperature} top_k={top_k} top_p={top_p} seed={seed}")
+    };
     println!(
         "served {n_requests} requests ({mode:?}, {slots} slots, \
          {kv_blocks} KV blocks x {kv_block_size} positions, prefill \
-         chunk {prefill_chunk}): p50 {:.1} ms, p95 {:.1} ms, p99 \
-         {:.1} ms, ttft p50 {:.1} ms, {:.0} tok/s",
+         chunk {prefill_chunk}, {sampling}): p50 {:.1} ms, p95 {:.1} \
+         ms, p99 {:.1} ms, ttft p50 {:.1} ms, {:.0} tok/s",
         metrics.p50_ms(),
         metrics.p95_ms(),
         metrics.p99_ms(),

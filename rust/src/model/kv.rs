@@ -3,9 +3,11 @@
 //! Two shapes of decode:
 //!
 //! * `KvCache` + `Model::decode_step` — one cache per sequence, one token
-//!   per call (M=1 rows through the FFN backends).  `greedy_decode` wraps
-//!   it into the shared prefill+argmax loop that `Model::generate` and
-//!   the sequential serving path both use.
+//!   per call (M=1 rows through the FFN backends).  `sample_decode` wraps
+//!   it into the shared prefill+sample loop that `Model::generate` and
+//!   the sequential serving path both use (`greedy_decode` is its
+//!   zero-temperature wrapper, bit-exact with the historical argmax
+//!   path).
 //! * `PagedKvCache` + `Model::decode_step_batch` — a *paged* KV pool
 //!   shared by every in-flight sequence, vLLM-style: physical storage is
 //!   a global array of fixed-size blocks (`block_size` positions each),
@@ -30,6 +32,7 @@
 //! actually held, and a reserved sequence can never hit an exhausted
 //! free list mid-decode.
 
+use crate::model::sample::{Sampler, SamplingParams};
 use crate::model::Model;
 use crate::sparse::dense;
 use crate::tensor::Mat;
@@ -395,29 +398,32 @@ fn attend_one(
     }
 }
 
-/// The shared greedy prefill + decode loop (used by `Model::generate`
-/// and the serving paths): feed the prompt, then argmax `max_new`
-/// tokens, calling `on_token(index, token)` as each one is chosen — the
+/// The shared prefill + decode loop (used by `Model::generate` and the
+/// sequential serving path): feed the prompt, then draw `max_new`
+/// tokens through a per-request `Sampler` (temperature / top-k /
+/// top-p, seeded RNG; `temperature == 0` is exactly the old argmax
+/// loop), calling `on_token(index, token)` as each one is chosen — the
 /// per-token streaming hook.  The final sampled token is not fed back
 /// (its logits are never needed), which keeps the KV requirement at
 /// `kv_positions_needed` positions.  An empty prompt yields an empty
 /// result: no token was ever fed, so there are no logits to sample.
-pub fn greedy_decode(
+pub fn sample_decode(
     model: &Model, prompt: &[u32], max_new: usize,
-    mut on_token: impl FnMut(usize, u32),
+    params: SamplingParams, mut on_token: impl FnMut(usize, u32),
 ) -> Vec<u32> {
     if prompt.is_empty() || max_new == 0 {
         return Vec::new();
     }
     let cap = kv_positions_needed(prompt.len(), max_new);
     let mut cache = KvCache::new(model, cap);
+    let mut sampler = Sampler::new(params);
     let mut logits = Vec::new();
     for &t in prompt {
         logits = model.decode_step(&mut cache, t);
     }
     let mut out = Vec::with_capacity(max_new);
     for i in 0..max_new {
-        let next = argmax(&logits) as u32;
+        let next = sampler.sample(&logits) as u32;
         out.push(next);
         on_token(i, next);
         if i + 1 < max_new {
@@ -427,9 +433,24 @@ pub fn greedy_decode(
     out
 }
 
-/// Index of the largest element (first wins on ties).  Panics on empty
-/// input: an empty logits slice means no token was ever fed, and
-/// silently answering "token 0" fabricates output.
+/// The zero-temperature wrapper over `sample_decode`: bit-exact argmax
+/// decoding, kept as its own entry point so every greedy parity test
+/// (and `Model::generate`) pins the historical behaviour.
+pub fn greedy_decode(
+    model: &Model, prompt: &[u32], max_new: usize,
+    on_token: impl FnMut(usize, u32),
+) -> Vec<u32> {
+    sample_decode(model, prompt, max_new, SamplingParams::greedy(),
+                  on_token)
+}
+
+/// Index of the largest element — ties break to the **lowest index**.
+/// This tie rule is load-bearing: the sampler's `temperature == 0`
+/// short-circuit (`sample::Sampler::sample`) and `top_k_candidates`'s
+/// equal-logit ordering both rely on it, so greedy serving stays
+/// bit-exact with `Model::generate` no matter which path picked the
+/// token.  Panics on empty input: an empty logits slice means no token
+/// was ever fed, and silently answering "token 0" fabricates output.
 pub fn argmax(xs: &[f32]) -> usize {
     assert!(!xs.is_empty(), "argmax over empty logits");
     let mut best = 0;
@@ -723,6 +744,49 @@ mod tests {
     #[test]
     fn argmax_picks_max() {
         assert_eq!(argmax(&[0.1, 3.0, -1.0, 3.0]), 1); // first max wins
+    }
+
+    #[test]
+    fn argmax_ties_break_to_the_lowest_index() {
+        // the documented contract the sampler's t=0 short-circuit and
+        // top_k_candidates' equal-logit ordering both rely on: among
+        // equal maxima, the lowest index wins — always
+        assert_eq!(argmax(&[7.0, 7.0, 7.0]), 0); // all equal
+        assert_eq!(argmax(&[-1.0, 2.0, 2.0, 2.0]), 1); // run of maxima
+        assert_eq!(argmax(&[5.0]), 0); // singleton
+        assert_eq!(argmax(&[0.0, -0.0]), 0); // 0.0 > -0.0 is false: tie
+        assert_eq!(
+            argmax(&[f32::NEG_INFINITY, f32::NEG_INFINITY]),
+            0,
+            "non-finite ties must also break low"
+        );
+    }
+
+    #[test]
+    fn sample_decode_is_seed_reproducible_and_t0_is_greedy() {
+        let m = toy_model(FfnBackend::Dense);
+        let params = SamplingParams {
+            temperature: 0.9,
+            top_k: 8,
+            top_p: 0.9,
+            seed: 321,
+        };
+        let a = sample_decode(&m, &[4, 4, 1], 6, params, |_, _| {});
+        let b = sample_decode(&m, &[4, 4, 1], 6, params, |_, _| {});
+        assert_eq!(a, b, "same seed must reproduce the stream");
+        assert_eq!(a.len(), 6);
+        assert!(a.iter().all(|&t| (t as usize) < m.cfg.vocab_size));
+        // temperature 0: bit-exact with the greedy wrapper, whatever
+        // the truncation settings say
+        let z = SamplingParams {
+            temperature: 0.0,
+            top_k: 2,
+            top_p: 0.3,
+            seed: 5,
+        };
+        let greedy = greedy_decode(&m, &[4, 4, 1], 6, |_, _| {});
+        assert_eq!(sample_decode(&m, &[4, 4, 1], 6, z, |_, _| {}), greedy);
+        assert_eq!(greedy, m.generate(&[4, 4, 1], 6));
     }
 
     #[test]

@@ -12,9 +12,12 @@
 //! `decode_step`, and `decode_step_batch` over a block-paged
 //! `PagedKvCache`, which the continuous-batching server (`serve`)
 //! drives so the FFN backends see multi-row activations during decode
-//! while sequences share physical KV memory.
+//! while sequences share physical KV memory.  Token selection lives in
+//! `sample`: per-request temperature / top-k / top-p with a seeded
+//! RNG, where `temperature == 0` reduces to the greedy argmax path.
 
 pub mod kv;
+pub mod sample;
 
 use anyhow::{bail, Result};
 

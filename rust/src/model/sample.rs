@@ -1,0 +1,534 @@
+//! Per-request stochastic decoding: temperature / top-k / top-p
+//! (nucleus) sampling over next-token logits, with a seeded
+//! SplitMix64 RNG so every completion is reproducible.
+//!
+//! The logits-processor pipeline runs **temperature → top-k → top-p →
+//! sample**, and the order matters:
+//!
+//! * **Temperature first**: dividing logits by `temperature` reshapes
+//!   the whole distribution (t < 1 sharpens, t > 1 flattens).  It is a
+//!   monotonic map, so it never changes *which* tokens survive top-k,
+//!   but it changes the probability mass the later nucleus cut
+//!   measures — so it must run before softmax, not after.
+//! * **Top-k before top-p**: top-k is defined on logit *rank* and
+//!   needs no normalization, so it runs on (scaled) logits directly.
+//!   Running it after the nucleus cut could silently widen the
+//!   nucleus: top-p would spread mass over tokens top-k was about to
+//!   delete, and the renormalization after deletion would no longer
+//!   match the "smallest prefix with cumulative probability ≥ p"
+//!   contract.
+//! * **Top-p after softmax**: the nucleus is defined over
+//!   *probabilities* ("smallest prefix of the sorted distribution
+//!   whose cumulative mass reaches `top_p`"), so it must see the
+//!   normalized distribution of the top-k survivors — then the kept
+//!   prefix is renormalized and sampled.
+//!
+//! `temperature == 0` short-circuits the whole pipeline to
+//! [`crate::model::kv::argmax`] (lowest index wins on ties) without
+//! consuming any randomness, so greedy requests stay bit-exact with
+//! the pre-sampling serving paths.
+//!
+//! The softmax subtracts the max logit before exponentiating, so
+//! extreme logits (±1e4, all-equal, a single finite entry among
+//! `-inf`) never produce NaN/inf — the property tests below are the
+//! contract.
+//!
+//! ```
+//! use repro::model::sample::{Sampler, SamplingParams};
+//!
+//! let params = SamplingParams {
+//!     temperature: 0.8, top_k: 2, top_p: 0.9, seed: 7,
+//! };
+//! let logits = [0.0_f32, 1.0, 3.0, 2.5];
+//! // same seed -> same stream, token always inside the top-k set
+//! let (mut a, mut b) = (Sampler::new(params), Sampler::new(params));
+//! for _ in 0..16 {
+//!     let t = a.sample(&logits);
+//!     assert_eq!(t, b.sample(&logits));
+//!     assert!(t == 2 || t == 3, "outside the top-2 set: {t}");
+//! }
+//! // temperature 0 is exactly argmax, regardless of top-k / top-p
+//! let mut greedy = Sampler::new(SamplingParams::greedy());
+//! assert_eq!(greedy.sample(&logits), 2);
+//! ```
+
+use anyhow::{ensure, Result};
+
+use crate::model::kv::argmax;
+use crate::util::rng::cumulative_pick;
+
+/// Per-request sampling controls, carried alongside the prompt through
+/// the serving stack (`serve::Request`).
+#[derive(Clone, Copy, Debug)]
+pub struct SamplingParams {
+    /// Softmax temperature; `0` means greedy (argmax).
+    pub temperature: f32,
+    /// Keep only the `top_k` highest logits before softmax
+    /// (`0` disables the filter).
+    pub top_k: usize,
+    /// Nucleus mass: keep the smallest probability-sorted prefix whose
+    /// cumulative mass reaches `top_p` (`1` disables the cut).
+    pub top_p: f32,
+    /// Seed of the request's private RNG; the same seed and prompt
+    /// reproduce the same completion on every scheduler path.
+    pub seed: u64,
+}
+
+impl SamplingParams {
+    /// Greedy decoding: `temperature == 0`, no truncation, seed 0.
+    pub fn greedy() -> SamplingParams {
+        SamplingParams { temperature: 0.0, top_k: 0, top_p: 1.0, seed: 0 }
+    }
+
+    /// Greedy requests short-circuit the pipeline to `argmax`.
+    pub fn is_greedy(&self) -> bool {
+        self.temperature == 0.0
+    }
+
+    /// Range checks, done once at the submit boundary so a bad request
+    /// fails with an actionable error instead of a worker panic.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(
+            self.temperature.is_finite() && self.temperature >= 0.0,
+            "temperature must be finite and >= 0, got {}",
+            self.temperature
+        );
+        ensure!(
+            self.top_p > 0.0 && self.top_p <= 1.0,
+            "top_p must be in (0, 1], got {}",
+            self.top_p
+        );
+        Ok(())
+    }
+}
+
+impl Default for SamplingParams {
+    fn default() -> SamplingParams {
+        SamplingParams::greedy()
+    }
+}
+
+/// SplitMix64 (Steele et al. 2014): one 64-bit add + mix per draw.
+/// Each request owns one, seeded from its `SamplingParams::seed`, so
+/// completions are reproducible no matter how the scheduler interleaves
+/// them — the generator is never shared across requests.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> SplitMix64 {
+        SplitMix64 { state: seed }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9e37_79b9_7f4a_7c15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+}
+
+/// Per-request sampler: the processor pipeline plus the request's
+/// private RNG.  One `sample` call consumes exactly one uniform draw
+/// (none when greedy), so the token stream depends only on the logits
+/// sequence — which is why sequential and batched scheduling produce
+/// identical streams for the same seed.
+pub struct Sampler {
+    params: SamplingParams,
+    rng: SplitMix64,
+    /// Candidate scratch reused across tokens: `sample` runs on the
+    /// hot decode loop, and rebuilding a vocab-sized Vec per sampled
+    /// token would reintroduce exactly the per-step allocation PR 3
+    /// hoisted out of `attend_one`.
+    scratch: Vec<(usize, f32)>,
+}
+
+impl Sampler {
+    pub fn new(params: SamplingParams) -> Sampler {
+        Sampler {
+            params,
+            rng: SplitMix64::new(params.seed),
+            scratch: Vec::new(),
+        }
+    }
+
+    pub fn params(&self) -> &SamplingParams {
+        &self.params
+    }
+
+    /// Sample the next token index from `logits`.  `temperature == 0`
+    /// short-circuits to `argmax` (lowest index wins ties) without
+    /// touching the RNG.
+    pub fn sample(&mut self, logits: &[f32]) -> usize {
+        if self.params.is_greedy() {
+            return argmax(logits);
+        }
+        process_logits_into(&mut self.scratch, logits, &self.params);
+        let total: f64 =
+            self.scratch.iter().map(|&(_, p)| p as f64).sum();
+        let i = cumulative_pick(
+            self.rng.f64() * total,
+            self.scratch.iter().map(|&(_, p)| p as f64),
+        );
+        self.scratch[i].0
+    }
+}
+
+/// The pipeline minus the draw: temperature → top-k → softmax → top-p.
+/// Returns `(token, probability)` candidates sorted by probability
+/// descending (ties broken toward the lower token index), renormalized
+/// to sum to 1.  Requires `temperature > 0` — greedy requests never
+/// reach the pipeline.
+pub fn process_logits(
+    logits: &[f32], params: &SamplingParams,
+) -> Vec<(usize, f32)> {
+    let mut cands = Vec::new();
+    process_logits_into(&mut cands, logits, params);
+    cands
+}
+
+/// Allocation-reusing form of `process_logits`: clears and refills
+/// `cands` in place, so a per-request `Sampler` pays for the candidate
+/// buffer once, not once per token.
+pub fn process_logits_into(
+    cands: &mut Vec<(usize, f32)>, logits: &[f32], params: &SamplingParams,
+) {
+    assert!(params.temperature > 0.0,
+            "temperature 0 short-circuits to argmax before the pipeline");
+    top_k_into(cands, logits, params.top_k);
+    softmax_candidates(cands, params.temperature);
+    top_p_truncate(cands, params.top_p);
+}
+
+/// Keep the `k` largest logits (`k == 0` or `k >= len`: keep all),
+/// sorted descending.  Equal logits keep ascending token order, so
+/// truncation at a tie is deterministic and matches `argmax`'s
+/// lowest-index-wins rule.
+pub fn top_k_candidates(logits: &[f32], k: usize) -> Vec<(usize, f32)> {
+    let mut cands = Vec::new();
+    top_k_into(&mut cands, logits, k);
+    cands
+}
+
+/// `top_k_candidates` into a reused buffer.
+pub fn top_k_into(
+    cands: &mut Vec<(usize, f32)>, logits: &[f32], k: usize,
+) {
+    cands.clear();
+    cands.extend(logits.iter().copied().enumerate());
+    cands.sort_unstable_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
+    if k > 0 && k < cands.len() {
+        cands.truncate(k);
+    }
+}
+
+/// Replace each candidate's logit with its temperature-scaled softmax
+/// probability.  The max logit (the first candidate — the slice is
+/// sorted descending) is subtracted before exponentiating, so every
+/// exponent is <= 0 and extreme logits stay finite.  If the input is
+/// degenerate (every term underflows, or non-finite logits poison the
+/// max), all mass collapses onto the largest logit instead of emitting
+/// NaNs.
+pub fn softmax_candidates(cands: &mut [(usize, f32)], temperature: f32) {
+    assert!(temperature > 0.0, "softmax needs a positive temperature");
+    if cands.is_empty() {
+        return;
+    }
+    let max = cands[0].1;
+    let mut sum = 0f64;
+    for c in cands.iter_mut() {
+        let e = (((c.1 - max) / temperature) as f64).exp();
+        c.1 = if e.is_finite() { e as f32 } else { 0.0 };
+        sum += c.1 as f64;
+    }
+    if sum > 0.0 && sum.is_finite() {
+        for c in cands.iter_mut() {
+            c.1 = (c.1 as f64 / sum) as f32;
+        }
+    } else {
+        for c in cands.iter_mut() {
+            c.1 = 0.0;
+        }
+        cands[0].1 = 1.0;
+    }
+}
+
+/// Nucleus cut: keep the smallest prefix of the probability-sorted
+/// candidates whose cumulative mass reaches `top_p` — never fewer than
+/// one — then renormalize the survivors to sum to 1.  `top_p >= 1`
+/// keeps everything (the distribution is already normalized).
+pub fn top_p_truncate(cands: &mut Vec<(usize, f32)>, top_p: f32) {
+    assert!(top_p > 0.0, "top_p must be positive");
+    if top_p >= 1.0 || cands.is_empty() {
+        return;
+    }
+    let mut keep = cands.len();
+    let mut cum = 0f64;
+    for (i, &(_, p)) in cands.iter().enumerate() {
+        cum += p as f64;
+        if cum >= top_p as f64 {
+            keep = i + 1;
+            break;
+        }
+    }
+    cands.truncate(keep);
+    let sum: f64 = cands.iter().map(|&(_, p)| p as f64).sum();
+    if sum > 0.0 {
+        for c in cands.iter_mut() {
+            c.1 = (c.1 as f64 / sum) as f32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Gen};
+
+    /// |sum(probs) - 1| <= tol, every prob finite and in [0, 1].
+    fn assert_normalized(cands: &[(usize, f32)], what: &str)
+        -> Result<(), String> {
+        let mut sum = 0f64;
+        for &(i, p) in cands {
+            if !p.is_finite() || !(0.0..=1.0).contains(&p) {
+                return Err(format!("{what}: prob {p} at token {i}"));
+            }
+            sum += p as f64;
+        }
+        if (sum - 1.0).abs() > 1e-5 {
+            return Err(format!("{what}: probs sum to {sum}"));
+        }
+        Ok(())
+    }
+
+    fn params(g: &mut Gen, top_k: usize, top_p: f32) -> SamplingParams {
+        SamplingParams {
+            temperature: g.f32_in(0.05, 2.0),
+            top_k,
+            top_p,
+            seed: g.rng.next_u64(),
+        }
+    }
+
+    #[test]
+    fn prop_sampled_index_is_within_the_top_k_set() {
+        check("top-k membership", 100, 17, |g: &mut Gen| {
+            let n = g.usize_in(2, 64);
+            let logits = g.vec_normal(n, 2.0);
+            let k = g.usize_in(1, n);
+            let p = params(g, k, 1.0);
+            let mut s = Sampler::new(p);
+            let idx = s.sample(&logits);
+            // reference top-k set, ties broken toward lower index
+            let mut order: Vec<usize> = (0..n).collect();
+            order.sort_by(|&a, &b| {
+                logits[b].total_cmp(&logits[a]).then(a.cmp(&b))
+            });
+            if !order[..k].contains(&idx) {
+                return Err(format!("token {idx} outside top-{k}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_nucleus_is_smallest_prefix_reaching_top_p() {
+        check("nucleus minimality", 100, 23, |g: &mut Gen| {
+            let n = g.usize_in(2, 64);
+            let logits = g.vec_normal(n, 2.0);
+            let t = g.f32_in(0.2, 2.0);
+            let top_p = g.f32_in(0.05, 0.999);
+            let mut cands = top_k_candidates(&logits, 0);
+            softmax_candidates(&mut cands, t);
+            let before = cands.clone();
+            top_p_truncate(&mut cands, top_p);
+            let kept = cands.len();
+            if kept == 0 {
+                return Err("nucleus emptied the distribution".into());
+            }
+            // kept prefix reaches top_p (unless the whole set was kept
+            // because rounding never got there)
+            let mass = |m: usize| -> f64 {
+                before[..m].iter().map(|&(_, p)| p as f64).sum()
+            };
+            if kept < before.len() && mass(kept) < top_p as f64 {
+                return Err(format!(
+                    "kept {kept} with mass {} < top_p {top_p}",
+                    mass(kept)
+                ));
+            }
+            // ...and it is the *smallest* such prefix
+            if kept > 1 && mass(kept - 1) >= top_p as f64 {
+                return Err(format!(
+                    "prefix {} already reached top_p {top_p}",
+                    kept - 1
+                ));
+            }
+            // kept tokens are exactly the head of the sorted order
+            for (a, b) in cands.iter().zip(&before) {
+                if a.0 != b.0 {
+                    return Err("nucleus reordered candidates".into());
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_probs_sum_to_one_after_each_processor() {
+        check("normalization", 100, 31, |g: &mut Gen| {
+            let n = g.usize_in(1, 64);
+            let mut logits = g.vec_normal(n, 3.0);
+            // sprinkle extremes so renormalization sees hard inputs
+            if g.bool() {
+                let i = g.rng.usize_below(n);
+                logits[i] = *g.choose(&[1e4, -1e4, f32::NEG_INFINITY]);
+            }
+            let t = g.f32_in(0.05, 2.0);
+            let k = g.usize_in(0, n);
+            let mut cands = top_k_candidates(&logits, k);
+            softmax_candidates(&mut cands, t);
+            assert_normalized(&cands, "after softmax")?;
+            top_p_truncate(&mut cands, g.f32_in(0.05, 1.0));
+            assert_normalized(&cands, "after top-p")?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn extreme_logits_never_produce_nan_inf_or_panic() {
+        // the contract cases: ±1e4, all-equal, single finite entry
+        let cases: Vec<Vec<f32>> = vec![
+            vec![1e4, -1e4, 0.0, 5.0],
+            vec![-1e4, -1e4, -1e4],
+            vec![2.5; 8],
+            vec![f32::NEG_INFINITY, 3.0, f32::NEG_INFINITY],
+            vec![f32::NEG_INFINITY, f32::NEG_INFINITY, -7.0],
+        ];
+        for logits in &cases {
+            for &t in &[0.01f32, 0.7, 1.0, 10.0] {
+                for &(k, p) in &[(0usize, 1.0f32), (2, 0.5), (1, 0.9)] {
+                    let sp = SamplingParams {
+                        temperature: t, top_k: k, top_p: p, seed: 9,
+                    };
+                    let cands = process_logits(logits, &sp);
+                    assert_normalized(&cands, "extreme").unwrap();
+                    let mut s = Sampler::new(sp);
+                    for _ in 0..8 {
+                        let idx = s.sample(logits);
+                        assert!(idx < logits.len());
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prop_same_seed_reproduces_the_same_picks() {
+        check("seed determinism", 50, 41, |g: &mut Gen| {
+            let n = g.usize_in(2, 32);
+            let p = params(g, g.usize_in(0, n), g.f32_in(0.1, 1.0));
+            let mut a = Sampler::new(p);
+            let mut b = Sampler::new(p);
+            for _ in 0..16 {
+                let logits = g.vec_normal(n, 2.0);
+                if a.sample(&logits) != b.sample(&logits) {
+                    return Err("same seed diverged".into());
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn temperature_zero_is_argmax_and_consumes_no_randomness() {
+        let logits = vec![0.3f32, 0.9, 0.9, -2.0];
+        let sp = SamplingParams {
+            temperature: 0.0, top_k: 2, top_p: 0.4, seed: 77,
+        };
+        let mut s = Sampler::new(sp);
+        for _ in 0..4 {
+            // ties break to the lowest index, exactly like argmax
+            assert_eq!(s.sample(&logits), 1);
+        }
+        // the RNG was never advanced: a fresh sampler's first draw
+        // matches this one's
+        assert_eq!(s.rng.next_u64(), SplitMix64::new(77).next_u64());
+    }
+
+    #[test]
+    fn top_k_one_is_greedy_for_any_temperature() {
+        let logits = vec![-0.5f32, 2.0, 1.9, 0.0];
+        let sp = SamplingParams {
+            temperature: 5.0, top_k: 1, top_p: 1.0, seed: 3,
+        };
+        let mut s = Sampler::new(sp);
+        for _ in 0..16 {
+            assert_eq!(s.sample(&logits), 1);
+        }
+    }
+
+    #[test]
+    fn top_k_zero_and_top_p_one_keep_the_full_distribution() {
+        let logits = vec![0.1f32, 0.2, 0.3];
+        let sp = SamplingParams {
+            temperature: 1.0, top_k: 0, top_p: 1.0, seed: 1,
+        };
+        let cands = process_logits(&logits, &sp);
+        assert_eq!(cands.len(), 3);
+        // sorted descending: token 2, 1, 0
+        assert_eq!(
+            cands.iter().map(|&(i, _)| i).collect::<Vec<_>>(),
+            vec![2, 1, 0]
+        );
+    }
+
+    #[test]
+    fn equal_logits_truncate_toward_the_lowest_indices() {
+        let cands = top_k_candidates(&[1.0, 1.0, 1.0, 1.0], 2);
+        assert_eq!(
+            cands.iter().map(|&(i, _)| i).collect::<Vec<_>>(),
+            vec![0, 1]
+        );
+    }
+
+    #[test]
+    fn splitmix_is_deterministic_and_uniformish() {
+        let mut a = SplitMix64::new(42);
+        let mut b = SplitMix64::new(42);
+        let mut mean = 0f64;
+        for _ in 0..4096 {
+            let x = a.f64();
+            assert_eq!(x, b.f64());
+            assert!((0.0..1.0).contains(&x));
+            mean += x;
+        }
+        mean /= 4096.0;
+        assert!((mean - 0.5).abs() < 0.03, "mean {mean}");
+    }
+
+    #[test]
+    fn validate_rejects_bad_ranges() {
+        let ok = SamplingParams {
+            temperature: 0.8, top_k: 5, top_p: 0.9, seed: 0,
+        };
+        assert!(ok.validate().is_ok());
+        assert!(SamplingParams { temperature: -1.0, ..ok }
+            .validate()
+            .is_err());
+        assert!(SamplingParams { temperature: f32::NAN, ..ok }
+            .validate()
+            .is_err());
+        assert!(SamplingParams { top_p: 0.0, ..ok }.validate().is_err());
+        assert!(SamplingParams { top_p: 1.5, ..ok }.validate().is_err());
+        assert!(SamplingParams::greedy().validate().is_ok());
+    }
+}

@@ -44,10 +44,22 @@
 //! that yields each generated token as it is chosen, alongside the
 //! final `Completion`.
 //!
+//! Token selection is per-request (`model::sample`): every request
+//! carries `SamplingParams { temperature, top_k, top_p, seed }` and
+//! owns a private seeded RNG, so its completion is reproducible no
+//! matter how the scheduler interleaves it with other traffic.
+//! `submit`/`submit_streaming` default to greedy; the `_sampled`
+//! variants take explicit params (validated at the submit boundary).
+//! One uniform draw is consumed per sampled token — and none when
+//! greedy — so the stream depends only on the logits sequence, which
+//! both scheduler paths produce bit-exactly (the parity tests are the
+//! contract).  `temperature == 0` short-circuits to argmax, keeping
+//! greedy requests bit-exact with `Model::generate`.
+//!
 //! The pre-refactor collect-then-serialize path is kept behind
-//! `ServeMode::Sequential` as the parity baseline.  Both paths are
-//! greedy and share `greedy_decode`, so served tokens are bit-exact
-//! with `Model::generate`.
+//! `ServeMode::Sequential` as the parity baseline.  Both paths share
+//! the same sampler, so a given `(seed, prompt)` yields the same
+//! tokens on either.
 
 use std::collections::VecDeque;
 use std::ops::Deref;
@@ -58,9 +70,8 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
-use crate::model::kv::{
-    argmax, greedy_decode, kv_positions_needed, PagedKvCache,
-};
+use crate::model::kv::{kv_positions_needed, sample_decode, PagedKvCache};
+use crate::model::sample::{Sampler, SamplingParams};
 use crate::model::Model;
 
 #[derive(Clone, Debug)]
@@ -68,6 +79,10 @@ pub struct Request {
     pub id: u64,
     pub prompt: Vec<u32>,
     pub max_new: usize,
+    /// Per-request token selection (greedy when
+    /// `SamplingParams::greedy()`); the seed makes the completion
+    /// reproducible across scheduler paths.
+    pub params: SamplingParams,
 }
 
 #[derive(Clone, Debug)]
@@ -241,25 +256,48 @@ impl Server {
         }
     }
 
-    /// Enqueue a request; returns (id, completion receiver).  Errors if
-    /// the request's worst-case KV footprint exceeds the whole pool (it
-    /// could never be admitted).
+    /// Enqueue a greedy request; returns (id, completion receiver).
+    /// Errors if the request's worst-case KV footprint exceeds the
+    /// whole pool (it could never be admitted).
     pub fn submit(&self, prompt: Vec<u32>, max_new: usize)
         -> Result<(u64, Rx<Completion>)> {
-        let (id, _, rx) = self.enqueue(prompt, max_new, false)?;
+        self.submit_sampled(prompt, max_new, SamplingParams::greedy())
+    }
+
+    /// Enqueue a request with explicit per-request sampling params
+    /// (temperature / top-k / top-p / seed).  Params are validated
+    /// here, at the submit boundary, so a bad request fails with an
+    /// actionable error instead of a worker panic.
+    pub fn submit_sampled(
+        &self, prompt: Vec<u32>, max_new: usize, params: SamplingParams,
+    ) -> Result<(u64, Rx<Completion>)> {
+        let (id, _, rx) = self.enqueue(prompt, max_new, params, false)?;
         Ok((id, rx))
     }
 
-    /// Enqueue a request with per-token streaming; returns
+    /// Enqueue a greedy request with per-token streaming; returns
     /// (id, token receiver, completion receiver).
     pub fn submit_streaming(&self, prompt: Vec<u32>, max_new: usize)
         -> Result<(u64, Rx<Token>, Rx<Completion>)> {
-        let (id, stream_rx, rx) = self.enqueue(prompt, max_new, true)?;
+        self.submit_streaming_sampled(
+            prompt, max_new, SamplingParams::greedy(),
+        )
+    }
+
+    /// Streaming variant of `submit_sampled`.
+    pub fn submit_streaming_sampled(
+        &self, prompt: Vec<u32>, max_new: usize, params: SamplingParams,
+    ) -> Result<(u64, Rx<Token>, Rx<Completion>)> {
+        let (id, stream_rx, rx) =
+            self.enqueue(prompt, max_new, params, true)?;
         Ok((id, stream_rx.unwrap(), rx))
     }
 
-    fn enqueue(&self, prompt: Vec<u32>, max_new: usize, stream: bool)
-        -> Result<(u64, Option<Rx<Token>>, Rx<Completion>)> {
+    fn enqueue(
+        &self, prompt: Vec<u32>, max_new: usize, params: SamplingParams,
+        stream: bool,
+    ) -> Result<(u64, Option<Rx<Token>>, Rx<Completion>)> {
+        params.validate()?;
         // reject impossible requests up front, with a message the
         // caller can act on — once queued they could only wait forever.
         // Degenerate requests (empty prompt / max_new == 0) are exempt:
@@ -295,7 +333,7 @@ impl Server {
         };
         let (lock, cv) = &*self.queue;
         lock.lock().unwrap().items.push_back(Pending {
-            req: Request { id, prompt, max_new },
+            req: Request { id, prompt, max_new, params },
             enqueued: Instant::now(),
             tx,
             stream: stream_tx,
@@ -337,8 +375,8 @@ impl Drop for Server {
 /// `queue_ms` was measured once, at dequeue.
 fn serve_one(model: &Model, p: Pending, queue_ms: f64) {
     let mut first_token_ms = None;
-    let tokens = greedy_decode(model, &p.req.prompt, p.req.max_new,
-                               |i, t| {
+    let tokens = sample_decode(model, &p.req.prompt, p.req.max_new,
+                               p.req.params, |i, t| {
         if i == 0 {
             first_token_ms =
                 Some(p.enqueued.elapsed().as_secs_f64() * 1e3);
@@ -427,6 +465,10 @@ struct Slot {
     next_feed: u32,
     /// enqueue-to-first-sample latency, set when token 0 is chosen
     first_token_ms: Option<f64>,
+    /// the request's private sampler (params + seeded RNG): one draw
+    /// per sampled token, so the stream is independent of how other
+    /// slots interleave with this one
+    sampler: Sampler,
 }
 
 /// The continuous-batching engine loop over the paged KV pool.
@@ -554,6 +596,7 @@ fn continuous_loop(
             let backfill = slots.iter().flatten().any(|s| {
                 s.prompt_pos > 0 || !s.tokens.is_empty()
             });
+            let sampler = Sampler::new(p.req.params);
             slots[si] = Some(Slot {
                 p,
                 queue_ms,
@@ -561,6 +604,7 @@ fn continuous_loop(
                 tokens: Vec::new(),
                 next_feed: 0,
                 first_token_ms: None,
+                sampler,
             });
             active += 1;
             let mut st = stats.lock().unwrap();
@@ -631,7 +675,7 @@ fn continuous_loop(
                 // the prompt's last logits arrive with its final
                 // chunk: fall through and sample the first token
             }
-            let next = argmax(logits.row(row)) as u32;
+            let next = slot.sampler.sample(logits.row(row)) as u32;
             let index = slot.tokens.len();
             if index == 0 {
                 slot.first_token_ms =
@@ -844,6 +888,187 @@ mod tests {
     #[test]
     fn continuous_parity_twell() {
         continuous_parity(FfnBackend::Twell);
+    }
+
+    fn sampled_params(seed: u64) -> SamplingParams {
+        SamplingParams { temperature: 0.8, top_k: 12, top_p: 0.95, seed }
+    }
+
+    /// One sampled request through a fresh server; `with_noise` adds
+    /// concurrent requests with *different* seeds so the target's slot
+    /// genuinely interleaves with divergent traffic (slots=2 forces
+    /// mixed batches and backfill).
+    fn run_sampled(
+        backend: FfnBackend, mode: ServeMode, params: SamplingParams,
+        with_noise: bool,
+    ) -> Vec<u32> {
+        let server = Server::start(toy_model(backend), policy(2, mode));
+        let noise: Vec<_> = if with_noise {
+            (0..3u64)
+                .map(|i| {
+                    server
+                        .submit_sampled(
+                            vec![2 + i as u32, 5],
+                            6,
+                            sampled_params(1000 + i),
+                        )
+                        .unwrap()
+                        .1
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
+        let (_, rx) =
+            server.submit_sampled(vec![1, 2, 3, 4], 8, params).unwrap();
+        let c = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        for rx in noise {
+            rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        }
+        server.shutdown();
+        c.tokens
+    }
+
+    /// The sampling determinism contract: the same `(seed, prompt)`
+    /// produces the identical token stream on the sequential and the
+    /// batched scheduler path, with or without concurrent
+    /// divergent-seed traffic — because both paths produce bit-exact
+    /// logits (the greedy parity family) and the request's private RNG
+    /// consumes exactly one draw per token.
+    fn seeded_stream_parity(backend: FfnBackend) {
+        let params = sampled_params(0xC0FFEE);
+        let seq =
+            run_sampled(backend, ServeMode::Sequential, params, false);
+        let cont =
+            run_sampled(backend, ServeMode::Continuous, params, false);
+        let noisy =
+            run_sampled(backend, ServeMode::Continuous, params, true);
+        assert_eq!(seq.len(), 8);
+        assert_eq!(seq, cont,
+                   "sequential vs batched diverged ({backend:?})");
+        assert_eq!(cont, noisy,
+                   "concurrent traffic perturbed the stream ({backend:?})");
+        let again =
+            run_sampled(backend, ServeMode::Continuous, params, true);
+        assert_eq!(cont, again, "same seed failed to reproduce");
+    }
+
+    #[test]
+    fn seeded_stream_parity_dense() {
+        seeded_stream_parity(FfnBackend::Dense);
+    }
+
+    #[test]
+    fn seeded_stream_parity_twell() {
+        seeded_stream_parity(FfnBackend::Twell);
+    }
+
+    /// `temperature == 0` must be bit-exact with `greedy_reference`
+    /// regardless of top-k / top-p, on both scheduler paths and both
+    /// FFN backends — the short-circuit never reaches the pipeline.
+    fn temperature_zero_matches_greedy(backend: FfnBackend) {
+        let expected = {
+            let model = toy_model(backend);
+            greedy_reference(&model, &[3, 14, 15], 6).unwrap()
+        };
+        let params = SamplingParams {
+            temperature: 0.0, top_k: 3, top_p: 0.5, seed: 999,
+        };
+        for mode in [ServeMode::Sequential, ServeMode::Continuous] {
+            let server = Server::start(toy_model(backend), policy(2, mode));
+            let (_, rx) =
+                server.submit_sampled(vec![3, 14, 15], 6, params).unwrap();
+            let c = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+            assert_eq!(c.tokens, expected,
+                       "t=0 != greedy ({backend:?}, {mode:?})");
+            server.shutdown();
+        }
+    }
+
+    #[test]
+    fn temperature_zero_matches_greedy_dense() {
+        temperature_zero_matches_greedy(FfnBackend::Dense);
+    }
+
+    #[test]
+    fn temperature_zero_matches_greedy_twell() {
+        temperature_zero_matches_greedy(FfnBackend::Twell);
+    }
+
+    #[test]
+    fn different_seeds_diverge_under_high_temperature() {
+        // the whole point of per-request sampling: divergent decode
+        // traffic.  Six seeds at temperature 2 over a 32-token vocab —
+        // all-identical streams would mean the seed is being ignored.
+        let model = toy_model(FfnBackend::Dense);
+        let server = Server::start(model, policy(4, ServeMode::Continuous));
+        let rxs: Vec<_> = (0..6u64)
+            .map(|seed| {
+                let params = SamplingParams {
+                    temperature: 2.0, top_k: 0, top_p: 1.0, seed,
+                };
+                server.submit_sampled(vec![7, 7, 7], 8, params).unwrap().1
+            })
+            .collect();
+        let streams: Vec<Vec<u32>> = rxs
+            .into_iter()
+            .map(|rx| {
+                rx.recv_timeout(Duration::from_secs(60)).unwrap().tokens
+            })
+            .collect();
+        assert!(streams.iter().all(|s| s.len() == 8));
+        assert!(streams.iter().any(|s| s != &streams[0]),
+                "six seeds produced identical streams: {streams:?}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn invalid_sampling_params_rejected_at_submit() {
+        let model = toy_model(FfnBackend::Dense);
+        let server = Server::start(model, policy(2, ServeMode::Continuous));
+        let bad_t = SamplingParams {
+            temperature: -0.5,
+            ..SamplingParams::greedy()
+        };
+        assert!(server.submit_sampled(vec![1], 2, bad_t).is_err());
+        let bad_p = SamplingParams {
+            temperature: 0.7, top_k: 0, top_p: 0.0, seed: 1,
+        };
+        assert!(server.submit_sampled(vec![1], 2, bad_p).is_err());
+        // the server is still healthy: a valid request goes through
+        let (_, rx) = server.submit(vec![1], 2).unwrap();
+        let c = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        assert_eq!(c.tokens.len(), 2);
+        server.shutdown();
+    }
+
+    #[test]
+    fn sampled_streaming_yields_the_completion_tokens() {
+        let params = SamplingParams {
+            temperature: 0.9, top_k: 6, top_p: 0.9, seed: 4242,
+        };
+        let server =
+            Server::start(toy_model(FfnBackend::Dense), ServePolicy::default());
+        let (id, tok_rx, rx) = server
+            .submit_streaming_sampled(vec![2, 9, 4], 6, params)
+            .unwrap();
+        let c = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        let streamed: Vec<Token> = tok_rx.try_iter().collect();
+        assert_eq!(streamed.len(), c.tokens.len());
+        for (i, t) in streamed.iter().enumerate() {
+            assert_eq!(t.id, id);
+            assert_eq!(t.index, i);
+            assert_eq!(t.token, c.tokens[i]);
+        }
+        // ...and the stream is seed-reproducible on a fresh server
+        let server2 =
+            Server::start(toy_model(FfnBackend::Dense), ServePolicy::default());
+        let (_, rx2) =
+            server2.submit_sampled(vec![2, 9, 4], 6, params).unwrap();
+        let c2 = rx2.recv_timeout(Duration::from_secs(30)).unwrap();
+        assert_eq!(c2.tokens, c.tokens);
+        server.shutdown();
+        server2.shutdown();
     }
 
     /// Chunk 1 (the old token-by-token path), one KV block, and a

@@ -86,14 +86,20 @@ impl Pcg32 {
     /// Sample an index from unnormalized weights.
     pub fn weighted(&mut self, weights: &[f64]) -> usize {
         let total: f64 = weights.iter().sum();
-        let mut x = self.f64() * total;
-        for (i, w) in weights.iter().enumerate() {
-            if x < *w {
-                return i;
-            }
-            x -= w;
-        }
-        weights.len() - 1
+        cumulative_pick(self.f64() * total, weights.iter().copied())
+    }
+
+    /// `f32` fast path of `weighted`: samples straight from `f32`
+    /// weights without first copying them into a `Vec<f64>`,
+    /// accumulating in `f64` so it picks exactly the index `weighted`
+    /// picks on the same weights.  (The serving sampler keeps its own
+    /// per-request RNG and goes through `cumulative_pick` directly;
+    /// this entry point is for `Pcg32` users with `f32` weight
+    /// arrays.)
+    pub fn weighted_f32(&mut self, weights: &[f32]) -> usize {
+        let total: f64 = weights.iter().map(|&w| w as f64).sum();
+        cumulative_pick(self.f64() * total,
+                        weights.iter().map(|&w| w as f64))
     }
 
     /// Fisher–Yates shuffle.
@@ -103,6 +109,26 @@ impl Pcg32 {
             items.swap(i, j);
         }
     }
+}
+
+/// Walk a cumulative distribution: the first index whose weight pushes
+/// the running total past `x`, where callers draw `x` uniform in
+/// `[0, total)`.  Rounding that pushes `x` past the final weight falls
+/// back to the last index.  Shared by `Pcg32::weighted`/`weighted_f32`
+/// and the serving sampler (`model::sample`), so every weighted draw
+/// in the tree resolves ties and rounding identically.
+pub fn cumulative_pick<I>(mut x: f64, weights: I) -> usize
+where
+    I: ExactSizeIterator<Item = f64>,
+{
+    let last = weights.len().saturating_sub(1);
+    for (i, w) in weights.enumerate() {
+        if x < w {
+            return i;
+        }
+        x -= w;
+    }
+    last
 }
 
 #[cfg(test)]
@@ -172,6 +198,33 @@ mod tests {
         }
         assert_eq!(counts[1], 0);
         assert!(counts[2] > counts[0] * 5);
+    }
+
+    #[test]
+    fn weighted_f32_picks_the_same_index_as_the_f64_path() {
+        // identical weights + identical RNG state: the f32 fast path
+        // accumulates in f64, so every draw must resolve to the same
+        // index the copy-to-f64 path resolves to — bit-exact
+        let wf: Vec<f32> =
+            (0..257).map(|i| ((i * 37) % 101) as f32 / 7.0).collect();
+        let wd: Vec<f64> = wf.iter().map(|&w| w as f64).collect();
+        let mut a = Pcg32::seeded(11);
+        let mut b = Pcg32::seeded(11);
+        for step in 0..4096 {
+            let i = a.weighted(&wd);
+            let j = b.weighted_f32(&wf);
+            assert_eq!(i, j, "diverged at draw {step}");
+        }
+    }
+
+    #[test]
+    fn cumulative_pick_covers_rounding_overflow() {
+        // x just past the total (rounding): fall back to the last index
+        let w = [0.25f64, 0.25, 0.5];
+        assert_eq!(cumulative_pick(0.0, w.iter().copied()), 0);
+        assert_eq!(cumulative_pick(0.3, w.iter().copied()), 1);
+        assert_eq!(cumulative_pick(0.99, w.iter().copied()), 2);
+        assert_eq!(cumulative_pick(1.01, w.iter().copied()), 2);
     }
 
     #[test]
