@@ -7,10 +7,12 @@
 //! Run: cargo run --release --example serve_sparse -- \
 //!        [--run e2e_s] [--slots 8] [--requests 24] [--max-new 12] \
 //!        [--kv-blocks 128] [--kv-block-size 16] [--prefill-chunk 16] \
-//!        [--temperature 0.8] [--top-k 40] [--top-p 0.95] [--seed 0]
+//!        [--temperature 0.8] [--top-k 40] [--top-p 0.95] [--seed 0] \
+//!        [--threads N]
 //! (trains a quick tiny model if the run does not exist yet;
-//! temperature 0 — the default — decodes greedily, and request i
-//! samples with seed `--seed + i` so runs stay reproducible)
+//! temperature 0 — the default — decodes greedily, request i samples
+//! with seed `--seed + i` so runs stay reproducible, and --threads
+//! pins the kernel worker pool before first use)
 
 use std::time::{Duration, Instant};
 
@@ -26,6 +28,11 @@ use repro::util::json::Json;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse(std::env::args().skip(1))?;
+    // pin the kernel worker pool before the first kernel call
+    let threads = args.get_usize("threads", 0)?;
+    if threads > 0 {
+        repro::sparse::par::set_threads(threads);
+    }
     let run = args.get_or("run", "serve_demo");
     let n_requests = args.get_usize("requests", 24)?;
     let max_new = args.get_usize("max-new", 12)?;
@@ -48,6 +55,10 @@ fn main() -> anyhow::Result<()> {
         seed: base_params.seed.wrapping_add(i as u64),
         ..base_params
     };
+    println!(
+        "kernel worker pool: {} threads",
+        repro::sparse::par::num_threads()
+    );
     let paths = default_paths();
     let dir = paths.run_dir(&run);
     if !dir.join("checkpoint.bin").exists() {

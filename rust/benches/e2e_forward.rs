@@ -43,25 +43,19 @@ fn synthetic_model(layers: usize, target_nnz: f64) -> Model {
             let (ffn, _) = synth_sparse_ffn(
                 64, d, f, target_nnz, 100 + li as u64, 32, 4, 128, 0.125,
             );
-            Layer {
-                ln_attn: vec![1.0; d],
-                wq: Mat::randn(d, d, 0.05, &mut rng),
-                wk: Mat::randn(d, d, 0.05, &mut rng),
-                wv: Mat::randn(d, d, 0.05, &mut rng),
-                wo: Mat::randn(d, d, 0.05, &mut rng),
-                ln_ffn: vec![1.0; d],
+            Layer::new(
+                vec![1.0; d],
+                Mat::randn(d, d, 0.05, &mut rng),
+                Mat::randn(d, d, 0.05, &mut rng),
+                Mat::randn(d, d, 0.05, &mut rng),
+                Mat::randn(d, d, 0.05, &mut rng),
+                vec![1.0; d],
                 ffn,
-            }
+            )
         })
         .collect();
-    Model {
-        embed: Mat::randn(cfg.vocab_size, d, 0.05, &mut rng),
-        ln_final: vec![1.0; d],
-        cfg,
-        layers: layers_v,
-        backend: FfnBackend::Dense,
-        comp: 4,
-    }
+    let embed = Mat::randn(cfg.vocab_size, d, 0.05, &mut rng);
+    Model::assemble(cfg, embed, layers_v, vec![1.0; d], FfnBackend::Dense, 4)
 }
 
 fn bench_model(label: &str, mut model: Model, table: &mut Table) {

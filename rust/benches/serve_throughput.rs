@@ -1,32 +1,40 @@
 //! Continuous-batching serving throughput: tokens/sec and p50/p95
 //! request latency vs KV slot count (1/4/8/16), for both FFN backends,
 //! plus a time-to-first-token sweep over the prefill chunk size on
-//! long prompts (4x the KV block), plus a sampled-decode sweep
-//! (greedy argmax vs temperature 0.8 / top-p 0.95 per-request
-//! sampling) showing what stochastic decoding costs on the hot loop.
+//! long prompts (4x the KV block), a sampled-decode sweep (greedy
+//! argmax vs temperature 0.8 / top-p 0.95 per-request sampling), and a
+//! **skinny-batch decode kernel sweep**: the seed's row-parallel
+//! dispatch (which collapses every decode-shaped kernel onto one core)
+//! vs the pooled column-parallel fast path, at pure-decode batch sizes
+//! 1/4/8/16.
 //!
-//! Two claims under test: decode throughput grows with the number of
-//! slots because the batched step hands the FFN backends a multi-row
-//! activation matrix, amortizing the gate + fused kernels across
-//! concurrent sequences (tokens/sec should increase monotonically
-//! 1 → 8 slots for the TwELL backend); and block-granular chunked
-//! prefill collapses TTFT on long prompts versus the token-by-token
-//! baseline, since prefill finishes in ceil(L / chunk) engine
-//! iterations instead of L.
+//! Claims under test: decode throughput grows with the number of slots
+//! because the batched step hands the FFN backends a multi-row
+//! activation matrix; block-granular chunked prefill collapses TTFT on
+//! long prompts; and the column-parallel fast path beats the seed
+//! dispatch at **every** batch ≤ 16, because the seed path ran those
+//! kernels sequentially while the pool keeps all cores fed.
 //!
-//! Prints the usual paper-style table plus one machine-readable JSON
+//! Prints the usual paper-style tables plus one machine-readable JSON
 //! line (`{"bench": "serve_throughput", "rows": [...]}`), and persists
 //! the same report to `BENCH_serve_throughput.json` at the repo root
-//! so the perf trajectory populates across PRs.
+//! so the perf trajectory populates across PRs.  Every row records the
+//! worker-pool thread count.
+//!
+//! Args (after `--`): `--smoke` shrinks every wave to CI-smoke sizes
+//! (same sections, same JSON schema, seconds instead of minutes);
+//! `--threads N` pins the worker pool before first use.
 
 use std::time::{Duration, Instant};
 
 use repro::config::ModelConfig;
-use repro::model::kv::kv_positions_needed;
+use repro::model::kv::{argmax, kv_positions_needed, DecodeScratch,
+                       PagedKvCache};
 use repro::model::sample::SamplingParams;
 use repro::model::{FfnBackend, Layer, Model};
 use repro::serve::{ServeMetrics, ServeMode, ServePolicy, Server};
 use repro::sparse::ffn::synth_sparse_ffn;
+use repro::sparse::par;
 use repro::tensor::Mat;
 use repro::util::bench::Table;
 use repro::util::json::Json;
@@ -62,25 +70,19 @@ fn synthetic_model(layers: usize, target_nnz: f64, backend: FfnBackend)
             let (ffn, _) = synth_sparse_ffn(
                 64, d, f, target_nnz, 100 + li as u64, 32, 4, 128, 0.125,
             );
-            Layer {
-                ln_attn: vec![1.0; d],
-                wq: Mat::randn(d, d, 0.05, &mut rng),
-                wk: Mat::randn(d, d, 0.05, &mut rng),
-                wv: Mat::randn(d, d, 0.05, &mut rng),
-                wo: Mat::randn(d, d, 0.05, &mut rng),
-                ln_ffn: vec![1.0; d],
+            Layer::new(
+                vec![1.0; d],
+                Mat::randn(d, d, 0.05, &mut rng),
+                Mat::randn(d, d, 0.05, &mut rng),
+                Mat::randn(d, d, 0.05, &mut rng),
+                Mat::randn(d, d, 0.05, &mut rng),
+                vec![1.0; d],
                 ffn,
-            }
+            )
         })
         .collect();
-    Model {
-        embed: Mat::randn(cfg.vocab_size, d, 0.05, &mut rng),
-        ln_final: vec![1.0; d],
-        cfg,
-        layers: layers_v,
-        backend,
-        comp: 4,
-    }
+    let embed = Mat::randn(cfg.vocab_size, d, 0.05, &mut rng);
+    Model::assemble(cfg, embed, layers_v, vec![1.0; d], backend, 4)
 }
 
 /// One serving wave; returns (tok/s, p50 ms, p95 ms, TTFT p50 ms,
@@ -139,6 +141,62 @@ fn run_wave(backend: FfnBackend, slots: usize, n_requests: usize,
     out
 }
 
+/// Time a pure-decode loop at a fixed batch: `batch` slots prefilled
+/// with `prompt_len` tokens, then `steps` greedy-feedback decode
+/// iterations through one persistent `DecodeScratch` — the kernel-level
+/// view of the skinny-batch fast path, with no scheduler noise.
+/// Returns decode tokens/sec.
+fn decode_wave(
+    model: &Model, batch: usize, prompt_len: usize, steps: usize,
+) -> f64 {
+    let block = 16usize;
+    let warmup = 2usize;
+    let positions = prompt_len + steps + warmup;
+    let blocks = batch * positions.div_ceil(block);
+    let mut cache = PagedKvCache::new(model, batch, blocks, block);
+    for s in 0..batch {
+        cache.reserve(s, positions);
+    }
+    let mut scratch = DecodeScratch::new(model, batch * prompt_len, batch);
+    let vocab = model.cfg.vocab_size;
+    let prompts: Vec<Vec<u32>> = (0..batch)
+        .map(|s| {
+            (0..prompt_len)
+                .map(|j| ((s * 131 + j * 31) % vocab) as u32)
+                .collect()
+        })
+        .collect();
+    let mut toks: Vec<(usize, [u32; 1])> = {
+        let feeds: Vec<(usize, &[u32])> =
+            prompts.iter().enumerate().map(|(s, p)| (s, &p[..])).collect();
+        let l = model.prefill_decode_step_into(&mut cache, &feeds,
+                                               &mut scratch);
+        (0..batch).map(|s| (s, [argmax(l.row(s)) as u32])).collect()
+    };
+    let advance = |toks: &mut Vec<(usize, [u32; 1])>,
+                   cache: &mut PagedKvCache,
+                   scratch: &mut DecodeScratch| {
+        let next: Vec<u32> = {
+            let feeds: Vec<(usize, &[u32])> =
+                toks.iter().map(|(s, t)| (*s, &t[..])).collect();
+            let l = model.prefill_decode_step_into(cache, &feeds, scratch);
+            (0..l.rows).map(|r| argmax(l.row(r)) as u32).collect()
+        };
+        for ((_, t), &n) in toks.iter_mut().zip(&next) {
+            t[0] = n;
+        }
+    };
+    // warm the pool (worker spawn, first-touch paging) off the clock
+    for _ in 0..warmup {
+        advance(&mut toks, &mut cache, &mut scratch);
+    }
+    let t0 = Instant::now();
+    for _ in 0..steps {
+        advance(&mut toks, &mut cache, &mut scratch);
+    }
+    (batch * steps) as f64 / t0.elapsed().as_secs_f64()
+}
+
 fn backend_label(backend: FfnBackend) -> &'static str {
     match backend {
         FfnBackend::Dense => "dense",
@@ -147,12 +205,24 @@ fn backend_label(backend: FfnBackend) -> &'static str {
 }
 
 fn main() {
-    let (n_requests, prompt_len, max_new) = (32, 8, 16);
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = argv.iter().any(|a| a == "--smoke");
+    if let Some(i) = argv.iter().position(|a| a == "--threads") {
+        let n: usize = argv
+            .get(i + 1)
+            .and_then(|v| v.parse().ok())
+            .expect("--threads needs a positive integer");
+        par::set_threads(n);
+    }
+    let threads = par::num_threads();
+    let (n_requests, prompt_len, max_new) =
+        if smoke { (6, 4, 4) } else { (32, 8, 16) };
     let kv_block_size = 16usize;
+    let slot_sweep: &[usize] = if smoke { &[1, 4] } else { &[1, 4, 8, 16] };
     println!("== continuous-batching serve throughput ==");
     println!(
         "synthetic 4L d=128 f=352 model, nnz≈30; {n_requests} requests, \
-         prompt {prompt_len}, max_new {max_new}\n"
+         prompt {prompt_len}, max_new {max_new}, {threads} threads\n"
     );
     let mut table = Table::new(&[
         "backend", "slots", "tok/s", "p50 ms", "p95 ms", "ttft p50",
@@ -161,7 +231,7 @@ fn main() {
     let mut rows = Vec::new();
     for backend in [FfnBackend::Dense, FfnBackend::Twell] {
         let label = backend_label(backend);
-        for &slots in &[1usize, 4, 8, 16] {
+        for &slots in slot_sweep {
             let (tok_s, p50, p95, ttft, backfills) = run_wave(
                 backend, slots, n_requests, prompt_len, max_new,
                 kv_block_size, kv_block_size, SamplingParams::greedy(),
@@ -182,6 +252,7 @@ fn main() {
                 ("prefill_chunk", Json::Num(kv_block_size as f64)),
                 ("temperature", Json::Num(0.0)),
                 ("top_p", Json::Num(1.0)),
+                ("threads", Json::Num(threads as f64)),
                 ("tok_s", Json::Num(tok_s)),
                 ("p50_ms", Json::Num(p50)),
                 ("p95_ms", Json::Num(p95)),
@@ -200,8 +271,11 @@ fn main() {
     // ---- TTFT vs prefill chunk: long prompts (4x the KV block) through
     // chunk 1 (the old token-by-token prefill baseline), one block per
     // step (the default), and whole-prompt chunks ------------------------
-    let (ttft_requests, long_prompt, ttft_max_new, ttft_slots) =
-        (16usize, 4 * kv_block_size, 8usize, 4usize);
+    let (ttft_requests, long_prompt, ttft_max_new, ttft_slots) = if smoke {
+        (4usize, 4 * kv_block_size, 4usize, 2usize)
+    } else {
+        (16usize, 4 * kv_block_size, 8usize, 4usize)
+    };
     println!(
         "\n== time-to-first-token vs prefill chunk ==\n\
          prompt {long_prompt} (4x the {kv_block_size}-position KV \
@@ -236,6 +310,7 @@ fn main() {
                 ("prefill_chunk", Json::Num(prefill_chunk as f64)),
                 ("temperature", Json::Num(0.0)),
                 ("top_p", Json::Num(1.0)),
+                ("threads", Json::Num(threads as f64)),
                 ("tok_s", Json::Num(tok_s)),
                 ("p50_ms", Json::Num(p50)),
                 ("p95_ms", Json::Num(p95)),
@@ -255,7 +330,7 @@ fn main() {
     // per-request sampling — the processor pipeline (sort + softmax +
     // nucleus cut over the vocab) runs once per sampled token, so this
     // sweep prices stochastic decoding on the hot decode loop -----------
-    let sample_slots = 8usize;
+    let sample_slots = if smoke { 4usize } else { 8usize };
     println!(
         "\n== sampled decode: greedy vs t=0.8 top-p=0.95 ==\n\
          {n_requests} requests, prompt {prompt_len}, max_new \
@@ -299,6 +374,7 @@ fn main() {
                 ("prefill_chunk", Json::Num(kv_block_size as f64)),
                 ("temperature", Json::Num(params.temperature as f64)),
                 ("top_p", Json::Num(params.top_p as f64)),
+                ("threads", Json::Num(threads as f64)),
                 ("tok_s", Json::Num(tok_s)),
                 ("p50_ms", Json::Num(p50)),
                 ("p95_ms", Json::Num(p95)),
@@ -314,6 +390,54 @@ fn main() {
          FFN still dominates; a large gap means the sampler is \
          allocating or sorting more than it should."
     );
+
+    // ---- skinny-batch decode kernel sweep: the seed's row-parallel
+    // dispatch (skinny kernels on one core) vs the pooled
+    // column-parallel fast path, pure decode, no scheduler noise --------
+    let decode_steps = if smoke { 6usize } else { 48usize };
+    let decode_prompt = 4usize;
+    println!(
+        "\n== decode kernel sweep: seed row dispatch vs pooled \
+         column-parallel ==\n\
+         pure decode at batch 1/4/8/16, {decode_steps} timed steps, \
+         greedy feedback, persistent scratch, {threads} threads\n"
+    );
+    let mut decode_table =
+        Table::new(&["backend", "path", "batch", "decode tok/s"]);
+    for backend in [FfnBackend::Dense, FfnBackend::Twell] {
+        let label = backend_label(backend);
+        let model = synthetic_model(4, 30.0, backend);
+        for &batch in &[1usize, 4, 8, 16] {
+            for (path, fast) in [("row-seed", false), ("col-pool", true)] {
+                par::set_skinny_fast_path(fast);
+                let tok_s =
+                    decode_wave(&model, batch, decode_prompt, decode_steps);
+                decode_table.row(&[
+                    label.to_string(),
+                    path.to_string(),
+                    batch.to_string(),
+                    format!("{tok_s:.0}"),
+                ]);
+                rows.push(Json::obj(vec![
+                    ("section", Json::str("decode_kernel")),
+                    ("backend", Json::str(label)),
+                    ("path", Json::str(path)),
+                    ("batch", Json::Num(batch as f64)),
+                    ("threads", Json::Num(threads as f64)),
+                    ("decode_tok_s", Json::Num(tok_s)),
+                ]));
+            }
+        }
+    }
+    par::set_skinny_fast_path(true);
+    decode_table.print();
+    println!(
+        "\nshape check: col-pool should beat row-seed at every batch \
+         <= 16 — the seed dispatch ran every decode-shaped kernel \
+         (fused QKV, output projection, TwELL gate + fused FFN, vocab \
+         logits) on a single core."
+    );
+
     let report = Json::obj(vec![
         ("bench", Json::str("serve_throughput")),
         ("rows", Json::Arr(rows)),

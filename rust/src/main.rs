@@ -209,6 +209,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let run = args.require("run")?;
     let n_requests = args.get_usize("requests", 16)?.max(1);
     let max_new = args.get_usize("max-new", 16)?;
+    // kernel worker-pool size (0 = auto: REPRO_THREADS or the core
+    // count).  Set before the first kernel call so the pool and every
+    // partition decision see it.
+    let threads = args.get_usize("threads", 0)?;
+    if threads > 0 {
+        repro::sparse::par::set_threads(threads);
+    }
     // scheduler tunables (continuous-batching engine, paged KV pool)
     let slots = args.get_usize("slots", 8)?;
     let max_wait_ms = args.get_f64("max-wait-ms", 5.0)?;
@@ -308,8 +315,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!(
         "served {n_requests} requests ({mode:?}, {slots} slots, \
          {kv_blocks} KV blocks x {kv_block_size} positions, prefill \
-         chunk {prefill_chunk}, {sampling}): p50 {:.1} ms, p95 {:.1} \
-         ms, p99 {:.1} ms, ttft p50 {:.1} ms, {:.0} tok/s",
+         chunk {prefill_chunk}, {} pool threads, {sampling}): p50 \
+         {:.1} ms, p95 {:.1} ms, p99 {:.1} ms, ttft p50 {:.1} ms, \
+         {:.0} tok/s",
+        repro::sparse::par::num_threads(),
         metrics.p50_ms(),
         metrics.p95_ms(),
         metrics.p99_ms(),

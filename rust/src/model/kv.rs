@@ -31,10 +31,19 @@
 //! positions are written — `blocks_in_use` therefore tracks tokens
 //! actually held, and a reserved sequence can never hit an exhausted
 //! free list mid-decode.
+//!
+//! The batched path is allocation-free: a long-lived engine owns one
+//! `DecodeScratch` and calls `prefill_decode_step_into`, which draws
+//! every buffer — activations, the fused q|k|v projection, attention
+//! accumulators, FFN intermediates, logits, per-step bookkeeping —
+//! from the scratch.  `prefill_decode_step` stays as the allocating
+//! wrapper for tests and one-shot callers, and is bit-exact with the
+//! scratch path by construction (identical kernels, identical order).
 
 use crate::model::sample::{Sampler, SamplingParams};
-use crate::model::Model;
+use crate::model::{FfnBackend, Model};
 use crate::sparse::dense;
+use crate::sparse::ffn::{forward_backend_into, FfnScratch};
 use crate::tensor::Mat;
 
 pub struct KvCache {
@@ -158,9 +167,99 @@ impl PagedKvCache {
     }
 }
 
+/// Reusable buffers for `Model::prefill_decode_step_into` — the
+/// zero-allocation decode scratch.  One per engine, sized once at the
+/// scheduler's maximum step rows (`slots * prefill_chunk`); every
+/// buffer is logically reshaped per call within its high-water mark,
+/// so the decode hot loop performs **no heap allocation at all**:
+/// activations, the fused q|k|v projection, attention accumulators,
+/// FFN intermediates (dense *and* TwELL value/index/count arrays),
+/// final-token rows, logits, and the per-step bookkeeping vectors all
+/// live here.
+pub struct DecodeScratch {
+    max_rows: usize,
+    /// distinct feeds (slots) per step — bounds `last`/`logits`, which
+    /// hold one row per feed, not one per span token: sizing the
+    /// vocab-wide logits buffer at `max_rows` would over-allocate it by
+    /// a factor of the prefill chunk
+    max_feeds: usize,
+    /// residual stream, (rows, d)
+    x: Mat,
+    /// RMSNorm output, (rows, d) — reused for both per-layer norms
+    normed: Mat,
+    /// fused q|k|v projections, (rows, 3d)
+    qkv: Mat,
+    /// attention accumulator, (rows, d)
+    attn: Mat,
+    /// output projection, (rows, d)
+    attn_out: Mat,
+    /// FFN output, (rows, d)
+    ffn_y: Mat,
+    /// each feed's last span token, (feeds, d)
+    last: Mat,
+    /// next-token logits, (feeds, vocab) — what `_into` returns
+    logits: Mat,
+    /// FFN intermediates (dense hg/hu, TwELL pack, fused coefficients)
+    ffn: FfnScratch,
+    /// attention score scratch, reused across heads and steps
+    scores: Vec<f32>,
+    /// per-feed row offsets into the packed activation matrix
+    offsets: Vec<usize>,
+    /// per-feed start positions (cache length at entry)
+    starts: Vec<usize>,
+    /// flattened physical-row lists; feed i owns
+    /// `rows_flat[row_bounds[i]..row_bounds[i + 1]]`
+    rows_flat: Vec<usize>,
+    row_bounds: Vec<usize>,
+}
+
+impl DecodeScratch {
+    /// Buffers for up to `max_rows` span tokens and `max_feeds`
+    /// distinct feeds per engine step (the scheduler sizes these as
+    /// `slots * prefill_chunk` and `slots`).  Only the model's active
+    /// FFN backend gets pre-sized intermediates.
+    pub fn new(
+        model: &Model, max_rows: usize, max_feeds: usize,
+    ) -> DecodeScratch {
+        let max_rows = max_rows.max(1);
+        let max_feeds = max_feeds.max(1).min(max_rows);
+        let d = model.cfg.d_model;
+        let (tile_n, comp) = match model.layers.first() {
+            Some(l) => (l.ffn.tile_n, l.ffn.comp),
+            None => (model.cfg.twell_tile_n.max(1), 1),
+        };
+        DecodeScratch {
+            max_rows,
+            max_feeds,
+            x: Mat::zeros(max_rows, d),
+            normed: Mat::zeros(max_rows, d),
+            qkv: Mat::zeros(max_rows, 3 * d),
+            attn: Mat::zeros(max_rows, d),
+            attn_out: Mat::zeros(max_rows, d),
+            ffn_y: Mat::zeros(max_rows, d),
+            last: Mat::zeros(max_feeds, d),
+            logits: Mat::zeros(max_feeds, model.cfg.vocab_size),
+            ffn: FfnScratch::new(
+                max_rows,
+                model.cfg.d_ff,
+                tile_n,
+                comp,
+                model.backend == FfnBackend::Twell,
+            ),
+            scores: Vec::new(),
+            offsets: Vec::new(),
+            starts: Vec::new(),
+            rows_flat: Vec::new(),
+            row_bounds: Vec::new(),
+        }
+    }
+}
+
 impl Model {
     /// Feed one token; returns the next-token logits.  Position = cache
-    /// length before the call.
+    /// length before the call.  Q/K/V come from the fused `(d, 3d)`
+    /// projection — one pass over the normed activations instead of
+    /// three, bit-exact with the separate matmuls by construction.
     pub fn decode_step(&self, cache: &mut KvCache, token: u32) -> Vec<f32> {
         assert!(cache.len < cache.cap, "kv cache full");
         let d = self.cfg.d_model;
@@ -173,16 +272,19 @@ impl Model {
         for (li, layer) in self.layers.iter().enumerate() {
             let normed = super::rmsnorm(&x, &layer.ln_attn,
                                         self.cfg.rmsnorm_eps);
-            let mut q = dense::matmul(&normed, &layer.wq);
-            let mut k = dense::matmul(&normed, &layer.wk);
-            let v = dense::matmul(&normed, &layer.wv);
-            super::rope_row(q.row_mut(0), pos, h, dh, self.cfg.rope_theta);
-            super::rope_row(k.row_mut(0), pos, h, dh, self.cfg.rope_theta);
-            cache.k[li].row_mut(pos).copy_from_slice(k.row(0));
-            cache.v[li].row_mut(pos).copy_from_slice(v.row(0));
+            let mut qkv = dense::matmul(&normed, &layer.wqkv);
+            {
+                let row = qkv.row_mut(0);
+                let (q, kv) = row.split_at_mut(d);
+                let (k, v) = kv.split_at_mut(d);
+                super::rope_row(q, pos, h, dh, &self.rope_inv_freq);
+                super::rope_row(k, pos, h, dh, &self.rope_inv_freq);
+                cache.k[li].row_mut(pos).copy_from_slice(k);
+                cache.v[li].row_mut(pos).copy_from_slice(v);
+            }
             let mut attn = Mat::zeros(1, d);
-            attend_one(q.row(0), &cache.k[li], &cache.v[li], |t| t, pos, h,
-                       dh, attn.row_mut(0), &mut scores);
+            attend_one(&qkv.row(0)[..d], &cache.k[li], &cache.v[li],
+                       |t| t, pos, h, dh, attn.row_mut(0), &mut scores);
             let attn_out = dense::matmul(&attn, &layer.wo);
             super::add_inplace(&mut x, &attn_out);
             let normed = super::rmsnorm(&x, &layer.ln_ffn,
@@ -214,12 +316,26 @@ impl Model {
         self.prefill_decode_step(cache, &feeds)
     }
 
+    /// Allocating wrapper over `prefill_decode_step_into` for callers
+    /// without a long-lived engine (tests, one-shot tools): builds a
+    /// right-sized `DecodeScratch` per call and clones the logits out.
+    /// The serving engine holds its own scratch and calls `_into`.
+    pub fn prefill_decode_step(
+        &self, cache: &mut PagedKvCache, feeds: &[(usize, &[u32])],
+    ) -> Mat {
+        let total: usize = feeds.iter().map(|&(_, s)| s.len()).sum();
+        let mut scratch =
+            DecodeScratch::new(self, total.max(1), feeds.len().max(1));
+        self.prefill_decode_step_into(cache, feeds, &mut scratch).clone()
+    }
+
     /// One engine iteration over per-slot token *spans*: each `(slot,
     /// span)` entry feeds `span.len()` consecutive tokens starting at
     /// the slot's current position — a prompt chunk during prefill, a
     /// single sampled token during decode.  Returns one logits row per
     /// entry: the next-token logits after that entry's *last* span
-    /// token, in feed order.
+    /// token, in feed order (borrowed from the scratch, where they
+    /// were computed — the decode hot loop never allocates).
     ///
     /// Attention is causal within the chunk: span token `j` (logical
     /// position `start + j`) attends over all cached history plus span
@@ -228,12 +344,16 @@ impl Model {
     /// layer's attention loop reads them back.  Every kernel on the
     /// path computes its output rows independently, so chunked prefill
     /// is bit-exact with feeding the same tokens one step at a time
-    /// (the parity tests below are the contract).  The dense and TwELL
-    /// FFN backends see the full `(sum of span lengths, d)` activation
-    /// matrix, which is where the sparse kernels amortize best.
-    pub fn prefill_decode_step(
+    /// (the parity tests below are the contract).  Q/K/V come from one
+    /// fused matmul against the layer's pre-concatenated `(d, 3d)`
+    /// weight; the dense and TwELL FFN backends see the full `(sum of
+    /// span lengths, d)` activation matrix, and at decode batch sizes
+    /// every projection dispatches onto the column-parallel skinny
+    /// kernels instead of a single core.
+    pub fn prefill_decode_step_into<'s>(
         &self, cache: &mut PagedKvCache, feeds: &[(usize, &[u32])],
-    ) -> Mat {
+        scratch: &'s mut DecodeScratch,
+    ) -> &'s Mat {
         assert!(!feeds.is_empty(), "prefill_decode_step with no feeds");
         for (i, &(slot, span)) in feeds.iter().enumerate() {
             assert!(slot < cache.slots, "slot {slot} out of range");
@@ -248,6 +368,24 @@ impl Model {
         let d = self.cfg.d_model;
         let h = self.cfg.n_heads;
         let dh = self.cfg.head_dim();
+        let DecodeScratch {
+            max_rows,
+            max_feeds,
+            x,
+            normed,
+            qkv,
+            attn,
+            attn_out,
+            ffn_y,
+            last,
+            logits,
+            ffn,
+            scores,
+            offsets,
+            starts,
+            rows_flat,
+            row_bounds,
+        } = scratch;
         // per entry: the slot's start position, its row offset into the
         // packed (sum of span lengths, d) activation matrix, and the
         // physical row of every logical position it can attend to
@@ -256,76 +394,94 @@ impl Model {
         // slot's reservation — and shared by every layer and head, so
         // the attention loop below does plain indexed loads instead of
         // per-access div/mod table walks.
-        let mut offsets = Vec::with_capacity(feeds.len());
+        offsets.clear();
+        starts.clear();
+        rows_flat.clear();
+        row_bounds.clear();
         let mut total = 0usize;
         for &(_, span) in feeds {
             offsets.push(total);
             total += span.len();
         }
-        let starts: Vec<usize> =
-            feeds.iter().map(|&(slot, _)| cache.len[slot]).collect();
-        let row_lists: Vec<Vec<usize>> = feeds
-            .iter()
-            .zip(&starts)
-            .map(|(&(slot, span), &start)| {
-                for pos in start..start + span.len() {
-                    cache.ensure_block(slot, pos);
-                }
-                let bs = cache.block_size;
-                let table = &cache.tables[slot];
-                (0..start + span.len())
-                    .map(|t| table[t / bs] * bs + t % bs)
-                    .collect()
-            })
-            .collect();
-        let mut x = Mat::zeros(total, d);
-        for (&(_, span), &off) in feeds.iter().zip(&offsets) {
+        assert!(
+            total <= *max_rows,
+            "step of {total} rows exceeds the scratch capacity {max_rows} \
+             (size DecodeScratch for slots * prefill_chunk)"
+        );
+        assert!(
+            feeds.len() <= *max_feeds,
+            "step of {} feeds exceeds the scratch capacity {max_feeds} \
+             (size DecodeScratch for the slot count)",
+            feeds.len()
+        );
+        row_bounds.push(0);
+        for &(slot, span) in feeds {
+            let start = cache.len[slot];
+            starts.push(start);
+            for pos in start..start + span.len() {
+                cache.ensure_block(slot, pos);
+            }
+            let bs = cache.block_size;
+            let table = &cache.tables[slot];
+            rows_flat.extend(
+                (0..start + span.len()).map(|t| table[t / bs] * bs + t % bs),
+            );
+            row_bounds.push(rows_flat.len());
+        }
+        x.set_rows(total);
+        for (&(_, span), &off) in feeds.iter().zip(offsets.iter()) {
             for (j, &tok) in span.iter().enumerate() {
                 x.row_mut(off + j)
                     .copy_from_slice(self.embed.row(tok as usize));
             }
         }
-        let mut scores = Vec::new();
+        normed.set_rows(total);
+        qkv.set_rows(total);
+        attn.set_rows(total);
+        attn_out.set_rows(total);
+        ffn_y.set_rows(total);
+        let twell = self.backend == FfnBackend::Twell;
         for (li, layer) in self.layers.iter().enumerate() {
-            let normed = super::rmsnorm(&x, &layer.ln_attn,
-                                        self.cfg.rmsnorm_eps);
-            let mut q = dense::matmul(&normed, &layer.wq);
-            let mut k = dense::matmul(&normed, &layer.wk);
-            let v = dense::matmul(&normed, &layer.wv);
+            super::rmsnorm_into(x, &layer.ln_attn, self.cfg.rmsnorm_eps,
+                                normed);
+            // fused q|k|v: one (total, d) @ (d, 3d) skinny matmul
+            dense::matmul_into(normed, &layer.wqkv, qkv);
             // RoPE + paged K/V writes for every span token, before the
             // attention loop reads any of them back
             for (i, &(_, span)) in feeds.iter().enumerate() {
+                let rows = &rows_flat[row_bounds[i]..row_bounds[i + 1]];
                 for j in 0..span.len() {
                     let r = offsets[i] + j;
                     let pos = starts[i] + j;
-                    super::rope_row(q.row_mut(r), pos, h, dh,
-                                    self.cfg.rope_theta);
-                    super::rope_row(k.row_mut(r), pos, h, dh,
-                                    self.cfg.rope_theta);
-                    let prow = row_lists[i][pos];
-                    cache.k[li].row_mut(prow).copy_from_slice(k.row(r));
-                    cache.v[li].row_mut(prow).copy_from_slice(v.row(r));
+                    let row = qkv.row_mut(r);
+                    let (q, kv) = row.split_at_mut(d);
+                    let (k, v) = kv.split_at_mut(d);
+                    super::rope_row(q, pos, h, dh, &self.rope_inv_freq);
+                    super::rope_row(k, pos, h, dh, &self.rope_inv_freq);
+                    let prow = rows[pos];
+                    cache.k[li].row_mut(prow).copy_from_slice(k);
+                    cache.v[li].row_mut(prow).copy_from_slice(v);
                 }
             }
-            let mut attn = Mat::zeros(total, d);
+            attn.data.fill(0.0);
             for (i, &(_, span)) in feeds.iter().enumerate() {
-                let rows = &row_lists[i];
+                let rows = &rows_flat[row_bounds[i]..row_bounds[i + 1]];
                 for j in 0..span.len() {
                     let r = offsets[i] + j;
                     // causal: history plus span tokens 0..=j
-                    attend_one(q.row(r), &cache.k[li], &cache.v[li],
-                               |t| rows[t], starts[i] + j, h, dh,
-                               attn.row_mut(r), &mut scores);
+                    attend_one(&qkv.row(r)[..d], &cache.k[li],
+                               &cache.v[li], |t| rows[t], starts[i] + j,
+                               h, dh, attn.row_mut(r), scores);
                 }
             }
-            let attn_out = dense::matmul(&attn, &layer.wo);
-            super::add_inplace(&mut x, &attn_out);
-            let normed = super::rmsnorm(&x, &layer.ln_ffn,
-                                        self.cfg.rmsnorm_eps);
+            dense::matmul_into(attn, &layer.wo, attn_out);
+            super::add_inplace(x, attn_out);
+            super::rmsnorm_into(x, &layer.ln_ffn, self.cfg.rmsnorm_eps,
+                                normed);
             // the batched FFN: (sum of span lengths, d) rows through
-            // dense or TwELL
-            let y = self.ffn_no_stats(layer, &normed);
-            super::add_inplace(&mut x, &y);
+            // dense or TwELL, intermediates drawn from the scratch
+            forward_backend_into(&layer.ffn, normed, twell, ffn, ffn_y);
+            super::add_inplace(x, ffn_y);
         }
         for &(slot, span) in feeds {
             cache.len[slot] += span.len();
@@ -333,14 +489,15 @@ impl Model {
         // logits only for each entry's last span token — the rows the
         // scheduler samples from; row independence makes selecting
         // before the final norm identical to norming everything first
-        let mut last = Mat::zeros(feeds.len(), d);
+        last.set_rows(feeds.len());
         for (i, &(_, span)) in feeds.iter().enumerate() {
             last.row_mut(i)
                 .copy_from_slice(x.row(offsets[i] + span.len() - 1));
         }
-        let last =
-            super::rmsnorm(&last, &self.ln_final, self.cfg.rmsnorm_eps);
-        dense::matmul_nt(&last, &self.embed)
+        super::rmsnorm_inplace(last, &self.ln_final, self.cfg.rmsnorm_eps);
+        logits.set_rows(feeds.len());
+        dense::matmul_nt_into(last, &self.embed, logits);
+        logits
     }
 
     /// Greedy decode: prefill the prompt then emit `max_new` tokens.
@@ -679,6 +836,134 @@ mod tests {
     #[test]
     fn mixed_prefill_decode_bit_exact_twell() {
         mixed_prefill_decode_parity(FfnBackend::Twell);
+    }
+
+    /// A persistent `DecodeScratch` reused across ragged
+    /// prefill+decode steps must stay bit-exact with the allocating
+    /// wrapper (fresh buffers every call): stale scratch contents can
+    /// never leak into a later step.
+    fn persistent_scratch_parity(backend: FfnBackend) {
+        let m = toy_model(backend);
+        let long: Vec<u32> = (0..8).map(|i| (i * 3) % 32).collect();
+        let short: Vec<u32> = vec![7, 19, 2, 4];
+        let mut fresh = PagedKvCache::new(&m, 2, 16, 2);
+        let mut reused = PagedKvCache::new(&m, 2, 16, 2);
+        for c in [&mut fresh, &mut reused] {
+            c.reserve(0, long.len());
+            c.reserve(1, short.len());
+        }
+        // capacity 3 rows / 2 feeds: span 2 (slot 0) + span 1 (slot 1)
+        let mut scratch = DecodeScratch::new(&m, 3, 2);
+        for step in 0..4 {
+            let feeds: Vec<(usize, &[u32])> = vec![
+                (0, &long[step * 2..step * 2 + 2]),
+                (1, &short[step..step + 1]),
+            ];
+            let a = m.prefill_decode_step(&mut fresh, &feeds);
+            let b =
+                m.prefill_decode_step_into(&mut reused, &feeds, &mut scratch);
+            assert_eq!(a.data, b.data,
+                       "step {step} diverged ({backend:?})");
+        }
+    }
+
+    #[test]
+    fn persistent_scratch_bit_exact_dense() {
+        persistent_scratch_parity(FfnBackend::Dense);
+    }
+
+    #[test]
+    fn persistent_scratch_bit_exact_twell() {
+        persistent_scratch_parity(FfnBackend::Twell);
+    }
+
+    /// A model wide enough that the decode-step kernels genuinely
+    /// clear the pooled-dispatch work cutoffs (toy_model is far below
+    /// them, so it would never exercise the column-parallel path).
+    fn wide_model(backend: FfnBackend) -> Model {
+        crate::model::tests_support::sized_model(
+            backend, 256, 96, 2, 4, 192, 32, 4242,
+        )
+    }
+
+    /// The headline determinism contract of this PR: an engine-shaped
+    /// decode run — chunked prefill, then greedy feedback through a
+    /// persistent scratch — produces bit-identical logits and tokens
+    /// for `REPRO_THREADS ∈ {1, 4}` and for the seed row dispatch vs
+    /// the pooled column-parallel fast path, on both FFN backends.
+    fn decode_stream_bit_exact(backend: FfnBackend) {
+        let _g = crate::sparse::par::test_guard();
+        let orig = crate::sparse::par::num_threads();
+        let m = wide_model(backend);
+        let prompt: Vec<u32> =
+            (0..6).map(|i| ((i * 37 + 11) % 256) as u32).collect();
+        let mut runs: Vec<(Vec<u32>, Vec<u32>)> = Vec::new();
+        for &threads in &[1usize, 4] {
+            for &fast in &[false, true] {
+                crate::sparse::par::set_threads(threads);
+                crate::sparse::par::set_skinny_fast_path(fast);
+                let mut cache = PagedKvCache::new(&m, 3, 32, 4);
+                for s in 0..3 {
+                    cache.reserve(s, prompt.len() + 8);
+                }
+                let mut scratch =
+                    DecodeScratch::new(&m, 3 * prompt.len(), 3);
+                let mut stream = Vec::new();
+                let mut logit_bits = Vec::new();
+                // whole-prompt prefill for all three slots in one step
+                let mut toks: Vec<(usize, [u32; 1])> = {
+                    let feeds: Vec<(usize, &[u32])> =
+                        (0..3).map(|s| (s, &prompt[..])).collect();
+                    let l = m.prefill_decode_step_into(
+                        &mut cache, &feeds, &mut scratch,
+                    );
+                    logit_bits
+                        .extend(l.row(0).iter().map(|v| v.to_bits()));
+                    (0..3).map(|s| (s, [argmax(l.row(s)) as u32])).collect()
+                };
+                for _ in 0..8 {
+                    let next: Vec<u32> = {
+                        let feeds: Vec<(usize, &[u32])> = toks
+                            .iter()
+                            .map(|(s, t)| (*s, &t[..]))
+                            .collect();
+                        let l = m.prefill_decode_step_into(
+                            &mut cache, &feeds, &mut scratch,
+                        );
+                        logit_bits
+                            .extend(l.row(0).iter().map(|v| v.to_bits()));
+                        (0..l.rows)
+                            .map(|r| argmax(l.row(r)) as u32)
+                            .collect()
+                    };
+                    for ((_, t), &n) in toks.iter_mut().zip(&next) {
+                        t[0] = n;
+                    }
+                    stream.extend(next);
+                }
+                runs.push((stream, logit_bits));
+            }
+        }
+        crate::sparse::par::set_threads(orig);
+        crate::sparse::par::set_skinny_fast_path(true);
+        for (i, (stream, bits)) in runs[1..].iter().enumerate() {
+            assert_eq!(stream, &runs[0].0,
+                       "token stream diverged in run {} ({backend:?})",
+                       i + 1);
+            assert_eq!(bits, &runs[0].1,
+                       "logits not bit-exact in run {} ({backend:?})",
+                       i + 1);
+        }
+    }
+
+    #[test]
+    fn decode_stream_bit_exact_across_threads_and_dispatch_dense() {
+        decode_stream_bit_exact(FfnBackend::Dense);
+    }
+
+    #[test]
+    fn decode_stream_bit_exact_across_threads_and_dispatch_twell() {
+        decode_stream_bit_exact(FfnBackend::Twell);
     }
 
     #[test]

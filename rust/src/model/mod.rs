@@ -42,6 +42,27 @@ pub struct Layer {
     pub wo: Mat,
     pub ln_ffn: Vec<f32>,
     pub ffn: FfnWeights,
+    /// `[Wq | Wk | Wv]` column-concatenated, (d, 3d), built once at
+    /// load: the decode path projects Q/K/V with **one** skinny matmul
+    /// over the normed activations instead of three passes.  Column
+    /// concatenation keeps each projection's per-element accumulation
+    /// identical to the separate matmuls, so the fused projection is
+    /// bit-exact with them.  The separate `wq`/`wk`/`wv` are kept for
+    /// the full-sequence forward path — a deliberate 3·d² f32/layer
+    /// duplication (trivial at current scales) that leaves the
+    /// prefill/eval numerics code untouched.
+    pub wqkv: Mat,
+}
+
+impl Layer {
+    /// Assemble a layer, deriving the fused QKV weight.
+    pub fn new(
+        ln_attn: Vec<f32>, wq: Mat, wk: Mat, wv: Mat, wo: Mat,
+        ln_ffn: Vec<f32>, ffn: FfnWeights,
+    ) -> Layer {
+        let wqkv = Mat::hcat(&[&wq, &wk, &wv]);
+        Layer { ln_attn, wq, wk, wv, wo, ln_ffn, ffn, wqkv }
+    }
 }
 
 pub struct Model {
@@ -54,6 +75,10 @@ pub struct Model {
     /// lossless; higher values trade storage for drop risk like the
     /// paper's conservative setting).
     pub comp: usize,
+    /// RoPE inverse frequencies `1 / theta^(i / (dh/2))`, precomputed
+    /// once at load — `rope_row` used to recompute the `powf` per head
+    /// per token per decode step.
+    pub rope_inv_freq: Vec<f32>,
 }
 
 /// Per-layer sparsity observations from a forward pass (figure 6 data).
@@ -73,6 +98,19 @@ impl ForwardStats {
 }
 
 impl Model {
+    /// Assemble a model from its parts, deriving the load-time caches
+    /// (RoPE inverse-frequency table; each `Layer::new` has already
+    /// derived its fused QKV weight).  Every construction site —
+    /// checkpoint loading, tests, benches — funnels through here so
+    /// the caches can never be forgotten.
+    pub fn assemble(
+        cfg: ModelConfig, embed: Mat, layers: Vec<Layer>,
+        ln_final: Vec<f32>, backend: FfnBackend, comp: usize,
+    ) -> Model {
+        let rope_inv_freq = rope_inv_freq(cfg.head_dim(), cfg.rope_theta);
+        Model { cfg, embed, layers, ln_final, backend, comp, rope_inv_freq }
+    }
+
     pub fn from_checkpoint(ck: &Checkpoint, backend: FfnBackend)
         -> Result<Model> {
         let cfg = ck.config.clone();
@@ -99,24 +137,19 @@ impl Model {
                 cfg.ell_width,
                 cfg.dense_backup_frac,
             );
-            layers.push(Layer {
-                ln_attn: getv(&format!("{p}ln_attn"))?,
-                wq: getm(&format!("{p}wq"))?,
-                wk: getm(&format!("{p}wk"))?,
-                wv: getm(&format!("{p}wv"))?,
-                wo: getm(&format!("{p}wo"))?,
-                ln_ffn: getv(&format!("{p}ln_ffn"))?,
+            layers.push(Layer::new(
+                getv(&format!("{p}ln_attn"))?,
+                getm(&format!("{p}wq"))?,
+                getm(&format!("{p}wk"))?,
+                getm(&format!("{p}wv"))?,
+                getm(&format!("{p}wo"))?,
+                getv(&format!("{p}ln_ffn"))?,
                 ffn,
-            });
+            ));
         }
-        Ok(Model {
-            embed: getm("embed")?,
-            ln_final: getv("ln_final")?,
-            cfg,
-            layers,
-            backend,
-            comp: 1,
-        })
+        let embed = getm("embed")?;
+        let ln_final = getv("ln_final")?;
+        Ok(Model::assemble(cfg, embed, layers, ln_final, backend, 1))
     }
 
     /// Full-sequence forward for a batch of equal-length sequences.
@@ -183,8 +216,8 @@ impl Model {
         for b in 0..batch {
             for s in 0..seq {
                 let row = b * seq + s;
-                rope_row(q.row_mut(row), s, h, dh, self.cfg.rope_theta);
-                rope_row(k.row_mut(row), s, h, dh, self.cfg.rope_theta);
+                rope_row(q.row_mut(row), s, h, dh, &self.rope_inv_freq);
+                rope_row(k.row_mut(row), s, h, dh, &self.rope_inv_freq);
             }
         }
         let scale = 1.0 / (dh as f32).sqrt();
@@ -256,9 +289,34 @@ impl Model {
 }
 
 pub(crate) fn rmsnorm(x: &Mat, w: &[f32], eps: f32) -> Mat {
-    let mut out = x.clone();
+    let mut out = Mat::zeros(x.rows, x.cols);
+    rmsnorm_into(x, w, eps, &mut out);
+    out
+}
+
+/// RMSNorm `x` into a caller-owned `out` (same shape) — the decode
+/// scratch path, which replaces the per-layer clone of the residual
+/// stream.  Identical arithmetic order to the historical in-place
+/// loop, so it is bit-exact with `rmsnorm`.
+pub(crate) fn rmsnorm_into(x: &Mat, w: &[f32], eps: f32, out: &mut Mat) {
+    debug_assert_eq!((x.rows, x.cols), (out.rows, out.cols));
     for r in 0..x.rows {
-        let row = out.row_mut(r);
+        let src = x.row(r);
+        let dst = out.row_mut(r);
+        let ms: f32 =
+            src.iter().map(|&v| v * v).sum::<f32>() / src.len() as f32;
+        let inv = 1.0 / (ms + eps).sqrt();
+        for ((d, &s), &wv) in dst.iter_mut().zip(src).zip(w) {
+            *d = s * (inv * wv);
+        }
+    }
+}
+
+/// RMSNorm a matrix in place (the final-norm-over-last-rows case,
+/// where the input is already a scratch copy).
+pub(crate) fn rmsnorm_inplace(x: &mut Mat, w: &[f32], eps: f32) {
+    for r in 0..x.rows {
+        let row = x.row_mut(r);
         let ms: f32 =
             row.iter().map(|&v| v * v).sum::<f32>() / row.len() as f32;
         let inv = 1.0 / (ms + eps).sqrt();
@@ -266,7 +324,6 @@ pub(crate) fn rmsnorm(x: &Mat, w: &[f32], eps: f32) -> Mat {
             *v *= inv * wv;
         }
     }
-    out
 }
 
 pub(crate) fn add_inplace(a: &mut Mat, b: &Mat) {
@@ -275,16 +332,27 @@ pub(crate) fn add_inplace(a: &mut Mat, b: &Mat) {
     }
 }
 
+/// The RoPE inverse-frequency table `1 / theta^(i / half)` for one
+/// head (all heads share it).  Built once per model at load.
+pub(crate) fn rope_inv_freq(dh: usize, theta: f32) -> Vec<f32> {
+    let half = dh / 2;
+    (0..half)
+        .map(|i| 1.0 / theta.powf(i as f32 / half as f32))
+        .collect()
+}
+
 /// Half-split RoPE on one row of (h * dh) features at position `pos`
 /// (matches jax: rotate pairs (i, i + dh/2) within each head).
+/// `inv_freq` is the model's precomputed table — the same f32 values
+/// the historical per-call `powf` produced, so nothing moves bitwise.
 pub(crate) fn rope_row(row: &mut [f32], pos: usize, heads: usize, dh: usize,
-            theta: f32) {
+            inv_freq: &[f32]) {
     let half = dh / 2;
+    debug_assert_eq!(inv_freq.len(), half);
     for head in 0..heads {
         let base = head * dh;
-        for i in 0..half {
-            let freq = 1.0 / theta.powf(i as f32 / half as f32);
-            let ang = pos as f32 * freq;
+        for (i, &inv) in inv_freq.iter().enumerate() {
+            let ang = pos as f32 * inv;
             let (sin, cos) = ang.sin_cos();
             let a = row[base + i];
             let b = row[base + half + i];
@@ -299,14 +367,27 @@ pub(crate) mod tests_support {
     use super::*;
     use crate::util::rng::Pcg32;
 
+    /// The small default test model: big enough to exercise every
+    /// decode path, small enough that tests stay fast.
     pub(crate) fn toy_model(backend: FfnBackend) -> Model {
+        sized_model(backend, 32, 16, 2, 2, 32, 16, 99)
+    }
+
+    /// Parameterized synthetic model.  Tests that need kernel shapes
+    /// wide enough to cross the pooled-dispatch work cutoffs (the
+    /// decode determinism sweeps) pick bigger dims; everything else
+    /// uses `toy_model`.
+    pub(crate) fn sized_model(
+        backend: FfnBackend, vocab: usize, d: usize, n_layers: usize,
+        n_heads: usize, d_ff: usize, tile_n: usize, seed: u64,
+    ) -> Model {
         let cfg = ModelConfig {
             name: "toy".into(),
-            vocab_size: 32,
-            d_model: 16,
-            n_layers: 2,
-            n_heads: 2,
-            d_ff: 32,
+            vocab_size: vocab,
+            d_model: d,
+            n_layers,
+            n_heads,
+            d_ff,
             gated: true,
             activation: "relu".into(),
             rope_theta: 10_000.0,
@@ -315,34 +396,31 @@ pub(crate) mod tests_support {
             train_batch: 2,
             seq_len: 8,
             score_batch: 2,
-            twell_tile_n: 16,
+            twell_tile_n: tile_n,
             twell_comp: 1,
-            ell_width: 32,
+            ell_width: d_ff,
             dense_backup_frac: 0.25,
         };
-        let mut rng = Pcg32::seeded(99);
+        let mut rng = Pcg32::seeded(seed);
         let layers = (0..cfg.n_layers)
-            .map(|_| Layer {
-                ln_attn: vec![1.0; cfg.d_model],
-                wq: Mat::randn(cfg.d_model, cfg.d_model, 0.05, &mut rng),
-                wk: Mat::randn(cfg.d_model, cfg.d_model, 0.05, &mut rng),
-                wv: Mat::randn(cfg.d_model, cfg.d_model, 0.05, &mut rng),
-                wo: Mat::randn(cfg.d_model, cfg.d_model, 0.05, &mut rng),
-                ln_ffn: vec![1.0; cfg.d_model],
-                ffn: FfnWeights::random(
-                    cfg.d_model, cfg.d_ff, 0.05, &mut rng, cfg.twell_tile_n,
-                    1, cfg.ell_width, 0.25,
-                ),
+            .map(|_| {
+                Layer::new(
+                    vec![1.0; cfg.d_model],
+                    Mat::randn(cfg.d_model, cfg.d_model, 0.05, &mut rng),
+                    Mat::randn(cfg.d_model, cfg.d_model, 0.05, &mut rng),
+                    Mat::randn(cfg.d_model, cfg.d_model, 0.05, &mut rng),
+                    Mat::randn(cfg.d_model, cfg.d_model, 0.05, &mut rng),
+                    vec![1.0; cfg.d_model],
+                    FfnWeights::random(
+                        cfg.d_model, cfg.d_ff, 0.05, &mut rng,
+                        cfg.twell_tile_n, 1, cfg.ell_width, 0.25,
+                    ),
+                )
             })
             .collect();
-        Model {
-            embed: Mat::randn(cfg.vocab_size, cfg.d_model, 0.05, &mut rng),
-            ln_final: vec![1.0; cfg.d_model],
-            cfg,
-            layers,
-            backend,
-            comp: 1,
-        }
+        let embed = Mat::randn(cfg.vocab_size, cfg.d_model, 0.05, &mut rng);
+        let ln_final = vec![1.0; cfg.d_model];
+        Model::assemble(cfg, embed, layers, ln_final, backend, 1)
     }
 }
 
@@ -402,6 +480,48 @@ mod tests {
         // check magnitude near uniform for random weights
         let mean = logp.iter().sum::<f32>() / 16.0;
         assert!((mean + (32f32).ln()).abs() < 2.0, "{mean}");
+    }
+
+    #[test]
+    fn rope_table_matches_per_call_powf() {
+        // the precomputed table must hold the exact f32 the old inline
+        // powf produced, position by position
+        let (dh, theta) = (8usize, 10_000.0f32);
+        let inv = rope_inv_freq(dh, theta);
+        let half = dh / 2;
+        assert_eq!(inv.len(), half);
+        for (i, &v) in inv.iter().enumerate() {
+            let expect = 1.0 / theta.powf(i as f32 / half as f32);
+            assert_eq!(v.to_bits(), expect.to_bits(), "freq {i}");
+        }
+    }
+
+    #[test]
+    fn fused_qkv_weight_is_the_three_projections() {
+        let m = toy_model(FfnBackend::Dense);
+        let d = m.cfg.d_model;
+        let l = &m.layers[0];
+        assert_eq!((l.wqkv.rows, l.wqkv.cols), (d, 3 * d));
+        for r in 0..d {
+            assert_eq!(&l.wqkv.row(r)[..d], l.wq.row(r));
+            assert_eq!(&l.wqkv.row(r)[d..2 * d], l.wk.row(r));
+            assert_eq!(&l.wqkv.row(r)[2 * d..], l.wv.row(r));
+        }
+    }
+
+    #[test]
+    fn rmsnorm_variants_agree_bitwise() {
+        let m = toy_model(FfnBackend::Dense);
+        let x = Mat::randn(5, 16, 1.0,
+                           &mut crate::util::rng::Pcg32::seeded(3));
+        let w: Vec<f32> = (0..16).map(|i| 0.5 + i as f32 * 0.1).collect();
+        let a = rmsnorm(&x, &w, m.cfg.rmsnorm_eps);
+        let mut b = Mat::zeros(5, 16);
+        rmsnorm_into(&x, &w, m.cfg.rmsnorm_eps, &mut b);
+        let mut c = x.clone();
+        rmsnorm_inplace(&mut c, &w, m.cfg.rmsnorm_eps);
+        assert_eq!(a.data, b.data);
+        assert_eq!(a.data, c.data);
     }
 
     #[test]

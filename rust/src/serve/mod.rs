@@ -18,13 +18,17 @@
 //! blocks rather than overcommitting — (2) retires sequences whose
 //! caller dropped every receiver (their blocks return to the free list
 //! instead of decoding into a dead channel), (3) advances all active
-//! slots with `Model::prefill_decode_step`: a prefilling slot feeds up
-//! to `prefill_chunk` prompt tokens (one KV block by default) while a
-//! decoding slot feeds its last sampled token, so a mixed batch
-//! presents a `(sum of span lengths, d)` activation matrix to the FFN
-//! backends (the TwELL pipeline runs batched exactly where it pays
-//! most: long-prompt prefill) and writes whole blocks of K/V rows per
-//! step, and (4) retires finished sequences immediately, returning
+//! slots with `Model::prefill_decode_step_into`: a prefilling slot
+//! feeds up to `prefill_chunk` prompt tokens (one KV block by default)
+//! while a decoding slot feeds its last sampled token, so a mixed
+//! batch presents a `(sum of span lengths, d)` activation matrix to
+//! the FFN backends (the TwELL pipeline runs batched exactly where it
+//! pays most: long-prompt prefill) and writes whole blocks of K/V rows
+//! per step — every buffer on that path lives in the engine's one
+//! `DecodeScratch` (no per-step heap allocation), the kernels run on
+//! the persistent worker pool, and skinny decode batches dispatch
+//! column-parallel instead of collapsing onto one core — and (4)
+//! retires finished sequences immediately, returning
 //! their blocks to the free list and backfilling their slots from the
 //! queue on the next iteration (no batch barrier).  Prefill is
 //! interleaved with decode chunk-by-chunk (Orca-style iteration-level
@@ -70,7 +74,8 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
-use crate::model::kv::{kv_positions_needed, sample_decode, PagedKvCache};
+use crate::model::kv::{kv_positions_needed, sample_decode, DecodeScratch,
+                       PagedKvCache};
 use crate::model::sample::{Sampler, SamplingParams};
 use crate::model::Model;
 
@@ -484,6 +489,11 @@ fn continuous_loop(
         (0..policy.slots).map(|_| None).collect();
     let mut active = 0usize;
     let chunk = policy.prefill_chunk.max(1);
+    // the zero-allocation decode scratch: every engine step's
+    // activations, fused q|k|v, FFN intermediates and logits live in
+    // these buffers for the lifetime of the engine
+    let mut scratch =
+        DecodeScratch::new(&model, policy.slots * chunk, policy.slots);
     enum Admit {
         /// answered or installed this wave
         Take,
@@ -654,7 +664,8 @@ fn continuous_loop(
                 })
             })
             .collect();
-        let logits = model.prefill_decode_step(&mut cache, &feeds);
+        let logits =
+            model.prefill_decode_step_into(&mut cache, &feeds, &mut scratch);
         let fed: Vec<(usize, usize)> =
             feeds.iter().map(|&(si, span)| (si, span.len())).collect();
         drop(feeds);

@@ -1,10 +1,19 @@
 //! Dense matmul baseline — the cuBLAS / WGMMA stand-in.
 //!
 //! Cache-blocked `i-k-j` kernel with 4x-unrolled AXPY inner loops over
-//! row-major operands, parallelized over output-row blocks.  This is the
-//! baseline every sparse speedup in the benches is measured against, so
-//! it must itself be a respectable CPU matmul (§Perf tracks its GFLOP/s
-//! against the machine's practical roofline).
+//! row-major operands.  Large-M shapes parallelize over output-row
+//! blocks; skinny shapes (decode at batch ≤ 16, where a row split
+//! would idle every core but one) dispatch **column-parallel**: all
+//! threads walk the same few rows, each owning a disjoint column range
+//! of the output.  Both dispatches compute every output element with
+//! the identical sequential accumulation order, so results are
+//! bit-exact across thread counts and dispatch shapes.  This is the
+//! baseline every sparse speedup in the benches is measured against,
+//! so it must itself be a respectable CPU matmul (§Perf tracks its
+//! GFLOP/s against the machine's practical roofline).
+//!
+//! The `_into` variants write into caller-owned storage — the decode
+//! scratch reuses one set of buffers across every engine iteration.
 
 use crate::sparse::par;
 use crate::tensor::Mat;
@@ -14,13 +23,56 @@ const KB: usize = 64;
 
 /// C = A @ B for row-major A (m,k), B (k,n).
 pub fn matmul(a: &Mat, b: &Mat) -> Mat {
-    assert_eq!(a.cols, b.rows);
-    let (m, k, n) = (a.rows, a.cols, b.cols);
-    let mut c = Mat::zeros(m, n);
-    par::for_row_blocks_out(m, n, &mut c.data, |lo, hi, out| {
-        matmul_block(&a.data, &b.data, out, lo, hi, k, n);
-    });
+    let mut c = Mat::zeros(a.rows, b.cols);
+    matmul_into(a, b, &mut c);
     c
+}
+
+/// C = A @ B into a pre-shaped `c` (fully overwritten).  Skinny M
+/// dispatches column-parallel; everything else row-parallel.
+pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat) {
+    assert_eq!(a.cols, b.rows);
+    assert_eq!((c.rows, c.cols), (a.rows, b.cols));
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    c.data.fill(0.0);
+    if par::use_col_dispatch(m, n, m * k) {
+        let base = par::SendPtr::new(c.data.as_mut_ptr());
+        par::for_col_blocks(n, m * k, |lo, hi| {
+            matmul_col_block(&a.data, &b.data, &base, m, k, n, lo, hi);
+        });
+    } else {
+        par::for_row_blocks_out(m, n, &mut c.data, |lo, hi, out| {
+            matmul_block(&a.data, &b.data, out, lo, hi, k, n);
+        });
+    }
+}
+
+/// The column-range worker: same kb-panel / row / k-step order as
+/// `matmul_block`, restricted to output columns `[lo, hi)` — per
+/// element the accumulation sequence is identical, which keeps the two
+/// dispatches bit-exact.
+fn matmul_col_block(
+    a: &[f32], b: &[f32], out: &par::SendPtr<f32>, m: usize, k: usize,
+    n: usize, lo: usize, hi: usize,
+) {
+    let w = hi - lo;
+    for kb in (0..k).step_by(KB) {
+        let ke = (kb + KB).min(k);
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            // SAFETY: column ranges are disjoint across pool workers
+            let crow = unsafe {
+                std::slice::from_raw_parts_mut(out.get().add(i * n + lo), w)
+            };
+            for kk in kb..ke {
+                let aik = arow[kk];
+                if aik == 0.0 {
+                    continue;
+                }
+                axpy(aik, &b[kk * n + lo..kk * n + hi], crow);
+            }
+        }
+    }
 }
 
 fn matmul_block(
@@ -94,6 +146,16 @@ pub fn matmul_relu(a: &Mat, b: &Mat) -> Mat {
     c
 }
 
+/// `matmul_relu` into a pre-shaped output.
+pub fn matmul_relu_into(a: &Mat, b: &Mat, c: &mut Mat) {
+    matmul_into(a, b, c);
+    for v in c.data.iter_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
 /// C = A^T @ B for A (m,k), B (m,n) -> (k,n).  Used by the dense
 /// training-step baseline for weight gradients (x^T dh etc.).
 pub fn matmul_tn(a: &Mat, b: &Mat) -> Mat {
@@ -117,19 +179,48 @@ pub fn matmul_tn(a: &Mat, b: &Mat) -> Mat {
 
 /// C = A @ B^T for A (m,k), B (n,k) -> (m,n): contiguous row-dot kernel.
 pub fn matmul_nt(a: &Mat, b: &Mat) -> Mat {
-    assert_eq!(a.cols, b.cols);
-    let (m, n) = (a.rows, b.rows);
-    let mut c = Mat::zeros(m, n);
-    par::for_row_blocks_out(m, n, &mut c.data, |lo, hi, out| {
-        for i in lo..hi {
-            let arow = a.row(i);
-            let crow = &mut out[(i - lo) * n..(i - lo + 1) * n];
-            for j in 0..n {
-                crow[j] = dot(arow, b.row(j));
-            }
-        }
-    });
+    let mut c = Mat::zeros(a.rows, b.rows);
+    matmul_nt_into(a, b, &mut c);
     c
+}
+
+/// `matmul_nt` into a pre-shaped output (fully overwritten).  The
+/// logits projection `(B, d) @ (V, d)^T` at decode batch sizes lands
+/// on the column-parallel path: each worker owns a disjoint slice of
+/// the vocabulary, and every element is one independent dot, so the
+/// dispatch shape cannot change a bit of the result.
+pub fn matmul_nt_into(a: &Mat, b: &Mat, c: &mut Mat) {
+    assert_eq!(a.cols, b.cols);
+    assert_eq!((c.rows, c.cols), (a.rows, b.rows));
+    let (m, k, n) = (a.rows, a.cols, b.rows);
+    if par::use_col_dispatch(m, n, m * k) {
+        let base = par::SendPtr::new(c.data.as_mut_ptr());
+        par::for_col_blocks(n, m * k, |lo, hi| {
+            for i in 0..m {
+                let arow = a.row(i);
+                // SAFETY: column ranges are disjoint across workers
+                let crow = unsafe {
+                    std::slice::from_raw_parts_mut(
+                        base.get().add(i * n + lo),
+                        hi - lo,
+                    )
+                };
+                for (j, cv) in (lo..hi).zip(crow.iter_mut()) {
+                    *cv = dot(arow, b.row(j));
+                }
+            }
+        });
+    } else {
+        par::for_row_blocks_out(m, n, &mut c.data, |lo, hi, out| {
+            for i in lo..hi {
+                let arow = a.row(i);
+                let crow = &mut out[(i - lo) * n..(i - lo + 1) * n];
+                for j in 0..n {
+                    crow[j] = dot(arow, b.row(j));
+                }
+            }
+        });
+    }
 }
 
 /// Naive triple loop for testing only.
@@ -220,6 +311,69 @@ mod tests {
                 Err(format!("rel err {err} at ({m},{k},{n})"))
             }
         });
+    }
+
+    #[test]
+    fn skinny_col_dispatch_matches_naive() {
+        // shapes chosen to clear the column-parallel work cutoff
+        // (m < 32, n * m * k >= PAR_MIN_COL_WORK)
+        let mut rng = Pcg32::seeded(17);
+        let a = Mat::randn(4, 96, 1.0, &mut rng);
+        let b = Mat::randn(96, 512, 1.0, &mut rng);
+        let c = matmul(&a, &b);
+        let cn = matmul_naive(&a, &b);
+        assert!(c.rel_err(&cn) < 1e-4, "{}", c.rel_err(&cn));
+        let bt = Mat::randn(512, 96, 1.0, &mut rng);
+        let nt = matmul_nt(&a, &bt);
+        let expect = matmul_naive(&a, &bt.transpose());
+        assert!(nt.rel_err(&expect) < 1e-4);
+    }
+
+    /// The determinism contract on the decode-shaped GEMMs: bit-exact
+    /// output for any thread count and for the seed row dispatch vs
+    /// the pooled column-parallel fast path.
+    #[test]
+    fn skinny_matmuls_bit_exact_across_threads_and_dispatch() {
+        let _g = par::test_guard();
+        let orig = par::num_threads();
+        let mut rng = Pcg32::seeded(23);
+        let a = Mat::randn(4, 96, 1.0, &mut rng);
+        let b = Mat::randn(96, 512, 1.0, &mut rng);
+        let bt = Mat::randn(512, 96, 1.0, &mut rng);
+        let mut runs = Vec::new();
+        for &threads in &[1usize, 4] {
+            for &fast in &[false, true] {
+                par::set_threads(threads);
+                par::set_skinny_fast_path(fast);
+                runs.push((
+                    format!("t={threads} fast={fast}"),
+                    matmul(&a, &b).data,
+                    matmul_nt(&a, &bt).data,
+                ));
+            }
+        }
+        par::set_threads(orig);
+        par::set_skinny_fast_path(true);
+        for (label, mm, nt) in &runs[1..] {
+            assert_eq!(mm, &runs[0].1, "matmul diverged at {label}");
+            assert_eq!(nt, &runs[0].2, "matmul_nt diverged at {label}");
+        }
+    }
+
+    #[test]
+    fn into_variants_fully_overwrite_stale_scratch() {
+        let mut rng = Pcg32::seeded(31);
+        let a = Mat::randn(6, 16, 1.0, &mut rng);
+        let b = Mat::randn(16, 24, 1.0, &mut rng);
+        let mut c = Mat::zeros(6, 24);
+        c.data.fill(f32::NAN); // poison: any unwritten element survives
+        matmul_into(&a, &b, &mut c);
+        assert_eq!(c.data, matmul(&a, &b).data);
+        let bt = Mat::randn(24, 16, 1.0, &mut rng);
+        let mut d = Mat::zeros(6, 24);
+        d.data.fill(f32::NAN);
+        matmul_nt_into(&a, &bt, &mut d);
+        assert_eq!(d.data, matmul_nt(&a, &bt).data);
     }
 
     #[test]

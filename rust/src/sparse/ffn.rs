@@ -9,7 +9,8 @@ use crate::metrics::memory::PeakTracker;
 use crate::sparse::dense;
 use crate::sparse::fused;
 use crate::sparse::hybrid::HybridMatrix;
-use crate::sparse::twell::{gate_matmul_twell, TwellMatrix};
+use crate::sparse::twell::{gate_matmul_twell, gate_matmul_twell_into,
+                           TwellMatrix};
 use crate::tensor::Mat;
 
 /// Weights of one gated FFN block, with the transposed copies the sparse
@@ -80,6 +81,66 @@ pub fn forward_backend(w: &FfnWeights, x: &Mat, twell: bool) -> Mat {
         forward_twell(w, x).0
     } else {
         forward_dense(w, x)
+    }
+}
+
+/// Reusable FFN intermediates for the batched decode path: sized once
+/// at the engine's maximum step rows, reshaped per call within the
+/// buffers' high-water marks — the decode loop never allocates here.
+///
+/// Only the active backend's buffers are pre-sized (`twell` selects
+/// which); an engine runs one backend for its lifetime, so carrying
+/// both would double the scratch for nothing.  If the other backend is
+/// ever used anyway, its buffers grow once on first use — a one-time
+/// allocation, never a correctness issue.
+pub struct FfnScratch {
+    /// dense backend: gate activations (doubles as `h` after the
+    /// elementwise product)
+    pub hg: Mat,
+    /// dense backend: up-projection activations
+    pub hu: Mat,
+    /// sparse backend: TwELL gate activations
+    pub hg_tw: TwellMatrix,
+    /// sparse backend: fused-kernel coefficients (one per packed slot)
+    pub coef: Vec<f32>,
+}
+
+impl FfnScratch {
+    pub fn new(
+        max_rows: usize, d_ff: usize, tile_n: usize, comp: usize,
+        twell: bool,
+    ) -> FfnScratch {
+        let dense_rows = if twell { 0 } else { max_rows };
+        let tw_rows = if twell { max_rows } else { 0 };
+        FfnScratch {
+            hg: Mat::zeros(dense_rows, d_ff),
+            hu: Mat::zeros(dense_rows, d_ff),
+            hg_tw: TwellMatrix::with_capacity(tw_rows, d_ff, tile_n, comp),
+            coef: vec![0.0; tw_rows * (d_ff / comp)],
+        }
+    }
+}
+
+/// `forward_backend` into a caller-owned output, with every
+/// intermediate drawn from `s` — bit-exact with the allocating
+/// dispatch (identical kernels, identical order).
+pub fn forward_backend_into(
+    w: &FfnWeights, x: &Mat, twell: bool, s: &mut FfnScratch, y: &mut Mat,
+) {
+    if twell {
+        gate_matmul_twell_into(x, &w.wg, w.tile_n, w.comp, &mut s.hg_tw);
+        fused::fused_up_down_into(
+            x, &s.hg_tw, &w.wu_t, &w.wd, y, &mut s.coef,
+        );
+    } else {
+        s.hg.set_rows(x.rows);
+        s.hu.set_rows(x.rows);
+        dense::matmul_relu_into(x, &w.wg, &mut s.hg);
+        dense::matmul_into(x, &w.wu, &mut s.hu);
+        for (hv, uv) in s.hg.data.iter_mut().zip(&s.hu.data) {
+            *hv *= uv;
+        }
+        dense::matmul_into(&s.hg, &w.wd, y);
     }
 }
 
@@ -301,6 +362,28 @@ mod tests {
                 assert_eq!(y1.row(0), batched.row(r),
                            "row {r} diverges (twell={twell})");
             }
+        }
+    }
+
+    #[test]
+    fn forward_backend_into_matches_allocating_dispatch() {
+        // the decode scratch path must be bit-exact with the
+        // allocating path, including across reuse at shrinking batch
+        // sizes (stale intermediates must never leak)
+        let (w, x, _) = setup(6, 16, 64, 0.5, 19);
+        for twell in [false, true] {
+            let mut s = FfnScratch::new(6, 64, w.tile_n, w.comp, twell);
+            let mut y = Mat::zeros(6, 16);
+            forward_backend_into(&w, &x, twell, &mut s, &mut y);
+            assert_eq!(y.data, forward_backend(&w, &x, twell).data,
+                       "twell={twell}");
+            // shrink to 2 rows through the same scratch
+            let mut xs = Mat::zeros(2, 16);
+            xs.data.copy_from_slice(&x.data[..32]);
+            let mut ys = Mat::zeros(2, 16);
+            forward_backend_into(&w, &xs, twell, &mut s, &mut ys);
+            assert_eq!(ys.data, forward_backend(&w, &xs, twell).data,
+                       "twell={twell} after reuse");
         }
     }
 

@@ -25,34 +25,112 @@ use crate::tensor::Mat;
 pub fn fused_up_down(
     x: &Mat, hg: &TwellMatrix, wu_t: &Mat, wd: &Mat,
 ) -> Mat {
+    let mut y = Mat::zeros(x.rows, x.cols);
+    let mut coef = Vec::new();
+    fused_up_down_into(x, hg, wu_t, wd, &mut y, &mut coef);
+    y
+}
+
+/// `fused_up_down` into a caller-owned output plus a coefficient
+/// scratch (one slot per packed non-zero; the decode scratch owns
+/// both, so the hot loop never allocates).
+///
+/// Large M runs the row-block kernel.  Skinny M runs in two phases so
+/// the pool still has parallel work: **(1)** the implicit-h_u
+/// coefficients `v * (x[m,:] . W_u[:,n])` parallel over *tiles* (each
+/// tile's packed region is written by exactly one worker), **(2)** the
+/// `y += coef * W_d[n,:]` accumulation parallel over *output columns*
+/// (each worker owns a disjoint column range of every row).  Per
+/// output element both shapes execute the same tile-order accumulation
+/// with the same coefficients, so row dispatch, column dispatch, and
+/// any thread count produce bit-identical y.
+pub fn fused_up_down_into(
+    x: &Mat, hg: &TwellMatrix, wu_t: &Mat, wd: &Mat, y: &mut Mat,
+    coef: &mut Vec<f32>,
+) {
     let (m, k) = (x.rows, x.cols);
     assert_eq!(hg.m, m);
     assert_eq!(wu_t.rows, hg.n);
     assert_eq!(wu_t.cols, k);
     assert_eq!(wd.rows, hg.n);
     assert_eq!(wd.cols, k);
+    assert_eq!((y.rows, y.cols), (m, k));
     let slots = hg.slots();
     let pc = hg.packed_cols();
     let n_tiles = hg.n_tiles();
-    let mut y = Mat::zeros(m, k);
-    par::for_row_blocks_out(m, k, &mut y.data, |lo, hi, out| {
-        for r in lo..hi {
-            let xrow = &x.data[r * k..(r + 1) * k];
-            let yrow = &mut out[(r - lo) * k..(r - lo + 1) * k];
-            for t in 0..n_tiles {
-                let z = hg.nnz[r * n_tiles + t] as usize;
-                let base = r * pc + t * slots;
-                for c in 0..z {
-                    let n = hg.indices[base + c] as usize;
-                    let v = hg.values[base + c];
-                    // implicit h_u element (eq. 3 middle factor)
-                    let u = dense::dot(xrow, wu_t.row(n));
-                    dense::axpy(v * u, wd.row(n), yrow);
+    y.data.fill(0.0);
+    if par::skinny_fast_path()
+        && m < par::ROW_PAR_MIN_ROWS
+        && par::num_threads() > 1
+    {
+        // ---- phase 1: coefficients, tile-parallel ----
+        coef.resize(m * pc, 0.0); // slots past a tile's nnz: never read
+        let coef_ptr = par::SendPtr::new(coef.as_mut_ptr());
+        par::for_col_blocks(n_tiles, m * k * slots, |tlo, thi| {
+            for r in 0..m {
+                let xrow = &x.data[r * k..(r + 1) * k];
+                for t in tlo..thi {
+                    let z = hg.nnz[r * n_tiles + t] as usize;
+                    let base = r * pc + t * slots;
+                    for c in 0..z {
+                        let n = hg.indices[base + c] as usize;
+                        // implicit h_u element (eq. 3 middle factor)
+                        let u = dense::dot(xrow, wu_t.row(n));
+                        // SAFETY: tile regions are disjoint per worker
+                        unsafe {
+                            *coef_ptr.get().add(base + c) =
+                                hg.values[base + c] * u;
+                        }
+                    }
                 }
             }
-        }
-    });
-    y
+        });
+        // ---- phase 2: accumulate, column-parallel ----
+        let nnz_total = hg.total_nnz() as usize;
+        let y_ptr = par::SendPtr::new(y.data.as_mut_ptr());
+        let coef = &coef[..];
+        par::for_col_blocks(k, nnz_total.max(1), |lo, hi| {
+            for r in 0..m {
+                // SAFETY: column ranges are disjoint per worker
+                let yrow = unsafe {
+                    std::slice::from_raw_parts_mut(
+                        y_ptr.get().add(r * k + lo),
+                        hi - lo,
+                    )
+                };
+                for t in 0..n_tiles {
+                    let z = hg.nnz[r * n_tiles + t] as usize;
+                    let base = r * pc + t * slots;
+                    for c in 0..z {
+                        let n = hg.indices[base + c] as usize;
+                        dense::axpy(
+                            coef[base + c],
+                            &wd.row(n)[lo..hi],
+                            yrow,
+                        );
+                    }
+                }
+            }
+        });
+    } else {
+        par::for_row_blocks_out(m, k, &mut y.data, |lo, hi, out| {
+            for r in lo..hi {
+                let xrow = &x.data[r * k..(r + 1) * k];
+                let yrow = &mut out[(r - lo) * k..(r - lo + 1) * k];
+                for t in 0..n_tiles {
+                    let z = hg.nnz[r * n_tiles + t] as usize;
+                    let base = r * pc + t * slots;
+                    for c in 0..z {
+                        let n = hg.indices[base + c] as usize;
+                        let v = hg.values[base + c];
+                        // implicit h_u element (eq. 3 middle factor)
+                        let u = dense::dot(xrow, wu_t.row(n));
+                        dense::axpy(v * u, wd.row(n), yrow);
+                    }
+                }
+            }
+        });
+    }
 }
 
 /// Non-gated variant (appendix A.1, listing 3): y = (h_u in TwELL) @ W_d.
@@ -133,6 +211,48 @@ mod tests {
         assert_eq!(hg.total_nnz(), 0);
         let y = fused_up_down(&x, &hg, &wu_t, &wd);
         assert!(y.data.iter().all(|&v| v == 0.0));
+    }
+
+    /// The fused kernel's decode shapes must be bit-exact across
+    /// thread counts and across row vs two-phase column dispatch.
+    #[test]
+    fn fused_bit_exact_across_threads_and_dispatch() {
+        let _g = par::test_guard();
+        let orig = par::num_threads();
+        // m < 32, with enough columns/nnz that both phases clear their
+        // parallel work cutoffs when the fast path is on
+        let (x, wg, _, wu_t, wd) = setup(4, 128, 512, 0.0, 21);
+        let hg = gate_matmul_twell(&x, &wg, 32, 1);
+        let mut runs = Vec::new();
+        for &threads in &[1usize, 4] {
+            for &fast in &[false, true] {
+                par::set_threads(threads);
+                par::set_skinny_fast_path(fast);
+                runs.push(fused_up_down(&x, &hg, &wu_t, &wd).data);
+            }
+        }
+        par::set_threads(orig);
+        par::set_skinny_fast_path(true);
+        for (i, y) in runs[1..].iter().enumerate() {
+            assert_eq!(y, &runs[0], "run {} diverged bitwise", i + 1);
+        }
+    }
+
+    #[test]
+    fn into_variant_reuses_scratch_cleanly() {
+        // a big batch then a small one through the same y/coef scratch
+        // must match a fresh small-batch run exactly
+        let (xb, wgb, _, wu_tb, wdb) = setup(24, 16, 64, 0.0, 22);
+        let hgb = gate_matmul_twell(&xb, &wgb, 32, 1);
+        let mut y = Mat::zeros(24, 16);
+        let mut coef = Vec::new();
+        fused_up_down_into(&xb, &hgb, &wu_tb, &wdb, &mut y, &mut coef);
+        let (xs, wgs, _, wu_ts, wds) = setup(2, 16, 64, 0.0, 23);
+        let hgs = gate_matmul_twell(&xs, &wgs, 32, 1);
+        y.set_rows(2);
+        fused_up_down_into(&xs, &hgs, &wu_ts, &wds, &mut y, &mut coef);
+        let fresh = fused_up_down(&xs, &hgs, &wu_ts, &wds);
+        assert_eq!(y.data, fresh.data);
     }
 
     #[test]

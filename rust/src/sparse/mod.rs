@@ -11,7 +11,9 @@
 //!                listings 4-7).
 //! * [`ffn`]    — whole feed-forward blocks (inference pipelines and the
 //!                training step with the paper's eq. 4 backward).
-//! * [`par`]    — scoped-thread row parallelism (rayon is not vendored).
+//! * [`par`]    — persistent worker pool with row- and column-block
+//!                partitioners (rayon is not vendored); skinny decode
+//!                batches dispatch column-parallel.
 
 pub mod dense;
 pub mod ell;

@@ -1,14 +1,66 @@
-//! Row-range parallelism on scoped std threads (rayon is not vendored in
-//! this offline environment).  All sparse kernels parallelize over
-//! disjoint output-row blocks — the CPU rendering of "one CTA per row
-//! (block)" — so a static block split suffices.
+//! Kernel parallelism on a **persistent worker pool** (rayon is not
+//! vendored in this offline environment).
+//!
+//! The seed implementation spawned scoped OS threads per kernel call —
+//! fine for one big prefill GEMM, ruinous for autoregressive decode,
+//! where every engine iteration launches dozens of skinny kernels and
+//! each paid a `thread::scope` spawn/join.  This module instead parks a
+//! pool of workers on a condvar and hands them generation-counted job
+//! descriptors: dispatch is a mutex bump + `notify_all`, microseconds
+//! instead of thread spawns, and the pool is shared process-wide.
+//!
+//! Two partitioning shapes, both the CPU rendering of "one CTA per
+//! output block":
+//!
+//! * **Row blocks** (`for_row_blocks`, `for_row_blocks_out`) — a static
+//!   split of the output rows, the right shape when M is large
+//!   (prefill, training).
+//! * **Column blocks** (`for_col_blocks`) — a static split of the
+//!   output *columns*, the right shape when M is skinny (decode at
+//!   batch ≤ 16): every core works on the same few rows, each owning a
+//!   disjoint column range.
+//!
+//! Determinism contract: a job's closure may touch only the output
+//! range it is handed (disjoint writes, identical to CUDA grid
+//! semantics), and must compute each output element with the same
+//! sequential instruction order regardless of where the partition
+//! boundaries fall.  Every kernel built on top of this module keeps
+//! that discipline, which is why results are **bit-exact for any
+//! thread count and either dispatch shape** — the property the serving
+//! engine's stream-parity tests pin down.
+//!
+//! `REPRO_THREADS` still sets the pool size; `set_threads` does the
+//! same programmatically (the `--threads` serving flag) and may be
+//! called at any time — the pool grows lazily and never shrinks, only
+//! the partition count changes.  Nested calls from inside a pool job
+//! run sequentially instead of deadlocking on the single job slot.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex, MutexGuard, OnceLock};
 
-/// Number of worker threads (cached; overridable via REPRO_THREADS).
+/// Row count at which row-blocking amortizes; below it the skinny
+/// kernels dispatch column-parallel (the seed dispatch simply went
+/// sequential here — see `set_skinny_fast_path`).
+pub(crate) const ROW_PAR_MIN_ROWS: usize = 32;
+
+/// Minimum output elements (`m * row_w`) before a row-parallel kernel
+/// is worth waking the pool for.
+pub(crate) const PAR_MIN_ROW_WORK: usize = 4096;
+
+/// Minimum per-job work (`n * col_w`, roughly flops) before a
+/// column-parallel kernel is worth waking the pool for.  Column jobs
+/// carry a flop-like weight because the skinny shapes they serve have
+/// tiny outputs but long reduction dimensions.
+pub(crate) const PAR_MIN_COL_WORK: usize = 32_768;
+
+static THREADS: AtomicUsize = AtomicUsize::new(0);
+static SKINNY_FAST_PATH: AtomicBool = AtomicBool::new(true);
+
+/// Number of partitions a kernel fans out to (cached; REPRO_THREADS or
+/// `set_threads` overrides, default = available parallelism).
 pub fn num_threads() -> usize {
-    static N: AtomicUsize = AtomicUsize::new(0);
-    let cached = N.load(Ordering::Relaxed);
+    let cached = THREADS.load(Ordering::Relaxed);
     if cached != 0 {
         return cached;
     }
@@ -19,11 +71,270 @@ pub fn num_threads() -> usize {
             std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
         })
         .max(1);
-    N.store(n, Ordering::Relaxed);
+    THREADS.store(n, Ordering::Relaxed);
     n
 }
 
-/// Run `f(lo, hi)` over a static partition of `0..m` across threads.
+/// Set the partition count (the `--threads` serving flag).  Takes
+/// effect for every subsequent kernel call: the pool spawns missing
+/// workers on demand, so raising the count mid-process is safe, and
+/// results are bit-exact across any setting (see the module docs).
+pub fn set_threads(n: usize) {
+    THREADS.store(n.max(1), Ordering::Relaxed);
+}
+
+/// Toggle the skinny-batch fast path (default on).  When off, kernels
+/// reproduce the **seed dispatch**: row-parallel only, with the blunt
+/// `m < 32` sequential cutoff — i.e. every decode-shaped kernel on one
+/// core.  The serve bench A/Bs the two paths; everything else should
+/// leave this alone.
+pub fn set_skinny_fast_path(on: bool) {
+    SKINNY_FAST_PATH.store(on, Ordering::Relaxed);
+}
+
+pub(crate) fn skinny_fast_path() -> bool {
+    SKINNY_FAST_PATH.load(Ordering::Relaxed)
+}
+
+/// Should a skinny (m-row) kernel with `n` output columns of ~`col_w`
+/// work each take the column-parallel path?
+pub(crate) fn use_col_dispatch(m: usize, n: usize, col_w: usize) -> bool {
+    skinny_fast_path()
+        && m < ROW_PAR_MIN_ROWS
+        && num_threads() > 1
+        && n >= 2
+        && n.saturating_mul(col_w) >= PAR_MIN_COL_WORK
+}
+
+/// Raw pointer wrapper for disjoint-range writes from pool workers
+/// (the caller's contract: no two ranges overlap).
+pub(crate) struct SendPtr<T>(*mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+impl<T> SendPtr<T> {
+    pub(crate) fn new(p: *mut T) -> SendPtr<T> {
+        SendPtr(p)
+    }
+
+    /// Method (not field) access so edition-2021 closures capture the
+    /// Sync wrapper rather than the raw pointer field.
+    pub(crate) fn get(&self) -> *mut T {
+        self.0
+    }
+}
+
+// ---------------------------------------------------------------------
+// The pool
+// ---------------------------------------------------------------------
+
+/// One dispatched job: an erased borrow of the caller's closure plus
+/// the partition geometry.  Worker `i` executes range
+/// `[i * chunk, min((i + 1) * chunk, len))` when `i < parts`.
+#[derive(Clone, Copy)]
+struct Job {
+    /// Points at the caller's `&F`; only dereferenced through `call`
+    /// while the submitting thread blocks in `WaitGuard`, which keeps
+    /// the borrow alive.
+    data: *const (),
+    call: unsafe fn(*const (), usize, usize),
+    len: usize,
+    chunk: usize,
+    parts: usize,
+}
+// SAFETY: `data` crosses threads but is only used via `call` under the
+// submitter's completion barrier, and `run_pooled` requires `F: Sync`.
+unsafe impl Send for Job {}
+
+struct PoolState {
+    generation: u64,
+    job: Option<Job>,
+    /// participating workers that have not finished the current job
+    remaining: usize,
+    /// workers spawned so far (ids 1..=workers; 0 is the submitter)
+    workers: usize,
+    /// a worker's closure panicked during the current job
+    panicked: bool,
+}
+
+struct Pool {
+    state: Mutex<PoolState>,
+    /// wakes parked workers when `generation` bumps
+    work_cv: Condvar,
+    /// wakes the submitter when `remaining` hits zero
+    done_cv: Condvar,
+    /// serializes job submission: one job in flight at a time
+    submit: Mutex<()>,
+}
+
+fn pool() -> &'static Pool {
+    static POOL: OnceLock<Pool> = OnceLock::new();
+    POOL.get_or_init(|| Pool {
+        state: Mutex::new(PoolState {
+            generation: 0,
+            job: None,
+            remaining: 0,
+            workers: 0,
+            panicked: false,
+        }),
+        work_cv: Condvar::new(),
+        done_cv: Condvar::new(),
+        submit: Mutex::new(()),
+    })
+}
+
+/// Mutex poisoning is benign here (the state is plain counters), and a
+/// panicking kernel closure must not wedge every later kernel call.
+fn lock_state(p: &Pool) -> MutexGuard<'_, PoolState> {
+    p.state.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+thread_local! {
+    /// Set on pool workers (and on the submitter while it runs its own
+    /// partition) so nested kernel calls degrade to sequential instead
+    /// of deadlocking on the single job slot.
+    static IN_POOL: std::cell::Cell<bool> =
+        const { std::cell::Cell::new(false) };
+}
+
+fn in_pool() -> bool {
+    IN_POOL.with(|c| c.get())
+}
+
+impl Pool {
+    /// Spawn parked workers until at least `needed` exist.  Only called
+    /// by a submitter holding `submit`, i.e. with no job in flight.
+    fn ensure_workers(&'static self, needed: usize) {
+        let mut st = lock_state(self);
+        while st.workers < needed {
+            st.workers += 1;
+            let id = st.workers;
+            let start_gen = st.generation;
+            std::thread::Builder::new()
+                .name(format!("repro-par-{id}"))
+                .spawn(move || worker_loop(pool(), id, start_gen))
+                .expect("failed to spawn pool worker");
+        }
+    }
+}
+
+fn worker_loop(pool: &'static Pool, id: usize, mut last_gen: u64) {
+    IN_POOL.with(|c| c.set(true));
+    loop {
+        let job = {
+            let mut st = lock_state(pool);
+            while st.generation == last_gen {
+                st = pool
+                    .work_cv
+                    .wait(st)
+                    .unwrap_or_else(|e| e.into_inner());
+            }
+            last_gen = st.generation;
+            st.job
+        };
+        // `None`: the job drained (and was cleared) before this
+        // non-participating worker got the lock — participants can't
+        // lag past completion, since completion waits on their
+        // decrement.  Either way there is nothing to do.
+        let Some(job) = job else { continue };
+        if id >= job.parts {
+            continue; // this job fans out narrower than the pool
+        }
+        let lo = id * job.chunk;
+        let hi = ((id + 1) * job.chunk).min(job.len);
+        // SAFETY: `data`/`call` form a live `&F` until the submitter's
+        // completion barrier, which our decrement below releases.
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| unsafe {
+            (job.call)(job.data, lo, hi)
+        }));
+        let mut st = lock_state(pool);
+        if r.is_err() {
+            st.panicked = true;
+        }
+        st.remaining -= 1;
+        if st.remaining == 0 {
+            pool.done_cv.notify_all();
+        }
+    }
+}
+
+unsafe fn call_shim<F: Fn(usize, usize) + Sync>(
+    data: *const (), lo: usize, hi: usize,
+) {
+    // SAFETY: `data` was erased from a live `&F` by `run_pooled`, which
+    // does not return until every partition has completed.
+    let f = unsafe { &*(data as *const F) };
+    f(lo, hi);
+}
+
+/// Blocks until the in-flight job fully drains — **also during an
+/// unwind**, so the erased closure borrow can never dangle even if the
+/// submitter's own partition panics.
+struct WaitGuard {
+    pool: &'static Pool,
+}
+
+impl Drop for WaitGuard {
+    fn drop(&mut self) {
+        let mut st = lock_state(self.pool);
+        while st.remaining > 0 {
+            st = self
+                .pool
+                .done_cv
+                .wait(st)
+                .unwrap_or_else(|e| e.into_inner());
+        }
+        st.job = None;
+    }
+}
+
+/// Fan `f` out over `parts` partitions of `0..len` on the pool; the
+/// submitting thread runs partition 0 itself.  `parts >= 2`, `len >= 2`.
+fn run_pooled<F>(len: usize, parts: usize, f: &F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    let pool = pool();
+    let _submit = pool.submit.lock().unwrap_or_else(|e| e.into_inner());
+    let chunk = len.div_ceil(parts);
+    let live = len.div_ceil(chunk); // partitions that are non-empty
+    pool.ensure_workers(live - 1);
+    {
+        let mut st = lock_state(pool);
+        st.generation += 1;
+        st.job = Some(Job {
+            data: f as *const F as *const (),
+            call: call_shim::<F>,
+            len,
+            chunk,
+            parts: live,
+        });
+        st.remaining = live - 1;
+        if live > 1 {
+            pool.work_cv.notify_all();
+        }
+    }
+    let wait = WaitGuard { pool };
+    let was = IN_POOL.with(|c| c.replace(true));
+    let r = std::panic::catch_unwind(AssertUnwindSafe(|| f(0, chunk.min(len))));
+    IN_POOL.with(|c| c.set(was));
+    drop(wait); // completion barrier (runs even when `r` is a panic)
+    let worker_panicked = {
+        let mut st = lock_state(pool);
+        std::mem::take(&mut st.panicked)
+    };
+    if let Err(p) = r {
+        std::panic::resume_unwind(p);
+    }
+    if worker_panicked {
+        panic!("pool worker panicked during a parallel kernel");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Public partitioners
+// ---------------------------------------------------------------------
+
+/// Run `f(lo, hi)` over a static partition of `0..m` across the pool.
 /// `f` must only touch output rows in its range (disjointness is the
 /// caller's contract — identical to CUDA grid semantics).
 pub fn for_row_blocks<F>(m: usize, f: F)
@@ -31,51 +342,88 @@ where
     F: Fn(usize, usize) + Sync,
 {
     let t = num_threads().min(m.max(1));
-    if t <= 1 || m < 32 {
+    if t <= 1 || m < ROW_PAR_MIN_ROWS || in_pool() {
         f(0, m);
         return;
     }
-    let chunk = m.div_ceil(t);
-    std::thread::scope(|s| {
-        for i in 0..t {
-            let lo = i * chunk;
-            let hi = ((i + 1) * chunk).min(m);
-            if lo >= hi {
-                break;
-            }
-            let f = &f;
-            s.spawn(move || f(lo, hi));
-        }
-    });
+    run_pooled(m, t, &f);
 }
 
-/// Like `for_row_blocks` but hands each block a disjoint mutable slice of
-/// `out` (rows of width `row_w`).
+/// Partitions the row-parallel `_out` dispatch: with the fast path on,
+/// the cutoff weighs total work (`m * row_w`), so a short-but-wide
+/// output (8 rows of vocab logits) still fans out; with it off, the
+/// seed's row-count-only rule applies.
+fn row_partitions(m: usize, row_w: usize) -> usize {
+    let t = num_threads().min(m);
+    if t <= 1 {
+        return 1;
+    }
+    let parallel = if skinny_fast_path() {
+        m >= 2 && m.saturating_mul(row_w) >= PAR_MIN_ROW_WORK
+    } else {
+        m >= ROW_PAR_MIN_ROWS
+    };
+    if parallel {
+        t
+    } else {
+        1
+    }
+}
+
+/// Like `for_row_blocks` but hands each block a disjoint mutable slice
+/// of `out` (rows of width `row_w`).
 pub fn for_row_blocks_out<F>(m: usize, row_w: usize, out: &mut [f32], f: F)
 where
     F: Fn(usize, usize, &mut [f32]) + Sync,
 {
     assert_eq!(out.len(), m * row_w);
-    let t = num_threads().min(m.max(1));
-    if t <= 1 || m < 32 {
+    let t = if in_pool() { 1 } else { row_partitions(m, row_w) };
+    if t <= 1 {
         f(0, m, out);
         return;
     }
-    let chunk = m.div_ceil(t);
-    std::thread::scope(|s| {
-        let mut rest = out;
-        for i in 0..t {
-            let lo = i * chunk;
-            let hi = ((i + 1) * chunk).min(m);
-            if lo >= hi {
-                break;
-            }
-            let (mine, tail) = rest.split_at_mut((hi - lo) * row_w);
-            rest = tail;
-            let f = &f;
-            s.spawn(move || f(lo, hi, mine));
-        }
-    });
+    let base = SendPtr::new(out.as_mut_ptr());
+    let g = |lo: usize, hi: usize| {
+        // SAFETY: row ranges are disjoint, so the subslices are too.
+        let block = unsafe {
+            std::slice::from_raw_parts_mut(
+                base.get().add(lo * row_w),
+                (hi - lo) * row_w,
+            )
+        };
+        f(lo, hi, block);
+    };
+    run_pooled(m, t, &g);
+}
+
+/// Run `f(lo, hi)` over a static partition of the output-**column**
+/// range `0..n` — the decode-shaped dual of `for_row_blocks`, for
+/// kernels whose M is too skinny to split.  `col_w` is the approximate
+/// work per column (used by the sequential cutoff); `f` must only
+/// write output columns in its range.
+pub fn for_col_blocks<F>(n: usize, col_w: usize, f: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    let t = num_threads().min(n.max(1));
+    if t <= 1
+        || n < 2
+        || n.saturating_mul(col_w) < PAR_MIN_COL_WORK
+        || in_pool()
+    {
+        f(0, n);
+        return;
+    }
+    run_pooled(n, t, &f);
+}
+
+/// Serializes tests that flip the global `set_threads` /
+/// `set_skinny_fast_path` knobs, so two determinism sweeps never
+/// interleave their settings.
+#[cfg(test)]
+pub(crate) fn test_guard() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
 }
 
 #[cfg(test)]
@@ -95,15 +443,27 @@ mod tests {
     }
 
     #[test]
+    fn covers_all_cols_exactly_once() {
+        let hits = AtomicU64::new(0);
+        // col_w large enough to clear the work cutoff => pooled
+        for_col_blocks(1000, 1 << 20, |lo, hi| {
+            for _ in lo..hi {
+                hits.fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 1000);
+    }
+
+    #[test]
     fn out_variant_writes_disjoint_slices() {
-        let mut out = vec![0f32; 100 * 4];
-        for_row_blocks_out(100, 4, &mut out, |lo, _hi, block| {
-            for (i, row) in block.chunks_mut(4).enumerate() {
+        let mut out = vec![0f32; 100 * 64];
+        for_row_blocks_out(100, 64, &mut out, |lo, _hi, block| {
+            for (i, row) in block.chunks_mut(64).enumerate() {
                 row.fill((lo + i) as f32);
             }
         });
         for r in 0..100 {
-            assert_eq!(out[r * 4], r as f32);
+            assert_eq!(out[r * 64], r as f32);
         }
     }
 
@@ -115,5 +475,96 @@ mod tests {
             block.fill(1.0);
         });
         assert!(out.iter().all(|&x| x == 1.0));
+    }
+
+    #[test]
+    fn tiny_col_jobs_run_serial() {
+        // below the work cutoff: one invocation over the whole range
+        let calls = AtomicU64::new(0);
+        for_col_blocks(64, 1, |lo, hi| {
+            assert_eq!((lo, hi), (0, 64));
+            calls.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(calls.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn set_threads_controls_partition_count() {
+        let _g = test_guard();
+        let orig = num_threads();
+        set_threads(3);
+        let parts = Mutex::new(Vec::new());
+        for_row_blocks(90, |lo, hi| {
+            parts.lock().unwrap().push((lo, hi));
+        });
+        set_threads(orig);
+        let mut parts = parts.into_inner().unwrap();
+        parts.sort_unstable();
+        assert_eq!(parts, vec![(0, 30), (30, 60), (60, 90)]);
+    }
+
+    #[test]
+    fn nested_calls_degrade_to_sequential_without_deadlock() {
+        let _g = test_guard();
+        let orig = num_threads();
+        set_threads(4);
+        let hits = AtomicU64::new(0);
+        for_row_blocks(64, |lo, hi| {
+            // a nested kernel from inside a pool job must not try to
+            // take the single job slot again
+            for_row_blocks(64, |ilo, ihi| {
+                assert_eq!((ilo, ihi), (0, 64));
+                hits.fetch_add((hi - lo) as u64, Ordering::Relaxed);
+            });
+        });
+        set_threads(orig);
+        assert_eq!(hits.load(Ordering::Relaxed), 64);
+    }
+
+    #[test]
+    fn concurrent_submitters_share_the_pool() {
+        // the serving engine + tests submit from many threads at once:
+        // jobs serialize on the submit lock, every caller gets its own
+        // complete result
+        let sums: Vec<u64> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..8)
+                .map(|_| {
+                    s.spawn(|| {
+                        let sum = AtomicU64::new(0);
+                        for_row_blocks(4096, |lo, hi| {
+                            for i in lo..hi {
+                                sum.fetch_add(i as u64, Ordering::Relaxed);
+                            }
+                        });
+                        sum.load(Ordering::Relaxed)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        let expect = (0u64..4096).sum::<u64>();
+        assert!(sums.iter().all(|&s| s == expect), "{sums:?}");
+    }
+
+    #[test]
+    fn worker_panic_propagates_and_pool_survives() {
+        let _g = test_guard();
+        let orig = num_threads();
+        set_threads(4);
+        let r = std::panic::catch_unwind(|| {
+            for_row_blocks(1024, |lo, _hi| {
+                if lo > 0 {
+                    panic!("boom in worker");
+                }
+            });
+        });
+        assert!(r.is_err(), "panic must propagate to the submitter");
+        // the pool must still dispatch later jobs
+        let hits = AtomicU64::new(0);
+        for_row_blocks(1024, |lo, hi| {
+            hits.fetch_add((hi - lo) as u64, Ordering::Relaxed);
+        });
+        set_threads(orig);
+        assert_eq!(hits.load(Ordering::Relaxed), 1024);
     }
 }

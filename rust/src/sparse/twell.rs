@@ -80,6 +80,27 @@ impl TwellMatrix {
         out
     }
 
+    /// An empty, zero-filled TwELL container for `m` rows of `n`
+    /// columns.  The decode scratch allocates one at its maximum batch
+    /// size; `gate_matmul_twell_into` reshapes it per step within the
+    /// backing vectors' high-water marks — allocation-free.
+    pub fn with_capacity(
+        m: usize, n: usize, tile_n: usize, comp: usize,
+    ) -> TwellMatrix {
+        assert_eq!(n % tile_n, 0);
+        assert_eq!(tile_n % comp, 0);
+        TwellMatrix {
+            m,
+            n,
+            tile_n,
+            comp,
+            values: vec![0.0; m * (n / comp)],
+            indices: vec![0; m * (n / comp)],
+            nnz: vec![0; m * (n / tile_n)],
+            overflow: false,
+        }
+    }
+
     /// Pack an existing dense matrix (used by tests and the ELL
     /// comparison bench; the hot path uses `gate_matmul_twell`).
     pub fn from_dense(h: &Mat, tile_n: usize, comp: usize) -> TwellMatrix {
@@ -131,97 +152,134 @@ impl TwellMatrix {
 pub fn gate_matmul_twell(
     x: &Mat, wg: &Mat, tile_n: usize, comp: usize,
 ) -> TwellMatrix {
+    let mut out = TwellMatrix::with_capacity(x.rows, wg.cols, tile_n, comp);
+    gate_matmul_twell_into(x, wg, tile_n, comp, &mut out);
+    out
+}
+
+/// `gate_matmul_twell` into a caller-owned container (reshaped here;
+/// allocation-free once the container has seen its maximum batch).
+///
+/// Dispatch: row blocks when M is large; for skinny decode batches the
+/// **tiles** parallelize instead — tiles are independent by
+/// construction (the pack epilogue only ever touches its own tile's
+/// value/index/count region), so the column split has no cross-thread
+/// writes, and `fill_tile` is the single code path both dispatches
+/// run, which keeps them bit-exact for any thread count.
+pub fn gate_matmul_twell_into(
+    x: &Mat, wg: &Mat, tile_n: usize, comp: usize, out: &mut TwellMatrix,
+) {
     let (m, k, n) = (x.rows, x.cols, wg.cols);
     assert_eq!(x.cols, wg.rows);
     assert_eq!(n % tile_n, 0);
+    assert_eq!(tile_n % comp, 0);
     assert!(n <= u16::MAX as usize + 1, "u16 column indices");
     let n_tiles = n / tile_n;
     let slots = tile_n / comp;
     let pc = n / comp;
-    let mut values = vec![0f32; m * pc];
-    let mut indices = vec![0u16; m * pc];
-    let mut nnz = vec![0u16; m * n_tiles];
+    out.m = m;
+    out.n = n;
+    out.tile_n = tile_n;
+    out.comp = comp;
+    out.values.resize(m * pc, 0.0);
+    out.values.fill(0.0);
+    out.indices.resize(m * pc, 0);
+    out.indices.fill(0);
+    out.nnz.resize(m * n_tiles, 0);
     let overflow = std::sync::atomic::AtomicBool::new(false);
 
-    // parallel over row blocks; each block owns its slice of all three
-    // output arrays (disjoint rows)
-    let values_ptr = SendPtr(values.as_mut_ptr());
-    let indices_ptr = SendPtr(indices.as_mut_ptr());
-    let nnz_ptr = SendPtr(nnz.as_mut_ptr());
-    par::for_row_blocks(m, |lo, hi| {
-        let values = unsafe {
-            std::slice::from_raw_parts_mut(values_ptr.get().add(lo * pc),
-                                           (hi - lo) * pc)
-        };
-        let indices = unsafe {
-            std::slice::from_raw_parts_mut(indices_ptr.get().add(lo * pc),
-                                           (hi - lo) * pc)
-        };
-        let nnz = unsafe {
-            std::slice::from_raw_parts_mut(nnz_ptr.get().add(lo * n_tiles),
-                                           (hi - lo) * n_tiles)
-        };
-        // tile buffer reused across tiles (the "shared memory" tile)
-        let mut tile = vec![0f32; tile_n];
-        for r in lo..hi {
-            let xrow = &x.data[r * k..(r + 1) * k];
-            for t in 0..n_tiles {
-                let n0 = t * tile_n;
-                // --- matmul for this tile (k-major AXPY over the tile) ---
-                tile.fill(0.0);
-                for (kk, &xv) in xrow.iter().enumerate() {
-                    if xv == 0.0 {
-                        continue;
-                    }
-                    dense::axpy(
-                        xv,
-                        &wg.data[kk * n + n0..kk * n + n0 + tile_n],
-                        &mut tile,
+    let values_ptr = par::SendPtr::new(out.values.as_mut_ptr());
+    let indices_ptr = par::SendPtr::new(out.indices.as_mut_ptr());
+    let nnz_ptr = par::SendPtr::new(out.nnz.as_mut_ptr());
+    if par::use_col_dispatch(m, n_tiles, m * k * tile_n) {
+        // skinny path: every worker owns a disjoint tile range and
+        // walks all m rows
+        par::for_col_blocks(n_tiles, m * k * tile_n, |tlo, thi| {
+            let mut tile = vec![0f32; tile_n];
+            for r in 0..m {
+                let xrow = &x.data[r * k..(r + 1) * k];
+                for t in tlo..thi {
+                    let (z, over) = fill_tile(
+                        xrow, wg, t, &mut tile, slots,
+                        r * pc + t * slots, &values_ptr, &indices_ptr,
                     );
-                }
-                // --- epilogue: ReLU + TwELL pack (alg. 1 lines 6-18) ----
-                let mut z = 0usize;
-                for (c, &s) in tile.iter().enumerate() {
-                    if s > 0.0 {
-                        if z < slots {
-                            let j = (r - lo) * pc + t * slots + z;
-                            values[j] = s;
-                            indices[j] = (n0 + c) as u16;
-                        } else {
-                            overflow.store(
-                                true,
-                                std::sync::atomic::Ordering::Relaxed,
-                            );
-                        }
-                        z += 1;
+                    // SAFETY: (r, t) is unique to this worker's range
+                    unsafe {
+                        *nnz_ptr.get().add(r * n_tiles + t) = z;
+                    }
+                    if over {
+                        overflow
+                            .store(true, std::sync::atomic::Ordering::Relaxed);
                     }
                 }
-                nnz[(r - lo) * n_tiles + t] = z.min(slots) as u16;
             }
-        }
-    });
-    TwellMatrix {
-        m,
-        n,
-        tile_n,
-        comp,
-        values,
-        indices,
-        nnz,
-        overflow: overflow.load(std::sync::atomic::Ordering::Relaxed),
+        });
+    } else {
+        // parallel over row blocks; each block owns its rows of all
+        // three output arrays
+        par::for_row_blocks(m, |lo, hi| {
+            let mut tile = vec![0f32; tile_n];
+            for r in lo..hi {
+                let xrow = &x.data[r * k..(r + 1) * k];
+                for t in 0..n_tiles {
+                    let (z, over) = fill_tile(
+                        xrow, wg, t, &mut tile, slots,
+                        r * pc + t * slots, &values_ptr, &indices_ptr,
+                    );
+                    // SAFETY: row range is exclusive to this block
+                    unsafe {
+                        *nnz_ptr.get().add(r * n_tiles + t) = z;
+                    }
+                    if over {
+                        overflow
+                            .store(true, std::sync::atomic::Ordering::Relaxed);
+                    }
+                }
+            }
+        });
     }
+    out.overflow = overflow.load(std::sync::atomic::Ordering::Relaxed);
 }
 
-/// Raw pointer wrapper for disjoint-row writes from scoped threads.
-struct SendPtr<T>(*mut T);
-unsafe impl<T> Send for SendPtr<T> {}
-unsafe impl<T> Sync for SendPtr<T> {}
-impl<T> SendPtr<T> {
-    /// Method (not field) access so edition-2021 closures capture the
-    /// Sync wrapper rather than the raw pointer field.
-    fn get(&self) -> *mut T {
-        self.0
+/// Matmul + ReLU + pack for one (row, tile) — algorithm 1 lines 6-18.
+/// The one code path both dispatch shapes execute (bit-exactness).
+/// Packs into `[j0, j0 + slots)` of the value/index arrays; returns
+/// the tile's stored count and whether it spilled (drop-and-flag).
+#[inline]
+fn fill_tile(
+    xrow: &[f32], wg: &Mat, t: usize, tile: &mut [f32], slots: usize,
+    j0: usize, values: &par::SendPtr<f32>, indices: &par::SendPtr<u16>,
+) -> (u16, bool) {
+    let tile_n = tile.len();
+    let n = wg.cols;
+    let n0 = t * tile_n;
+    // --- matmul for this tile (k-major AXPY over the tile) ---
+    tile.fill(0.0);
+    for (kk, &xv) in xrow.iter().enumerate() {
+        if xv == 0.0 {
+            continue;
+        }
+        dense::axpy(xv, &wg.data[kk * n + n0..kk * n + n0 + tile_n], tile);
     }
+    // --- epilogue: ReLU + TwELL pack ---
+    let mut z = 0usize;
+    let mut over = false;
+    for (c, &s) in tile.iter().enumerate() {
+        if s > 0.0 {
+            if z < slots {
+                // SAFETY: this (row, tile) region belongs to exactly
+                // one worker on either dispatch shape
+                unsafe {
+                    *values.get().add(j0 + z) = s;
+                    *indices.get().add(j0 + z) = (n0 + c) as u16;
+                }
+            } else {
+                over = true;
+            }
+            z += 1;
+        }
+    }
+    (z.min(slots) as u16, over)
 }
 
 #[cfg(test)]
@@ -298,6 +356,51 @@ mod tests {
         let (x, wg) = sparse_gate(64, 16, 128, 8.0, 5);
         let tw = gate_matmul_twell(&x, &wg, 32, 4);
         assert!(tw.bytes() < (64 * 128 * 4) as u64 / 2);
+    }
+
+    /// Skinny batches must produce the identical pack — values,
+    /// indices, counts, overflow — no matter the thread count and no
+    /// matter whether rows or tiles were split across workers.
+    #[test]
+    fn gate_pack_bit_exact_across_threads_and_dispatch() {
+        let _g = par::test_guard();
+        let orig = par::num_threads();
+        // m < 32 and n_tiles * m * k * tile_n well past the column
+        // work cutoff, so the fast path genuinely goes tile-parallel
+        let (x, wg) = sparse_gate(4, 64, 512, 4.0, 9);
+        let mut runs = Vec::new();
+        for &threads in &[1usize, 4] {
+            for &fast in &[false, true] {
+                par::set_threads(threads);
+                par::set_skinny_fast_path(fast);
+                runs.push(gate_matmul_twell(&x, &wg, 32, 2));
+            }
+        }
+        par::set_threads(orig);
+        par::set_skinny_fast_path(true);
+        for tw in &runs[1..] {
+            assert_eq!(tw.values, runs[0].values, "values diverged");
+            assert_eq!(tw.indices, runs[0].indices, "indices diverged");
+            assert_eq!(tw.nnz, runs[0].nnz, "counts diverged");
+            assert_eq!(tw.overflow, runs[0].overflow);
+        }
+    }
+
+    #[test]
+    fn into_variant_reuses_a_larger_container_cleanly() {
+        // pack a big batch, then a small one into the same container:
+        // the small result must be identical to a fresh pack (no stale
+        // values/indices/counts leaking through)
+        let (xb, wgb) = sparse_gate(24, 16, 64, 0.0, 12);
+        let mut scratch = gate_matmul_twell(&xb, &wgb, 32, 2);
+        let (xs, wgs) = sparse_gate(3, 16, 64, 0.0, 13);
+        gate_matmul_twell_into(&xs, &wgs, 32, 2, &mut scratch);
+        let fresh = gate_matmul_twell(&xs, &wgs, 32, 2);
+        assert_eq!(scratch.m, 3);
+        assert_eq!(scratch.values, fresh.values);
+        assert_eq!(scratch.indices, fresh.indices);
+        assert_eq!(scratch.nnz, fresh.nnz);
+        assert_eq!(scratch.overflow, fresh.overflow);
     }
 
     #[test]

@@ -47,6 +47,35 @@ impl Mat {
         &mut self.data[r * self.cols..(r + 1) * self.cols]
     }
 
+    /// Logically resize to `rows`, keeping `cols`.  The backing `Vec`
+    /// only reallocates when growing past its high-water mark, so a
+    /// scratch matrix sized once at its maximum is reshaped for free —
+    /// the decode hot loop relies on this being allocation-free.
+    pub fn set_rows(&mut self, rows: usize) {
+        self.rows = rows;
+        self.data.resize(rows * self.cols, 0.0);
+    }
+
+    /// Column-concatenate matrices with equal row counts:
+    /// `[A | B | ...]`.  Used to pre-fuse the Q/K/V projection weights
+    /// into one `(d, 3d)` matrix at model load.
+    pub fn hcat(parts: &[&Mat]) -> Mat {
+        assert!(!parts.is_empty());
+        let rows = parts[0].rows;
+        assert!(parts.iter().all(|p| p.rows == rows), "row mismatch");
+        let cols = parts.iter().map(|p| p.cols).sum();
+        let mut out = Mat::zeros(rows, cols);
+        for r in 0..rows {
+            let orow = out.row_mut(r);
+            let mut at = 0;
+            for p in parts {
+                orow[at..at + p.cols].copy_from_slice(p.row(r));
+                at += p.cols;
+            }
+        }
+        out
+    }
+
     pub fn transpose(&self) -> Mat {
         let mut t = Mat::zeros(self.cols, self.rows);
         for r in 0..self.rows {
@@ -106,6 +135,26 @@ mod tests {
     fn nnz_counts_positive_only() {
         let m = Mat::from_vec(1, 4, vec![1.0, -1.0, 0.0, 0.5]);
         assert_eq!(m.nnz_positive(), 2);
+    }
+
+    #[test]
+    fn hcat_concatenates_columns() {
+        let a = Mat::from_vec(2, 2, vec![1., 2., 3., 4.]);
+        let b = Mat::from_vec(2, 1, vec![5., 6.]);
+        let c = Mat::hcat(&[&a, &b]);
+        assert_eq!((c.rows, c.cols), (2, 3));
+        assert_eq!(c.data, vec![1., 2., 5., 3., 4., 6.]);
+    }
+
+    #[test]
+    fn set_rows_reshapes_without_losing_width() {
+        let mut m = Mat::zeros(4, 3);
+        let cap = m.data.capacity();
+        m.set_rows(2);
+        assert_eq!((m.rows, m.data.len()), (2, 6));
+        m.set_rows(4);
+        assert_eq!((m.rows, m.data.len()), (4, 12));
+        assert_eq!(m.data.capacity(), cap, "scratch reshape reallocated");
     }
 
     #[test]
