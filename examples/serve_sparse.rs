@@ -7,12 +7,15 @@
 //! Run: cargo run --release --example serve_sparse -- \
 //!        [--run e2e_s] [--slots 8] [--requests 24] [--max-new 12] \
 //!        [--kv-blocks 128] [--kv-block-size 16] [--prefill-chunk 16] \
+//!        [--route-density 0.25] \
 //!        [--temperature 0.8] [--top-k 40] [--top-p 0.95] [--seed 0] \
 //!        [--threads N]
 //! (trains a quick tiny model if the run does not exist yet;
 //! temperature 0 — the default — decodes greedily, request i samples
-//! with seed `--seed + i` so runs stay reproducible, and --threads
-//! pins the kernel worker pool before first use)
+//! with seed `--seed + i` so runs stay reproducible, --threads pins
+//! the kernel worker pool before first use, and --route-density sets
+//! the union-density threshold for batch-contextual FFN routing on
+//! the twell engine — 0 disables the routed path)
 
 use std::time::{Duration, Instant};
 
@@ -43,6 +46,8 @@ fn main() -> anyhow::Result<()> {
     // prompt tokens fed per prefilling slot per engine iteration;
     // defaults to one KV block
     let prefill_chunk = args.get_usize("prefill-chunk", kv_block_size)?;
+    // union-density threshold for routed decode FFN (twell backend)
+    let route_density = args.get_f64("route-density", 0.25)? as f32;
     // per-request sampling (temperature 0 = greedy argmax)
     let base_params = SamplingParams {
         temperature: args.get_f64("temperature", 0.0)? as f32,
@@ -94,6 +99,7 @@ fn main() -> anyhow::Result<()> {
                 kv_block_size,
                 kv_blocks,
                 prefill_chunk,
+                route_density,
                 mode,
             };
             let server = Server::start(model, policy);
@@ -118,7 +124,8 @@ fn main() -> anyhow::Result<()> {
             println!(
                 "{label:>6} {:<22} {n_requests} reqs: p50 {:.1} ms, \
                  p95 {:.1} ms, ttft p50 {:.1} ms, {:.0} tok/s \
-                 ({} backfills, {} prefill chunks)",
+                 ({} backfills, {} prefill chunks, ffn {} routed / \
+                 {} fallback, mean union density {:.3})",
                 format!("{mode:?}/{eff_slots} slots"),
                 metrics.p50_ms(),
                 metrics.p95_ms(),
@@ -126,6 +133,9 @@ fn main() -> anyhow::Result<()> {
                 metrics.throughput_tok_s(wall),
                 stats.backfilled,
                 stats.prefill_chunks,
+                stats.ffn_routed,
+                stats.ffn_fallback,
+                stats.mean_union_density(),
             );
             server.shutdown();
         }
@@ -139,6 +149,7 @@ fn main() -> anyhow::Result<()> {
         kv_block_size,
         kv_blocks,
         prefill_chunk,
+        route_density,
         mode: ServeMode::Continuous,
     });
     let (_, tok_rx, done_rx) = server.submit_streaming_sampled(

@@ -6,7 +6,11 @@
 //! **skinny-batch decode kernel sweep**: the seed's row-parallel
 //! dispatch (which collapses every decode-shaped kernel onto one core)
 //! vs the pooled column-parallel fast path, at pure-decode batch sizes
-//! 1/4/8/16.
+//! 1/4/8/16, plus a **decode routing sweep** (`section=decode_routing`):
+//! the batch-contextual union-gathered routed FFN vs the unrouted
+//! twell row path vs the dense backend at ~99% sparsity, batch 1..64,
+//! with the measured batch-union column density and the dominant
+//! dispatch label on every row.
 //!
 //! Claims under test: decode throughput grows with the number of slots
 //! because the batched step hands the FFN backends a multi-row
@@ -35,6 +39,7 @@ use repro::model::{FfnBackend, Layer, Model};
 use repro::serve::{ServeMetrics, ServeMode, ServePolicy, Server};
 use repro::sparse::ffn::synth_sparse_ffn;
 use repro::sparse::par;
+use repro::sparse::route::RouteStats;
 use repro::tensor::Mat;
 use repro::util::bench::Table;
 use repro::util::json::Json;
@@ -105,6 +110,7 @@ fn run_wave(backend: FfnBackend, slots: usize, n_requests: usize,
         kv_block_size,
         kv_blocks,
         prefill_chunk,
+        route_density: 0.25,
         mode: ServeMode::Continuous,
     });
     let t0 = Instant::now();
@@ -145,10 +151,14 @@ fn run_wave(backend: FfnBackend, slots: usize, n_requests: usize,
 /// with `prompt_len` tokens, then `steps` greedy-feedback decode
 /// iterations through one persistent `DecodeScratch` — the kernel-level
 /// view of the skinny-batch fast path, with no scheduler noise.
-/// Returns decode tokens/sec.
+/// `route_density > 0` enables batch-contextual routing at that
+/// union-density threshold.  Returns (decode tokens/sec, the routing
+/// dispatch counters for the timed steps only — warmup and prefill are
+/// discarded).
 fn decode_wave(
     model: &Model, batch: usize, prompt_len: usize, steps: usize,
-) -> f64 {
+    route_density: f32,
+) -> (f64, RouteStats) {
     let block = 16usize;
     let warmup = 2usize;
     let positions = prompt_len + steps + warmup;
@@ -158,6 +168,8 @@ fn decode_wave(
         cache.reserve(s, positions);
     }
     let mut scratch = DecodeScratch::new(model, batch * prompt_len, batch);
+    scratch.route.enabled = route_density > 0.0;
+    scratch.route.max_density = route_density;
     let vocab = model.cfg.vocab_size;
     let prompts: Vec<Vec<u32>> = (0..batch)
         .map(|s| {
@@ -186,15 +198,19 @@ fn decode_wave(
             t[0] = n;
         }
     };
-    // warm the pool (worker spawn, first-touch paging) off the clock
+    // warm the pool (worker spawn, first-touch paging) off the clock,
+    // then drop the prefill + warmup dispatch counts so the returned
+    // stats cover exactly the timed steps
     for _ in 0..warmup {
         advance(&mut toks, &mut cache, &mut scratch);
     }
+    let _ = scratch.route.stats.take();
     let t0 = Instant::now();
     for _ in 0..steps {
         advance(&mut toks, &mut cache, &mut scratch);
     }
-    (batch * steps) as f64 / t0.elapsed().as_secs_f64()
+    let tok_s = (batch * steps) as f64 / t0.elapsed().as_secs_f64();
+    (tok_s, scratch.route.stats.take())
 }
 
 fn backend_label(backend: FfnBackend) -> &'static str {
@@ -410,8 +426,9 @@ fn main() {
         for &batch in &[1usize, 4, 8, 16] {
             for (path, fast) in [("row-seed", false), ("col-pool", true)] {
                 par::set_skinny_fast_path(fast);
-                let tok_s =
-                    decode_wave(&model, batch, decode_prompt, decode_steps);
+                let (tok_s, _) = decode_wave(
+                    &model, batch, decode_prompt, decode_steps, 0.0,
+                );
                 decode_table.row(&[
                     label.to_string(),
                     path.to_string(),
@@ -436,6 +453,70 @@ fn main() {
          <= 16 — the seed dispatch ran every decode-shaped kernel \
          (fused QKV, output projection, TwELL gate + fused FFN, vocab \
          logits) on a single core."
+    );
+
+    // ---- decode routing sweep: batch-contextual union-gathered FFN
+    // (threshold 1.0, so every pure-decode step routes) vs the
+    // unrouted twell row path vs the dense backend, at ~99% sparsity
+    // (nnz ≈ 3.5 of f=352) where the batch union stays skinny even at
+    // batch 64 --------------------------------------------------------
+    println!(
+        "\n== decode routing sweep: routed union-gather vs twell row \
+         vs dense ==\n\
+         pure decode at batch 1..64, nnz≈3.5 (~99% sparse), \
+         {decode_steps} timed steps, {threads} threads; \
+         union density is measured on the routed probe\n"
+    );
+    let mut route_table = Table::new(&[
+        "path", "batch", "decode tok/s", "union density", "dispatch",
+    ]);
+    let model99_twell = synthetic_model(4, 3.5, FfnBackend::Twell);
+    let model99_dense = synthetic_model(4, 3.5, FfnBackend::Dense);
+    for &batch in &[1usize, 4, 8, 16, 32, 64] {
+        // routed probe first: it measures the batch-union density that
+        // annotates all three rows at this batch size
+        let (tok_r, st_r) = decode_wave(
+            &model99_twell, batch, decode_prompt, decode_steps, 1.0,
+        );
+        let union_density = st_r.mean_density();
+        let (tok_t, st_t) = decode_wave(
+            &model99_twell, batch, decode_prompt, decode_steps, 0.0,
+        );
+        let (tok_d, st_d) = decode_wave(
+            &model99_dense, batch, decode_prompt, decode_steps, 0.0,
+        );
+        let runs = [
+            ("twell", "routed", tok_r, st_r.dominant()),
+            ("twell", "twell-row", tok_t, st_t.dominant()),
+            ("dense", "dense", tok_d, st_d.dominant()),
+        ];
+        for (label, path, tok_s, dispatch) in runs {
+            route_table.row(&[
+                path.to_string(),
+                batch.to_string(),
+                format!("{tok_s:.0}"),
+                format!("{union_density:.3}"),
+                dispatch.to_string(),
+            ]);
+            rows.push(Json::obj(vec![
+                ("section", Json::str("decode_routing")),
+                ("backend", Json::str(label)),
+                ("path", Json::str(path)),
+                ("batch", Json::Num(batch as f64)),
+                ("threads", Json::Num(threads as f64)),
+                ("decode_tok_s", Json::Num(tok_s)),
+                ("union_density", Json::Num(union_density)),
+                ("dispatch", Json::str(dispatch)),
+            ]));
+        }
+    }
+    route_table.print();
+    println!(
+        "\nshape check: at ~99% sparsity the batch union grows \
+         sub-linearly with batch (active sets overlap), so the routed \
+         path's skinny GEMMs should beat the per-row twell walk as \
+         batch grows and beat dense everywhere the union stays far \
+         below f."
     );
 
     let report = Json::obj(vec![

@@ -225,6 +225,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // defaults to one KV block (1 = legacy token-by-token prefill)
     let prefill_chunk =
         args.get_usize("prefill-chunk", kv_block_size)?;
+    // union-density threshold for batch-contextual FFN routing on the
+    // TwELL backend (0 disables the routed path entirely)
+    let route_density = args.get_f64("route-density", 0.25)? as f32;
     // per-request sampling: temperature 0 (the default) is greedy;
     // request i gets seed `--seed + i`, so the run is reproducible
     // while streams still diverge across requests
@@ -257,6 +260,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         kv_block_size,
         kv_blocks,
         prefill_chunk,
+        route_density,
         mode,
     };
     let server = repro::serve::Server::start(model, policy);
@@ -335,6 +339,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
         stats.max_active,
         stats.abandoned,
         stats.fallbacks
+    );
+    println!(
+        "ffn dispatch: {} routed, {} fallback, {} col-parallel, \
+         {} row-parallel (mean union density {:.3})",
+        stats.ffn_routed,
+        stats.ffn_fallback,
+        stats.ffn_col,
+        stats.ffn_row,
+        stats.mean_union_density()
     );
     server.shutdown();
     Ok(())

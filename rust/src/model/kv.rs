@@ -43,7 +43,8 @@
 use crate::model::sample::{Sampler, SamplingParams};
 use crate::model::{FfnBackend, Model};
 use crate::sparse::dense;
-use crate::sparse::ffn::{forward_backend_into, FfnScratch};
+use crate::sparse::ffn::{forward_backend_step_into, FfnScratch};
+use crate::sparse::route::RouteScratch;
 use crate::tensor::Mat;
 
 pub struct KvCache {
@@ -201,6 +202,11 @@ pub struct DecodeScratch {
     logits: Mat,
     /// FFN intermediates (dense hg/hu, TwELL pack, fused coefficients)
     ffn: FfnScratch,
+    /// batch-contextual FFN routing state: policy knobs, the per-step
+    /// column union, gathered weight slices, and dispatch counters.
+    /// Public so the serving engine can set the policy and drain the
+    /// counters; disabled by default (routing off costs nothing)
+    pub route: RouteScratch,
     /// attention score scratch, reused across heads and steps
     scores: Vec<f32>,
     /// per-feed row offsets into the packed activation matrix
@@ -246,6 +252,7 @@ impl DecodeScratch {
                 comp,
                 model.backend == FfnBackend::Twell,
             ),
+            route: RouteScratch::new(model.cfg.d_ff, d),
             scores: Vec::new(),
             offsets: Vec::new(),
             starts: Vec::new(),
@@ -380,6 +387,7 @@ impl Model {
             last,
             logits,
             ffn,
+            route,
             scores,
             offsets,
             starts,
@@ -441,6 +449,10 @@ impl Model {
         attn_out.set_rows(total);
         ffn_y.set_rows(total);
         let twell = self.backend == FfnBackend::Twell;
+        // batch-contextual routing applies only to pure-decode steps:
+        // a ragged prefill span unions whole prompt chunks into the
+        // gate and densifies the column union (see sparse::route)
+        route.decode_step = feeds.iter().all(|&(_, span)| span.len() == 1);
         for (li, layer) in self.layers.iter().enumerate() {
             super::rmsnorm_into(x, &layer.ln_attn, self.cfg.rmsnorm_eps,
                                 normed);
@@ -479,8 +491,11 @@ impl Model {
             super::rmsnorm_into(x, &layer.ln_ffn, self.cfg.rmsnorm_eps,
                                 normed);
             // the batched FFN: (sum of span lengths, d) rows through
-            // dense or TwELL, intermediates drawn from the scratch
-            forward_backend_into(&layer.ffn, normed, twell, ffn, ffn_y);
+            // dense or TwELL via the batch-contextual router,
+            // intermediates drawn from the scratch
+            forward_backend_step_into(
+                &layer.ffn, normed, twell, ffn, route, ffn_y,
+            );
             super::add_inplace(x, ffn_y);
         }
         for &(slot, span) in feeds {
@@ -886,11 +901,15 @@ mod tests {
         )
     }
 
-    /// The headline determinism contract of this PR: an engine-shaped
-    /// decode run — chunked prefill, then greedy feedback through a
-    /// persistent scratch — produces bit-identical logits and tokens
-    /// for `REPRO_THREADS ∈ {1, 4}` and for the seed row dispatch vs
-    /// the pooled column-parallel fast path, on both FFN backends.
+    /// The headline determinism contract: an engine-shaped decode run
+    /// — chunked prefill, then greedy feedback through a persistent
+    /// scratch — produces bit-identical logits and tokens for
+    /// `REPRO_THREADS ∈ {1, 4}`, for the seed row dispatch vs the
+    /// pooled column-parallel fast path, **and** for batch-contextual
+    /// routing off vs forced on (`max_density = 1.0` routes every
+    /// pure-decode step), on both FFN backends.  The routed sweep also
+    /// asserts the routed kernel genuinely ran on the TwELL backend —
+    /// a silently-dead route path would pass parity vacuously.
     fn decode_stream_bit_exact(backend: FfnBackend) {
         let _g = crate::sparse::par::test_guard();
         let orig = crate::sparse::par::num_threads();
@@ -898,8 +917,16 @@ mod tests {
         let prompt: Vec<u32> =
             (0..6).map(|i| ((i * 37 + 11) % 256) as u32).collect();
         let mut runs: Vec<(Vec<u32>, Vec<u32>)> = Vec::new();
+        let mut configs = Vec::new();
         for &threads in &[1usize, 4] {
             for &fast in &[false, true] {
+                for &routed in &[false, true] {
+                    configs.push((threads, fast, routed));
+                }
+            }
+        }
+        for &(threads, fast, routed) in &configs {
+            {
                 crate::sparse::par::set_threads(threads);
                 crate::sparse::par::set_skinny_fast_path(fast);
                 let mut cache = PagedKvCache::new(&m, 3, 32, 4);
@@ -908,6 +935,8 @@ mod tests {
                 }
                 let mut scratch =
                     DecodeScratch::new(&m, 3 * prompt.len(), 3);
+                scratch.route.enabled = routed;
+                scratch.route.max_density = 1.0;
                 let mut stream = Vec::new();
                 let mut logit_bits = Vec::new();
                 // whole-prompt prefill for all three slots in one step
@@ -941,6 +970,14 @@ mod tests {
                     }
                     stream.extend(next);
                 }
+                // routing must actually engage when forced (TwELL
+                // pure-decode steps), and stay off otherwise
+                let stats = scratch.route.stats.take();
+                if backend == FfnBackend::Twell && routed {
+                    assert!(stats.routed > 0, "routing never engaged");
+                } else {
+                    assert_eq!(stats.routed, 0, "routing ran unexpectedly");
+                }
                 runs.push((stream, logit_bits));
             }
         }
@@ -964,6 +1001,38 @@ mod tests {
     #[test]
     fn decode_stream_bit_exact_across_threads_and_dispatch_twell() {
         decode_stream_bit_exact(FfnBackend::Twell);
+    }
+
+    /// Routing boundary: a feed containing a ragged prefill span must
+    /// take the fused fallback (prefill rows densify the union), while
+    /// the next pure-decode step over the same scratch routes.
+    #[test]
+    fn mixed_feed_falls_back_while_pure_decode_routes() {
+        let m = toy_model(FfnBackend::Twell);
+        let n_layers = m.cfg.n_layers as u64;
+        let mut cache = PagedKvCache::new(&m, 2, 16, 2);
+        cache.reserve(0, 8);
+        cache.reserve(1, 8);
+        let mut scratch = DecodeScratch::new(&m, 8, 2);
+        scratch.route.enabled = true;
+        scratch.route.max_density = 1.0; // any union would route
+        // mixed: slot 0 prefills a 3-token chunk, slot 1 is
+        // decode-shaped — the whole step must fall back, without even
+        // measuring a union density
+        let feeds: Vec<(usize, &[u32])> =
+            vec![(0, &[1, 2, 3][..]), (1, &[7][..])];
+        m.prefill_decode_step_into(&mut cache, &feeds, &mut scratch);
+        let s = scratch.route.stats.take();
+        assert_eq!((s.routed, s.fallback), (0, n_layers));
+        assert_eq!(s.density_calls, 0);
+        // pure decode: every span is a single token => every layer
+        // routes (and measures a density)
+        let feeds: Vec<(usize, &[u32])> =
+            vec![(0, &[4][..]), (1, &[9][..])];
+        m.prefill_decode_step_into(&mut cache, &feeds, &mut scratch);
+        let s = scratch.route.stats.take();
+        assert_eq!((s.routed, s.fallback), (n_layers, 0));
+        assert_eq!(s.density_calls, n_layers);
     }
 
     #[test]

@@ -183,6 +183,13 @@ pub struct ServePolicy {
     /// in `ceil(L / prefill_chunk)` iterations.  1 reproduces the old
     /// token-by-token prefill.
     pub prefill_chunk: usize,
+    /// Union-density threshold for batch-contextual FFN routing on the
+    /// TwELL backend (see `sparse::route`): a pure-decode step whose
+    /// batch-union of active FFN columns covers at most this fraction
+    /// of `d_ff` runs the routed union-gathered kernel; denser steps
+    /// fall back to the fused row path.  `0.0` disables routing
+    /// entirely.  Ignored by the dense backend.
+    pub route_density: f32,
     pub mode: ServeMode,
 }
 
@@ -194,6 +201,7 @@ impl Default for ServePolicy {
             kv_block_size: 16,
             kv_blocks: 256,
             prefill_chunk: 16,
+            route_density: crate::sparse::route::DEFAULT_ROUTE_DENSITY,
             mode: ServeMode::Continuous,
         }
     }
@@ -222,6 +230,34 @@ pub struct EngineStats {
     /// always 0 since the paged cache serves any request that fits the
     /// pool; kept so dashboards and the acceptance checks can assert it
     pub fallbacks: u64,
+    /// FFN layer-steps dispatched row-parallel (tall batches)
+    pub ffn_row: u64,
+    /// FFN layer-steps dispatched column-parallel (skinny batches)
+    pub ffn_col: u64,
+    /// FFN layer-steps executed by the routed union-gathered kernel
+    pub ffn_routed: u64,
+    /// FFN layer-steps where routing was considered but fell back to
+    /// the fused row path (union too dense, or a mixed
+    /// prefill+decode feed)
+    pub ffn_fallback: u64,
+    /// sum of measured union densities (over `union_density_calls`
+    /// pure-decode routing decisions); see `mean_union_density`
+    pub union_density_sum: f64,
+    /// number of union-density measurements folded into
+    /// `union_density_sum`
+    pub union_density_calls: u64,
+}
+
+impl EngineStats {
+    /// Mean batch-union FFN column density over every pure-decode
+    /// routing decision, or 0 when routing never measured one.
+    pub fn mean_union_density(&self) -> f64 {
+        if self.union_density_calls == 0 {
+            0.0
+        } else {
+            self.union_density_sum / self.union_density_calls as f64
+        }
+    }
 }
 
 pub struct Server {
@@ -494,6 +530,12 @@ fn continuous_loop(
     // these buffers for the lifetime of the engine
     let mut scratch =
         DecodeScratch::new(&model, policy.slots * chunk, policy.slots);
+    // batch-contextual FFN routing policy (TwELL backend only): the
+    // scratch owns the knobs, the union buffers and the dispatch
+    // counters; the engine drains the counters into `EngineStats`
+    // after every step
+    scratch.route.enabled = policy.route_density > 0.0;
+    scratch.route.max_density = policy.route_density;
     enum Admit {
         /// answered or installed this wave
         Take,
@@ -673,6 +715,13 @@ fn continuous_loop(
             let mut st = stats.lock().unwrap();
             st.steps += 1;
             st.prefill_chunks += prefilling;
+            let r = scratch.route.stats.take();
+            st.ffn_row += r.row;
+            st.ffn_col += r.col;
+            st.ffn_routed += r.routed;
+            st.ffn_fallback += r.fallback;
+            st.union_density_sum += r.density_sum;
+            st.union_density_calls += r.density_calls;
         }
 
         // ---- sample / retire --------------------------------------------
@@ -802,6 +851,7 @@ mod tests {
             kv_block_size: 8,
             kv_blocks: 64,
             prefill_chunk: 8,
+            route_density: 0.25,
             mode,
         }
     }
@@ -899,6 +949,59 @@ mod tests {
     #[test]
     fn continuous_parity_twell() {
         continuous_parity(FfnBackend::Twell);
+    }
+
+    #[test]
+    fn routed_decode_serves_bit_exact_tokens_and_counts_dispatch() {
+        // force routing on every pure-decode step (threshold 1.0): the
+        // served stream must still be token-for-token what `generate`
+        // produces (the routed kernel is bit-exact with the fused row
+        // path), decode steps must land on the routed counter, and the
+        // multi-token prefill feed must land on the fallback counter
+        // with no density measured for it
+        let model = toy_model(FfnBackend::Twell);
+        let reference = model.generate(&[1, 2, 3], 4);
+        let server = Server::start(model, ServePolicy {
+            route_density: 1.0,
+            ..policy(2, ServeMode::Continuous)
+        });
+        let (_, rx) = server.submit(vec![1, 2, 3], 4).unwrap();
+        let c = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        assert_eq!(c.tokens, reference);
+        let st = server.stats();
+        assert!(st.ffn_routed > 0, "routing never engaged: {st:?}");
+        assert!(st.ffn_fallback > 0,
+                "the prefill chunk should fall back: {st:?}");
+        assert_eq!(st.ffn_row + st.ffn_col, 0,
+                   "routing enabled on TwELL never reaches the \
+                    unrouted counters: {st:?}");
+        assert_eq!(st.union_density_calls, st.ffn_routed,
+                   "density is measured exactly once per routed step \
+                    at threshold 1.0: {st:?}");
+        let d = st.mean_union_density();
+        assert!(d > 0.0 && d <= 1.0, "mean union density {d}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn route_density_zero_disables_routing_entirely() {
+        let model = toy_model(FfnBackend::Twell);
+        let reference = model.generate(&[1, 2, 3], 4);
+        let server = Server::start(model, ServePolicy {
+            route_density: 0.0,
+            ..policy(2, ServeMode::Continuous)
+        });
+        let (_, rx) = server.submit(vec![1, 2, 3], 4).unwrap();
+        let c = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        assert_eq!(c.tokens, reference);
+        let st = server.stats();
+        assert_eq!(st.ffn_routed, 0, "{st:?}");
+        assert_eq!(st.ffn_fallback, 0, "{st:?}");
+        assert_eq!(st.union_density_calls, 0, "{st:?}");
+        assert!(st.ffn_row + st.ffn_col > 0,
+                "disabled routing still counts partitioning: {st:?}");
+        assert_eq!(st.mean_union_density(), 0.0);
+        server.shutdown();
     }
 
     fn sampled_params(seed: u64) -> SamplingParams {
@@ -1139,6 +1242,7 @@ mod tests {
             kv_block_size: 4,
             kv_blocks: 8,
             prefill_chunk: 4,
+            route_density: 0.25,
             mode: ServeMode::Continuous,
         });
         let (_, rx) = server.submit(prompt, 3).unwrap();
@@ -1191,6 +1295,7 @@ mod tests {
             kv_block_size: 16,
             kv_blocks: 32, // 512 positions: exactly A's worst case
             prefill_chunk: 16,
+            route_density: 0.25,
             mode: ServeMode::Continuous,
         });
         let (_, rx_a) = server.submit(vec![1, 2, 3], 500).unwrap();
@@ -1214,6 +1319,7 @@ mod tests {
             kv_block_size: 8,
             kv_blocks: 64,
             prefill_chunk: 8,
+            route_density: 0.25,
             mode: ServeMode::Sequential,
         });
         let (_, rx) = server.submit(vec![1, 2], 3).unwrap();
@@ -1296,6 +1402,7 @@ mod tests {
             kv_block_size: 8,
             kv_blocks: 16, // 128 positions pool-wide
             prefill_chunk: 8,
+            route_density: 0.25,
             mode: ServeMode::Continuous,
         });
         let (_, rx) = server.submit(long_prompt, 3).unwrap();
@@ -1337,6 +1444,7 @@ mod tests {
             kv_block_size: 4,
             kv_blocks: 4,
             prefill_chunk: 4,
+            route_density: 0.25,
             mode: ServeMode::Continuous,
         });
         let (_, rx) = server.submit(prompt, 4).unwrap();
@@ -1362,6 +1470,7 @@ mod tests {
             kv_block_size: 4,
             kv_blocks: 3,
             prefill_chunk: 4,
+            route_density: 0.25,
             mode: ServeMode::Continuous,
         });
         let rxs: Vec<_> = (0..5u32)

@@ -188,7 +188,10 @@ pub fn matmul_nt(a: &Mat, b: &Mat) -> Mat {
 /// logits projection `(B, d) @ (V, d)^T` at decode batch sizes lands
 /// on the column-parallel path: each worker owns a disjoint slice of
 /// the vocabulary, and every element is one independent dot, so the
-/// dispatch shape cannot change a bit of the result.
+/// dispatch shape cannot change a bit of the result.  The routed
+/// decode FFN (`sparse::route`) leans on the same property for its
+/// union up-projection: each gathered-slice element is one `dot`,
+/// bit-identical to the fused kernel's implicit h_u element.
 pub fn matmul_nt_into(a: &Mat, b: &Mat, c: &mut Mat) {
     assert_eq!(a.cols, b.cols);
     assert_eq!((c.rows, c.cols), (a.rows, b.rows));

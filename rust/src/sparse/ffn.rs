@@ -9,6 +9,8 @@ use crate::metrics::memory::PeakTracker;
 use crate::sparse::dense;
 use crate::sparse::fused;
 use crate::sparse::hybrid::HybridMatrix;
+use crate::sparse::par;
+use crate::sparse::route::{self, RouteScratch};
 use crate::sparse::twell::{gate_matmul_twell, gate_matmul_twell_into,
                            TwellMatrix};
 use crate::tensor::Mat;
@@ -142,6 +144,54 @@ pub fn forward_backend_into(
         }
         dense::matmul_into(&s.hg, &w.wd, y);
     }
+}
+
+/// The decode-step FFN entry point: `forward_backend_into` wrapped in
+/// the batch-contextual router (`sparse::mod` docs draw the full
+/// decision tree).
+///
+/// On the TwELL backend, for a **pure-decode** feed with routing
+/// enabled, the packed gate's batch union of active columns is
+/// measured; at union density `<= route.max_density` the routed
+/// union-gather kernel runs, otherwise the fused TwELL kernel — two
+/// bit-identical branches, so the threshold is purely a throughput
+/// knob.  The boundary is deterministic: exactly-at-threshold routes.
+/// Mixed feeds (a ragged prefill span in the batch) skip the union
+/// measurement entirely — prefill rows densify the union, so they
+/// count as `fallback` without paying for a doomed `build_union`.
+/// Every call bumps exactly one `route.stats` counter.
+pub fn forward_backend_step_into(
+    w: &FfnWeights, x: &Mat, twell: bool, s: &mut FfnScratch,
+    route: &mut RouteScratch, y: &mut Mat,
+) {
+    if twell && route.enabled {
+        if route.decode_step {
+            gate_matmul_twell_into(x, &w.wg, w.tile_n, w.comp, &mut s.hg_tw);
+            let union = route::build_union(&s.hg_tw, route);
+            let density = union as f32 / s.hg_tw.n.max(1) as f32;
+            route.stats.density_sum += density as f64;
+            route.stats.density_calls += 1;
+            if density <= route.max_density {
+                route.stats.routed += 1;
+                route::routed_up_down_into(x, route, &w.wu_t, &w.wd, y);
+            } else {
+                route.stats.fallback += 1;
+                fused::fused_up_down_into(
+                    x, &s.hg_tw, &w.wu_t, &w.wd, y, &mut s.coef,
+                );
+            }
+            return;
+        }
+        route.stats.fallback += 1;
+        forward_backend_into(w, x, twell, s, y);
+        return;
+    }
+    if par::skinny_col_dispatch(x.rows) {
+        route.stats.col += 1;
+    } else {
+        route.stats.row += 1;
+    }
+    forward_backend_into(w, x, twell, s, y);
 }
 
 /// Gradients of one FFN block (weight grads in (N, K) "transposed"
@@ -385,6 +435,99 @@ mod tests {
             assert_eq!(ys.data, forward_backend(&w, &xs, twell).data,
                        "twell={twell} after reuse");
         }
+    }
+
+    #[test]
+    fn step_into_routed_matches_unrouted_bitwise() {
+        // routing on vs off must agree bit-for-bit on both backends —
+        // the property that makes the router invisible to every other
+        // parity test in the suite
+        let (w, x, _) = setup(4, 16, 64, 2.0, 29);
+        for twell in [false, true] {
+            let mut s = FfnScratch::new(4, 64, w.tile_n, w.comp, twell);
+            let mut plain = Mat::zeros(4, 16);
+            forward_backend_into(&w, &x, twell, &mut s, &mut plain);
+            for &density in &[0.0f32, 1.0] {
+                let mut route = RouteScratch::new(64, 16);
+                route.enabled = density > 0.0;
+                route.max_density = density;
+                route.decode_step = true;
+                let mut y = Mat::zeros(4, 16);
+                forward_backend_step_into(
+                    &w, &x, twell, &mut s, &mut route, &mut y,
+                );
+                assert_eq!(y.data, plain.data,
+                           "twell={twell} density={density}");
+            }
+        }
+    }
+
+    #[test]
+    fn density_exactly_at_threshold_routes_deterministically() {
+        let (w, x, _) = setup(4, 16, 64, 2.0, 31);
+        let mut s = FfnScratch::new(4, 64, w.tile_n, w.comp, true);
+        // measure the union once to place the threshold exactly on it
+        let hg = gate_matmul_twell(&x, &w.wg, w.tile_n, w.comp);
+        let mut probe = RouteScratch::new(64, 16);
+        let union = crate::sparse::route::build_union(&hg, &mut probe);
+        assert!(union > 0 && union < 64, "need a non-trivial union");
+        let at = union as f32 / 64.0; // exactly representable: /2^6
+        let mut y = Mat::zeros(4, 16);
+        for (density, expect_routed) in
+            [(at, true), ((union as f32 - 0.5) / 64.0, false)]
+        {
+            let mut route = RouteScratch::new(64, 16);
+            route.enabled = true;
+            route.max_density = density;
+            route.decode_step = true;
+            forward_backend_step_into(
+                &w, &x, true, &mut s, &mut route, &mut y,
+            );
+            assert_eq!(route.stats.routed, u64::from(expect_routed));
+            assert_eq!(route.stats.fallback, u64::from(!expect_routed));
+            assert_eq!(route.stats.density_calls, 1);
+            let measured = route.stats.density_sum as f32;
+            assert_eq!(measured, at, "measured density drifted");
+        }
+    }
+
+    #[test]
+    fn step_counters_label_non_routed_calls() {
+        let _g = par::test_guard();
+        let orig_t = par::num_threads();
+        let (w, x, _) = setup(4, 16, 64, 0.5, 37);
+        // dense backend, skinny batch, pool available => `col`
+        par::set_threads(4);
+        par::set_skinny_fast_path(true);
+        let mut s = FfnScratch::new(4, 64, w.tile_n, w.comp, false);
+        let mut route = RouteScratch::new(64, 16);
+        route.enabled = true; // routing never applies to dense backend
+        route.decode_step = true;
+        let mut y = Mat::zeros(4, 16);
+        forward_backend_step_into(&w, &x, false, &mut s, &mut route, &mut y);
+        assert_eq!(
+            (route.stats.col, route.stats.row, route.stats.density_calls),
+            (1, 0, 0)
+        );
+        // single-threaded => `row` (the seed sequential shape)
+        par::set_threads(1);
+        forward_backend_step_into(&w, &x, false, &mut s, &mut route, &mut y);
+        assert_eq!((route.stats.col, route.stats.row), (1, 1));
+        // twell backend with routing disabled also counts as row/col
+        par::set_threads(4);
+        let mut stw = FfnScratch::new(4, 64, w.tile_n, w.comp, true);
+        route.enabled = false;
+        forward_backend_step_into(&w, &x, true, &mut stw, &mut route, &mut y);
+        assert_eq!((route.stats.col, route.stats.row), (2, 1));
+        // twell + routing + mixed feed (not a pure decode step) =>
+        // fallback without a density measurement
+        route.enabled = true;
+        route.decode_step = false;
+        forward_backend_step_into(&w, &x, true, &mut stw, &mut route, &mut y);
+        assert_eq!(route.stats.fallback, 1);
+        assert_eq!(route.stats.density_calls, 0);
+        par::set_threads(orig_t);
+        par::set_skinny_fast_path(true);
     }
 
     #[test]

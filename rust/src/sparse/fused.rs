@@ -13,6 +13,13 @@
 //! One CPU thread block of rows plays the role of the paper's grid of
 //! single-warp CTAs; the per-row independence that lets the GPU hide
 //! uneven-sparsity latency is what makes the static row split safe here.
+//!
+//! This kernel is also the **fallback branch** of the batch-contextual
+//! decode router (`sparse::route`): the routed union-gather kernel
+//! reproduces this kernel's per-element accumulation order exactly
+//! (same `dense::dot` for the implicit h_u, same `v * u` coefficient,
+//! same ascending-column `axpy` walk), so the router can switch
+//! between the two per step without changing a bit of the output.
 
 use crate::sparse::twell::TwellMatrix;
 use crate::sparse::{dense, par};

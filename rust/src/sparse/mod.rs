@@ -14,6 +14,40 @@
 //! * [`par`]    — persistent worker pool with row- and column-block
 //!                partitioners (rayon is not vendored); skinny decode
 //!                batches dispatch column-parallel.
+//! * [`route`]  — batch-contextual sparsity routing: union-gathered
+//!                skinny FFN for batched decode (Polar-Sparsity-style
+//!                batch-granular dispatch).
+//!
+//! # Decode dispatch decision tree
+//!
+//! A decode-step FFN call (`ffn::forward_backend_step_into`) picks its
+//! kernel shape in two stages, both observable through the
+//! [`route::RouteStats`] counters:
+//!
+//! 1. **Routing (TwELL backend, pure-decode feeds only).**  With
+//!    routing enabled (`ServePolicy.route_density > 0`), the packed
+//!    gate's batch union of active FFN columns is measured every step:
+//!    * `union / d_ff <= route_density` → **routed**: gather the union
+//!      slice of `W_u^T`/`W_d` and run dense skinny GEMMs over it
+//!      (`route::routed_up_down_into`).
+//!    * otherwise → **fallback**: the fused TwELL kernel
+//!      (`fused::fused_up_down_into`).  Mixed feeds (a ragged prefill
+//!      span alongside decode slots) also land here — prefill rows
+//!      densify the union.
+//!    Both branches are bit-identical, so the threshold only moves
+//!    throughput, never a logit bit.
+//! 2. **Partitioning (every kernel).**  Each kernel then splits its
+//!    output across the worker pool:
+//!    * batch `m >= 32` (or the skinny fast path off) → **row**-block
+//!      partition, the prefill/training shape;
+//!    * `m < 32` with the fast path on and `> 1` thread (and enough
+//!      work to clear the pool cutoffs) → **column**-block partition:
+//!      every worker walks the same few rows, each owning a disjoint
+//!      output-column range.
+//!
+//! Every leaf computes each output element with the same sequential
+//! accumulation order, so the whole tree is bit-exact for any thread
+//! count, any dispatch shape, and any routing threshold.
 
 pub mod dense;
 pub mod ell;
@@ -21,4 +55,5 @@ pub mod ffn;
 pub mod fused;
 pub mod hybrid;
 pub mod par;
+pub mod route;
 pub mod twell;

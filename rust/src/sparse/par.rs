@@ -29,11 +29,26 @@
 //! thread count and either dispatch shape** — the property the serving
 //! engine's stream-parity tests pin down.
 //!
-//! `REPRO_THREADS` still sets the pool size; `set_threads` does the
-//! same programmatically (the `--threads` serving flag) and may be
-//! called at any time — the pool grows lazily and never shrinks, only
-//! the partition count changes.  Nested calls from inside a pool job
-//! run sequentially instead of deadlocking on the single job slot.
+//! # Process-global knobs
+//!
+//! [`set_threads`] and [`set_skinny_fast_path`] are **process-global**:
+//! each writes one shared atomic that every kernel call on every
+//! thread reads at dispatch time.  There is no per-engine or
+//! per-thread override — flipping a knob mid-flight retargets every
+//! concurrent kernel in the process, including other serving engines'.
+//! `REPRO_THREADS` seeds the same global on first use; `set_threads`
+//! (the `--threads` serving flag) overrides it at any time — the pool
+//! grows lazily and never shrinks, only the partition count changes.
+//! Nested calls from inside a pool job run sequentially instead of
+//! deadlocking on the single job slot.
+//!
+//! Because every kernel is bit-exact across all knob settings, a
+//! concurrent flip can never change anyone's *results* — only their
+//! scheduling.  But tests that **sweep** the knobs and assert on
+//! which path ran (the determinism suites, the dispatch-counter
+//! tests) would race each other under `cargo test`'s threaded runner;
+//! they must hold [`test_guard`] for the duration of the sweep, and
+//! restore the original settings before releasing it.
 
 use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -99,11 +114,18 @@ pub(crate) fn skinny_fast_path() -> bool {
 /// Should a skinny (m-row) kernel with `n` output columns of ~`col_w`
 /// work each take the column-parallel path?
 pub(crate) fn use_col_dispatch(m: usize, n: usize, col_w: usize) -> bool {
-    skinny_fast_path()
-        && m < ROW_PAR_MIN_ROWS
-        && num_threads() > 1
+    skinny_col_dispatch(m)
         && n >= 2
         && n.saturating_mul(col_w) >= PAR_MIN_COL_WORK
+}
+
+/// Shape-only half of the column-dispatch predicate: would a batch of
+/// `m` rows *aim* for the column-parallel path under the current
+/// knobs?  (Individual kernels add their work cutoffs on top.)  The
+/// decode router's dispatch counters use this to label non-routed FFN
+/// calls `col` vs `row`.
+pub(crate) fn skinny_col_dispatch(m: usize) -> bool {
+    skinny_fast_path() && m < ROW_PAR_MIN_ROWS && num_threads() > 1
 }
 
 /// Raw pointer wrapper for disjoint-range writes from pool workers
@@ -501,6 +523,31 @@ mod tests {
         let mut parts = parts.into_inner().unwrap();
         parts.sort_unstable();
         assert_eq!(parts, vec![(0, 30), (30, 60), (60, 90)]);
+    }
+
+    #[test]
+    fn knobs_are_process_global_across_threads() {
+        // set_threads / set_skinny_fast_path write shared atomics: a
+        // change made here must be visible to kernels dispatched from
+        // any other thread (which is why knob-sweeping tests serialize
+        // on test_guard).
+        let _g = test_guard();
+        let orig_t = num_threads();
+        let orig_f = skinny_fast_path();
+        set_threads(3);
+        set_skinny_fast_path(false);
+        let seen = std::thread::spawn(|| {
+            (num_threads(), skinny_fast_path(), skinny_col_dispatch(4))
+        })
+        .join()
+        .unwrap();
+        assert_eq!(seen, (3, false, false));
+        set_skinny_fast_path(true);
+        let seen =
+            std::thread::spawn(|| skinny_col_dispatch(4)).join().unwrap();
+        assert!(seen, "fast-path flip not visible across threads");
+        set_threads(orig_t);
+        set_skinny_fast_path(orig_f);
     }
 
     #[test]

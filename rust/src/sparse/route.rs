@@ -1,0 +1,485 @@
+//! Batch-contextual sparsity routing for batched decode.
+//!
+//! The TwELL fused kernel wins on *per-row* sparsity, but a batched
+//! decode step unions the batch's activations: at batch 32 a model
+//! whose rows are 99% sparse may still touch 30-60% of the FFN columns
+//! *somewhere* in the batch, and the row-by-row gather loses to a dense
+//! GEMM long before that.  Polar Sparsity's observation is that the
+//! routing decision should therefore be **batch-granular**: compute the
+//! union of active columns once per feed, and if it is still sparse
+//! enough, run the whole batch through a *gathered dense* kernel —
+//! Flash-LLM's "load as sparse, compute as dense" idiom.
+//!
+//! The pipeline per decode step, given the packed gate `h_g` (TwELL):
+//!
+//! 1. [`build_union`] — walk every row's packed entries (already
+//!    ascending by global column) and produce the sorted union
+//!    `cols[0..U]`, a column→union-position map, and each row's packed
+//!    (position, gate value) list.
+//! 2. Gather rows `cols[i]` of `W_u^T` and `W_d` into the persistent
+//!    `wu_g` / `wd_g` scratch — bit-copies, parallel over union rows.
+//! 3. Up projection as a dense skinny GEMM over the gathered slice:
+//!    `ug = x @ wu_g^T` via [`dense::matmul_nt_into`], which computes
+//!    every element as one independent [`dense::dot`] — the *same* dot
+//!    the fused kernel uses for its implicit h_u elements.
+//! 4. Scale each row's gate values by its `ug` entries (the eq. 3
+//!    coefficients `v * u`), then accumulate `y += coef * wd_g[p, :]`
+//!    column-parallel, walking only each row's **active** union
+//!    positions in ascending order.
+//!
+//! Bit-exactness with the fused TwELL path (`fused::fused_up_down_into`)
+//! is by construction: the union is sorted ascending, so each row's
+//! active positions enumerate exactly the row's packed columns in the
+//! same order the fused kernel walks them; `u` comes from the same
+//! `dense::dot`; the coefficient is the same `v * u` product; and the
+//! down accumulation *skips* inactive union positions rather than
+//! multiplying by zero (`-0.0 + 0.0 == +0.0`, so `y += 0.0 * w` is not
+//! a bitwise no-op — a dense masked GEMM would flip sign bits on
+//! negative zeros).  The routed path is therefore bitwise invisible:
+//! the router can flip between it and the fused path per step without
+//! changing a single logit bit.
+
+use crate::sparse::twell::TwellMatrix;
+use crate::sparse::{dense, par};
+use crate::tensor::Mat;
+
+/// Default union-density threshold for `ServePolicy.route_density`:
+/// route while the batch union covers at most this fraction of d_ff.
+pub const DEFAULT_ROUTE_DENSITY: f32 = 0.25;
+
+/// Dispatch counters for the decode FFN router (one event per FFN
+/// call, i.e. per layer per engine step).  Drained into `EngineStats`
+/// by the serving loop via [`RouteStats::take`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RouteStats {
+    /// row-parallel dense/fused dispatch (large batch, or fast path off)
+    pub row: u64,
+    /// column-parallel dense/fused dispatch (skinny batch fast path)
+    pub col: u64,
+    /// routed union-gather path ran
+    pub routed: u64,
+    /// routing was considered but fell back (union too dense, or a
+    /// ragged prefill span densified the feed)
+    pub fallback: u64,
+    /// sum of measured union densities (routed + fallback decisions)
+    pub density_sum: f64,
+    /// number of union-density measurements in `density_sum`
+    pub density_calls: u64,
+}
+
+impl RouteStats {
+    /// Drain: return the current counters and reset to zero.
+    pub fn take(&mut self) -> RouteStats {
+        std::mem::take(self)
+    }
+
+    /// Mean measured union density (0.0 when no decision was measured).
+    pub fn mean_density(&self) -> f64 {
+        if self.density_calls == 0 {
+            0.0
+        } else {
+            self.density_sum / self.density_calls as f64
+        }
+    }
+
+    /// The most common dispatch outcome, for bench labels.  Ties break
+    /// routed > fallback > col > row.
+    pub fn dominant(&self) -> &'static str {
+        let mut best = (self.routed, "routed");
+        for cat in [
+            (self.fallback, "fallback"),
+            (self.col, "col"),
+            (self.row, "row"),
+        ] {
+            if cat.0 > best.0 {
+                best = cat;
+            }
+        }
+        best.1
+    }
+}
+
+/// Persistent state for the batch-contextual decode router: the policy
+/// knobs, the per-step union, the gathered weight slices, and the
+/// dispatch counters.  Lives inside `DecodeScratch`; every buffer grows
+/// to its high-water mark and is then reused allocation-free, matching
+/// the decode hot loop's zero-allocation contract.
+pub struct RouteScratch {
+    /// routing considered at all (from `ServePolicy.route_density > 0`)
+    pub enabled: bool,
+    /// route when `union / d_ff <= max_density` (at the threshold the
+    /// routed path runs — the boundary is deterministic)
+    pub max_density: f32,
+    /// set per step by the model: true iff every span in the feed is a
+    /// single token (pure decode).  A ragged prefill span unions whole
+    /// prompt chunks into the gate and densifies the union, so mixed
+    /// feeds always take the fused fallback.
+    pub decode_step: bool,
+    /// sorted (ascending) union of active global columns, length U
+    cols: Vec<u16>,
+    /// global column -> union position; `u32::MAX` marks "not in the
+    /// union" between steps
+    pos: Vec<u32>,
+    /// gathered `W_u^T` rows, (U, K)
+    wu_g: Mat,
+    /// gathered `W_d` rows, (U, K)
+    wd_g: Mat,
+    /// dense up activations over the union, (m, U)
+    ug: Mat,
+    /// per-row packed union positions, ascending within each row
+    row_pos: Vec<u32>,
+    /// per-row packed gate values; scaled in place into coefficients
+    row_val: Vec<f32>,
+    /// row r's packed span is `row_bounds[r]..row_bounds[r + 1]`
+    row_bounds: Vec<usize>,
+    /// dispatch counters, drained by the serving loop
+    pub stats: RouteStats,
+}
+
+impl RouteScratch {
+    /// A disabled router for a model with `d_ff` FFN columns and
+    /// `d_model` embedding width.  Buffers start empty and grow lazily
+    /// on first routed step, so callers that never enable routing pay
+    /// nothing beyond the `pos` map.
+    pub fn new(d_ff: usize, d_model: usize) -> RouteScratch {
+        RouteScratch {
+            enabled: false,
+            max_density: DEFAULT_ROUTE_DENSITY,
+            decode_step: false,
+            cols: Vec::new(),
+            pos: vec![u32::MAX; d_ff],
+            wu_g: Mat::zeros(0, d_model.max(1)),
+            wd_g: Mat::zeros(0, d_model.max(1)),
+            ug: Mat::zeros(0, 1),
+            row_pos: Vec::new(),
+            row_val: Vec::new(),
+            row_bounds: Vec::new(),
+            stats: RouteStats::default(),
+        }
+    }
+
+    /// Number of columns in the current union.
+    pub fn union_len(&self) -> usize {
+        self.cols.len()
+    }
+}
+
+/// Position-map mark for "column active somewhere in the batch but not
+/// yet assigned a union position".
+const SEEN: u32 = u32::MAX - 1;
+
+/// Build the batch union from a packed gate: fills the scratch's
+/// sorted union `cols`, the column→position map, and every row's
+/// packed (position, value) list.  Returns the union size U.
+///
+/// TwELL packs each row's entries ascending by global column (tiles
+/// ascending, slots within a tile ascending), so marking columns and
+/// then scanning `pos` in column order yields a sorted union, and each
+/// row's position list is automatically ascending — the invariant the
+/// routed kernel's accumulation order (and hence bit-exactness with
+/// the fused path) rests on.
+pub fn build_union(hg: &TwellMatrix, rs: &mut RouteScratch) -> usize {
+    let n = hg.n;
+    let RouteScratch {
+        cols,
+        pos,
+        row_pos,
+        row_val,
+        row_bounds,
+        ..
+    } = rs;
+    if pos.len() < n {
+        pos.resize(n, u32::MAX);
+    }
+    // un-mark the previous step's union (cols is exactly the set of
+    // marked entries, so this is O(U_prev), not O(d_ff))
+    for &c in cols.iter() {
+        pos[c as usize] = u32::MAX;
+    }
+    cols.clear();
+    row_pos.clear();
+    row_val.clear();
+    row_bounds.clear();
+    row_bounds.push(0);
+    for r in 0..hg.m {
+        for (idx, _) in hg.row_entries(r) {
+            pos[idx as usize] = SEEN;
+        }
+    }
+    for (c, p) in pos[..n].iter_mut().enumerate() {
+        if *p == SEEN {
+            *p = cols.len() as u32;
+            cols.push(c as u16);
+        }
+    }
+    for r in 0..hg.m {
+        for (idx, v) in hg.row_entries(r) {
+            row_pos.push(pos[idx as usize]);
+            row_val.push(v);
+        }
+        row_bounds.push(row_pos.len());
+    }
+    cols.len()
+}
+
+/// The routed FFN tail: gather the union slice of `W_u^T` / `W_d`,
+/// run the up projection as a dense skinny GEMM over it, and
+/// accumulate the down projection over each row's active positions.
+/// Requires [`build_union`] to have run on this scratch for the same
+/// gate.  Bit-exact with `fused::fused_up_down_into` (module docs).
+///
+/// An empty union short-circuits after zeroing `y` without reading a
+/// single weight element.
+pub fn routed_up_down_into(
+    x: &Mat,
+    rs: &mut RouteScratch,
+    wu_t: &Mat,
+    wd: &Mat,
+    y: &mut Mat,
+) {
+    let (m, k) = (x.rows, x.cols);
+    assert_eq!(wu_t.cols, k);
+    assert_eq!(wd.cols, k);
+    assert_eq!(wu_t.rows, wd.rows);
+    assert_eq!((y.rows, y.cols), (m, k));
+    assert_eq!(rs.row_bounds.len(), m + 1, "build_union not run for x");
+    y.data.fill(0.0);
+    let u = rs.cols.len();
+    if u == 0 {
+        return;
+    }
+    let RouteScratch {
+        cols,
+        wu_g,
+        wd_g,
+        ug,
+        row_pos,
+        row_val,
+        row_bounds,
+        ..
+    } = rs;
+
+    // ---- gather: bit-copy the union's weight rows, row-parallel ----
+    wu_g.set_shape(u, k);
+    wd_g.set_shape(u, k);
+    {
+        let wu_ptr = par::SendPtr::new(wu_g.data.as_mut_ptr());
+        let wd_ptr = par::SendPtr::new(wd_g.data.as_mut_ptr());
+        par::for_col_blocks(u, 2 * k, |lo, hi| {
+            for (off, &src) in cols[lo..hi].iter().enumerate() {
+                let s = src as usize * k;
+                // SAFETY: destination rows `lo..hi` belong to exactly
+                // one worker; sources are read-only
+                unsafe {
+                    std::ptr::copy_nonoverlapping(
+                        wu_t.data.as_ptr().add(s),
+                        wu_ptr.get().add((lo + off) * k),
+                        k,
+                    );
+                    std::ptr::copy_nonoverlapping(
+                        wd.data.as_ptr().add(s),
+                        wd_ptr.get().add((lo + off) * k),
+                        k,
+                    );
+                }
+            }
+        });
+    }
+
+    // ---- up projection: dense skinny GEMM over the gathered slice.
+    // matmul_nt_into computes each element as one independent
+    // dense::dot — identical to the fused kernel's implicit h_u.
+    ug.set_shape(m, u);
+    dense::matmul_nt_into(x, wu_g, ug);
+
+    // ---- coefficients: scale each row's gate values by its ug
+    // entries (eq. 3's `v * u`, same product as the fused kernel)
+    for r in 0..m {
+        let urow = ug.row(r);
+        let (lo, hi) = (row_bounds[r], row_bounds[r + 1]);
+        for (v, &p) in row_val[lo..hi].iter_mut().zip(&row_pos[lo..hi]) {
+            *v *= urow[p as usize];
+        }
+    }
+
+    // ---- down accumulation, column-parallel.  Each row walks ONLY
+    // its active positions (ascending == the fused walk order);
+    // inactive positions are skipped, never zero-multiplied, so the
+    // result is bit-identical to the fused kernel.
+    let wd_g = &*wd_g;
+    let row_pos = &row_pos[..];
+    let row_val = &row_val[..];
+    let y_ptr = par::SendPtr::new(y.data.as_mut_ptr());
+    par::for_col_blocks(k, row_val.len().max(1), |lo, hi| {
+        for r in 0..m {
+            // SAFETY: column ranges are disjoint per worker
+            let yrow = unsafe {
+                std::slice::from_raw_parts_mut(
+                    y_ptr.get().add(r * k + lo),
+                    hi - lo,
+                )
+            };
+            let (rlo, rhi) = (row_bounds[r], row_bounds[r + 1]);
+            let vals = &row_val[rlo..rhi];
+            let poss = &row_pos[rlo..rhi];
+            for (&coef, &p) in vals.iter().zip(poss) {
+                dense::axpy(coef, &wd_g.row(p as usize)[lo..hi], yrow);
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::fused::fused_up_down;
+    use crate::sparse::twell::gate_matmul_twell;
+    use crate::util::rng::Pcg32;
+
+    /// Positive inputs + negatively shifted gate weights, the standard
+    /// controllable-sparsity setup from the twell/fused tests.
+    fn setup(
+        m: usize,
+        k: usize,
+        n: usize,
+        bias: f32,
+        seed: u64,
+    ) -> (Mat, Mat, Mat, Mat) {
+        let mut rng = Pcg32::seeded(seed);
+        let mut x = Mat::randn(m, k, 1.0, &mut rng);
+        for v in x.data.iter_mut() {
+            *v = v.abs() + 0.05;
+        }
+        let mut wg = Mat::randn(k, n, 0.3, &mut rng);
+        for v in wg.data.iter_mut() {
+            *v -= bias / k as f32;
+        }
+        let wu = Mat::randn(k, n, 0.3, &mut rng);
+        let wd = Mat::randn(n, k, 0.3, &mut rng);
+        (x, wg, wu.transpose(), wd)
+    }
+
+    fn routed(
+        x: &Mat,
+        hg: &TwellMatrix,
+        wu_t: &Mat,
+        wd: &Mat,
+        rs: &mut RouteScratch,
+    ) -> Mat {
+        let mut y = Mat::zeros(x.rows, x.cols);
+        build_union(hg, rs);
+        routed_up_down_into(x, rs, wu_t, wd, &mut y);
+        y
+    }
+
+    #[test]
+    fn union_matches_dense_reference() {
+        let (x, wg, _, _) = setup(6, 16, 128, 4.0, 1);
+        let hg = gate_matmul_twell(&x, &wg, 32, 1);
+        let mut rs = RouteScratch::new(128, 16);
+        let u = build_union(&hg, &mut rs);
+        // reference union from the scattered-dense gate
+        let dense_hg = hg.to_dense();
+        let mut expect: Vec<u16> = (0..128u16)
+            .filter(|&c| {
+                (0..6).any(|r| dense_hg.at(r, c as usize) != 0.0)
+            })
+            .collect();
+        expect.sort_unstable();
+        assert_eq!(rs.cols, expect);
+        assert_eq!(u, expect.len());
+        // each row's positions are ascending and pair back to the
+        // row's own packed (column, value) entries in order
+        for r in 0..6 {
+            let (lo, hi) = (rs.row_bounds[r], rs.row_bounds[r + 1]);
+            let row = &rs.row_pos[lo..hi];
+            assert!(row.windows(2).all(|w| w[0] < w[1]), "row {r} unsorted");
+            let packed: Vec<(u16, f32)> = hg.row_entries(r).collect();
+            assert_eq!(hi - lo, packed.len());
+            for (i, &(idx, v)) in packed.iter().enumerate() {
+                assert_eq!(rs.cols[rs.row_pos[lo + i] as usize], idx);
+                assert_eq!(rs.row_val[lo + i], v);
+            }
+        }
+    }
+
+    /// The routed kernel must be bit-identical to the fused TwELL
+    /// kernel for every thread count and dispatch shape — the property
+    /// that makes routing invisible to the determinism suite.
+    #[test]
+    fn routed_bit_exact_with_fused_across_threads_and_dispatch() {
+        let _g = par::test_guard();
+        let orig = par::num_threads();
+        // m < 32 with enough work that the pool paths genuinely engage
+        let (x, wg, wu_t, wd) = setup(4, 128, 512, 4.0, 21);
+        let hg = gate_matmul_twell(&x, &wg, 32, 1);
+        let reference = {
+            par::set_threads(1);
+            par::set_skinny_fast_path(false);
+            fused_up_down(&x, &hg, &wu_t, &wd).data
+        };
+        let mut rs = RouteScratch::new(512, 128);
+        for &threads in &[1usize, 4] {
+            for &fast in &[false, true] {
+                par::set_threads(threads);
+                par::set_skinny_fast_path(fast);
+                let y = routed(&x, &hg, &wu_t, &wd, &mut rs);
+                assert_eq!(
+                    y.data, reference,
+                    "routed diverged at t={threads} fast={fast}"
+                );
+            }
+        }
+        par::set_threads(orig);
+        par::set_skinny_fast_path(true);
+    }
+
+    #[test]
+    fn empty_union_short_circuits_without_reading_weights() {
+        let (x, mut wg, mut wu_t, mut wd) = setup(4, 8, 32, 0.0, 3);
+        for v in wg.data.iter_mut() {
+            *v = -v.abs() - 0.1; // gate always negative => empty union
+        }
+        let hg = gate_matmul_twell(&x, &wg, 32, 1);
+        assert_eq!(hg.total_nnz(), 0);
+        // poison the weights: any read would propagate NaN
+        wu_t.data.fill(f32::NAN);
+        wd.data.fill(f32::NAN);
+        let mut rs = RouteScratch::new(32, 8);
+        let y = routed(&x, &hg, &wu_t, &wd, &mut rs);
+        assert_eq!(rs.union_len(), 0);
+        assert!(y.data.iter().all(|&v| v.to_bits() == 0.0f32.to_bits()));
+    }
+
+    #[test]
+    fn scratch_reuse_big_then_small_matches_fresh() {
+        let (xb, wgb, wu_tb, wdb) = setup(16, 16, 64, 0.0, 7);
+        let hgb = gate_matmul_twell(&xb, &wgb, 32, 1);
+        let mut rs = RouteScratch::new(64, 16);
+        let _ = routed(&xb, &hgb, &wu_tb, &wdb, &mut rs);
+        let (xs, wgs, wu_ts, wds) = setup(2, 16, 64, 6.0, 8);
+        let hgs = gate_matmul_twell(&xs, &wgs, 32, 1);
+        let reused = routed(&xs, &hgs, &wu_ts, &wds, &mut rs);
+        let mut fresh_rs = RouteScratch::new(64, 16);
+        let fresh = routed(&xs, &hgs, &wu_ts, &wds, &mut fresh_rs);
+        assert_eq!(reused.data, fresh.data);
+        assert_eq!(rs.cols, fresh_rs.cols);
+    }
+
+    #[test]
+    fn dominant_label_and_mean_density() {
+        let mut s = RouteStats::default();
+        assert_eq!(s.dominant(), "routed"); // all-zero tie-break
+        s.row = 3;
+        s.routed = 3;
+        assert_eq!(s.dominant(), "routed"); // tie prefers routed
+        s.fallback = 5;
+        assert_eq!(s.dominant(), "fallback");
+        s.density_sum = 0.5;
+        s.density_calls = 2;
+        assert!((s.mean_density() - 0.25).abs() < 1e-12);
+        let taken = s.take();
+        assert_eq!(taken.fallback, 5);
+        assert_eq!(s.density_calls, 0);
+    }
+}

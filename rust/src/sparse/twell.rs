@@ -62,6 +62,27 @@ impl TwellMatrix {
             as u64
     }
 
+    /// Iterate row `r`'s packed (global column, value) entries.
+    ///
+    /// Entries come out in **ascending global-column order** — tiles
+    /// ascending, slots within a tile ascending — which is exactly the
+    /// order the fused kernel accumulates in.  `sparse::route` walks
+    /// this to build its sorted batch union, so routed and fused paths
+    /// share one accumulation order (the bit-exactness invariant).
+    pub fn row_entries(
+        &self,
+        r: usize,
+    ) -> impl Iterator<Item = (u16, f32)> + '_ {
+        let n_tiles = self.n_tiles();
+        let slots = self.slots();
+        let pc = self.packed_cols();
+        (0..n_tiles).flat_map(move |t| {
+            let z = self.nnz[r * n_tiles + t] as usize;
+            let base = r * pc + t * slots;
+            (0..z).map(move |c| (self.indices[base + c], self.values[base + c]))
+        })
+    }
+
     /// Scatter back to dense (tests / format conversions).
     pub fn to_dense(&self) -> Mat {
         let mut out = Mat::zeros(self.m, self.n);

@@ -56,6 +56,16 @@ impl Mat {
         self.data.resize(rows * self.cols, 0.0);
     }
 
+    /// Logically resize both dimensions (the routed FFN's gathered-up
+    /// activation buffer changes width every decode step).  Same
+    /// high-water contract as `set_rows`: no reallocation once the
+    /// backing `Vec` has seen its maximum size.
+    pub fn set_shape(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.resize(rows * cols, 0.0);
+    }
+
     /// Column-concatenate matrices with equal row counts:
     /// `[A | B | ...]`.  Used to pre-fuse the Q/K/V projection weights
     /// into one `(d, 3d)` matrix at model load.
@@ -154,6 +164,17 @@ mod tests {
         assert_eq!((m.rows, m.data.len()), (2, 6));
         m.set_rows(4);
         assert_eq!((m.rows, m.data.len()), (4, 12));
+        assert_eq!(m.data.capacity(), cap, "scratch reshape reallocated");
+    }
+
+    #[test]
+    fn set_shape_reshapes_both_dims_without_reallocating() {
+        let mut m = Mat::zeros(4, 8);
+        let cap = m.data.capacity();
+        m.set_shape(2, 5);
+        assert_eq!((m.rows, m.cols, m.data.len()), (2, 5, 10));
+        m.set_shape(4, 8);
+        assert_eq!((m.rows, m.cols, m.data.len()), (4, 8, 32));
         assert_eq!(m.data.capacity(), cap, "scratch reshape reallocated");
     }
 
