@@ -6,6 +6,11 @@
 //! `runtime/` executes via PJRT.  `sparse/` holds the paper's kernel
 //! algorithms (TwELL, fused inference, hybrid training) as CPU kernels.
 
+// Every `unsafe fn` must spell out its internal unsafe operations in
+// explicit blocks (each carrying a `// SAFETY:` justification — the
+// xtask lint gate checks that part).
+#![deny(unsafe_op_in_unsafe_fn)]
+
 pub mod analysis;
 pub mod config;
 pub mod data;

@@ -264,7 +264,7 @@ pub struct Server {
     queue: Arc<(Mutex<Queue>, Condvar)>,
     stop: Arc<AtomicBool>,
     next_id: AtomicU64,
-    worker: Option<std::thread::JoinHandle<()>>,
+    worker: Option<crate::util::sync::JoinHandle<()>>,
     stats: Arc<Mutex<EngineStats>>,
     pub policy: ServePolicy,
 }
@@ -279,14 +279,17 @@ impl Server {
         let q2 = queue.clone();
         let s2 = stop.clone();
         let st2 = stats.clone();
-        let worker = std::thread::spawn(move || match policy.mode {
-            ServeMode::Sequential => {
-                sequential_loop(model, q2, s2, policy, st2)
-            }
-            ServeMode::Continuous => {
-                continuous_loop(model, q2, s2, policy, st2)
-            }
-        });
+        let worker =
+            crate::util::sync::spawn_named("repro-serve", move || {
+                match policy.mode {
+                    ServeMode::Sequential => {
+                        sequential_loop(model, q2, s2, policy, st2)
+                    }
+                    ServeMode::Continuous => {
+                        continuous_loop(model, q2, s2, policy, st2)
+                    }
+                }
+            });
         Server {
             queue,
             stop,

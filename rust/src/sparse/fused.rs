@@ -83,7 +83,11 @@ pub fn fused_up_down_into(
                         let n = hg.indices[base + c] as usize;
                         // implicit h_u element (eq. 3 middle factor)
                         let u = dense::dot(xrow, wu_t.row(n));
-                        // SAFETY: tile regions are disjoint per worker
+                        // SAFETY: slot `base + c` lies in tile `t`'s
+                        // packed region, tiles partition `coef`, and
+                        // each worker owns the disjoint tile range
+                        // [tlo, thi); `coef` (resized above) outlives
+                        // the pool barrier inside `for_col_blocks`.
                         unsafe {
                             *coef_ptr.get().add(base + c) =
                                 hg.values[base + c] * u;
@@ -98,7 +102,10 @@ pub fn fused_up_down_into(
         let coef = &coef[..];
         par::for_col_blocks(k, nnz_total.max(1), |lo, hi| {
             for r in 0..m {
-                // SAFETY: column ranges are disjoint per worker
+                // SAFETY: each worker owns the disjoint output-column
+                // range [lo, hi) of every row, so these subslices never
+                // overlap across workers; `y.data` outlives the pool
+                // barrier inside `for_col_blocks`.
                 let yrow = unsafe {
                     std::slice::from_raw_parts_mut(
                         y_ptr.get().add(r * k + lo),

@@ -225,8 +225,8 @@ impl HybridMatrix {
             dense_tail: vec![0.0; self.tail_capacity * self.n],
             ..self.shallow_clone_structure()
         };
-        let val_ptr = SendPtr(out.ell_val.as_mut_ptr());
-        let tail_ptr = SendPtr(out.dense_tail.as_mut_ptr());
+        let val_ptr = par::SendPtr::new(out.ell_val.as_mut_ptr());
+        let tail_ptr = par::SendPtr::new(out.dense_tail.as_mut_ptr());
         par::for_row_blocks(self.m, |lo, hi| {
             for r in lo..hi {
                 let arow = a.row(r);
@@ -237,6 +237,10 @@ impl HybridMatrix {
                     }
                     let src = &self.dense_tail
                         [d as usize * self.n..(d as usize + 1) * self.n];
+                    // SAFETY: tail slot `d` belongs to row `r` alone
+                    // (`dense_map` is injective), rows are disjoint
+                    // across row blocks, and `out.dense_tail` outlives
+                    // the pool barrier inside `for_row_blocks`.
                     let dst = unsafe {
                         std::slice::from_raw_parts_mut(
                             tail_ptr.get().add(d as usize * self.n),
@@ -254,6 +258,10 @@ impl HybridMatrix {
                     }
                 } else {
                     let z = (self.row_nnz[r] as usize).min(self.ell_width);
+                    // SAFETY: the ELL stripe for row `r` is written only
+                    // by the block that owns `r` (row ranges are
+                    // disjoint), and `out.ell_val` outlives the pool
+                    // barrier inside `for_row_blocks`.
                     let dst = unsafe {
                         std::slice::from_raw_parts_mut(
                             val_ptr.get().add(r * self.ell_width),
@@ -388,17 +396,6 @@ impl HybridMatrix {
             tail_rows: self.tail_rows,
             overflow: self.overflow,
         }
-    }
-}
-
-struct SendPtr<T>(*mut T);
-unsafe impl<T> Send for SendPtr<T> {}
-unsafe impl<T> Sync for SendPtr<T> {}
-impl<T> SendPtr<T> {
-    /// Method (not field) access so edition-2021 closures capture the
-    /// Sync wrapper rather than the raw pointer field.
-    fn get(&self) -> *mut T {
-        self.0
     }
 }
 

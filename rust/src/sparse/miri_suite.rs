@@ -1,0 +1,144 @@
+//! Miri-targeted tiny-shape drives of every unsafe kernel path.
+//!
+//! ```text
+//! MIRIFLAGS="-Zmiri-ignore-leaks -Zmiri-disable-isolation" \
+//!     cargo +nightly miri test --lib -q -- miri_
+//! ```
+//!
+//! Each test pushes one raw-pointer kernel family — dense column
+//! blocks, TwELL gate tiles, the fused two-phase FFN, the routed
+//! gather/accumulate, the hybrid pattern-masked pack — through the
+//! *real* worker pool at 1 and 2 threads, on the smallest shapes that
+//! clear the pool's work cutoffs (`PAR_MIN_ROW_WORK` /
+//! `PAR_MIN_COL_WORK`), so the disjoint-range `SendPtr` writes
+//! genuinely cross threads under the interpreter's Stacked Borrows and
+//! data-race checks.  `-Zmiri-ignore-leaks` is required because pool
+//! workers park forever by design and still exist at process exit.
+//!
+//! Compiled only under `cfg(miri)`: the regular suite already covers
+//! these kernels at full size, where Miri would take hours.  Asserts
+//! are bit-equality between the 1- and 2-thread runs (the module
+//! contract), so no tolerance reasoning is needed here.
+
+use crate::sparse::twell::gate_matmul_twell;
+use crate::sparse::{dense, fused, par, route};
+use crate::tensor::Mat;
+use crate::util::rng::Pcg32;
+
+/// Run `body` under the knob guard at 1 then 2 threads, returning both
+/// results for the caller's bit-equality assert.
+fn sweep<T, F: FnMut() -> T>(mut body: F) -> (T, T) {
+    let _g = par::test_guard();
+    let orig = par::num_threads();
+    par::set_threads(1);
+    let a = body();
+    par::set_threads(2);
+    let b = body();
+    par::set_threads(orig);
+    (a, b)
+}
+
+#[test]
+fn miri_dense_row_and_col_blocks() {
+    let mut rng = Pcg32::seeded(1);
+    let skinny = Mat::randn(2, 64, 1.0, &mut rng); // -> column blocks
+    let b = Mat::randn(64, 256, 1.0, &mut rng);
+    let wide = Mat::randn(32, 64, 1.0, &mut rng); // -> row blocks
+    let wb = Mat::randn(64, 128, 1.0, &mut rng);
+    let (s1, s2) = sweep(|| dense::matmul(&skinny, &b).data);
+    assert_eq!(s1, s2);
+    let (w1, w2) = sweep(|| dense::matmul(&wide, &wb).data);
+    assert_eq!(w1, w2);
+}
+
+#[test]
+fn miri_dense_matmul_nt_col_blocks() {
+    let mut rng = Pcg32::seeded(2);
+    let a = Mat::randn(2, 64, 1.0, &mut rng);
+    let bt = Mat::randn(256, 64, 1.0, &mut rng);
+    let (y1, y2) = sweep(|| dense::matmul_nt(&a, &bt).data);
+    assert_eq!(y1, y2);
+}
+
+#[test]
+fn miri_twell_gate_tiles() {
+    let mut rng = Pcg32::seeded(3);
+    let x = Mat::randn(2, 64, 1.0, &mut rng); // skinny -> tile-parallel
+    let wg = Mat::randn(64, 256, 0.3, &mut rng);
+    let xw = Mat::randn(32, 16, 1.0, &mut rng); // wide -> row-parallel
+    let wgw = Mat::randn(16, 64, 0.3, &mut rng);
+    let (t1, t2) = sweep(|| {
+        let tw = gate_matmul_twell(&x, &wg, 32, 1);
+        (tw.values.clone(), tw.indices.clone(), tw.nnz.clone())
+    });
+    assert_eq!(t1, t2);
+    let (r1, r2) = sweep(|| {
+        let tw = gate_matmul_twell(&xw, &wgw, 32, 1);
+        (tw.values.clone(), tw.indices.clone(), tw.nnz.clone())
+    });
+    assert_eq!(r1, r2);
+}
+
+#[test]
+fn miri_fused_two_phase_ffn() {
+    let mut rng = Pcg32::seeded(4);
+    let mut x = Mat::randn(2, 64, 1.0, &mut rng);
+    for v in x.data.iter_mut() {
+        *v = v.abs() + 0.05; // plenty of surviving gate activations
+    }
+    let wg = Mat::randn(64, 256, 0.3, &mut rng);
+    let wu_t = Mat::randn(256, 64, 0.3, &mut rng);
+    let wd = Mat::randn(256, 64, 0.3, &mut rng);
+    let hg = gate_matmul_twell(&x, &wg, 32, 1);
+    assert!(hg.total_nnz() > 0);
+    let (y1, y2) = sweep(|| fused::fused_up_down(&x, &hg, &wu_t, &wd).data);
+    assert_eq!(y1, y2);
+}
+
+#[test]
+fn miri_routed_gather_and_accumulate() {
+    let mut rng = Pcg32::seeded(5);
+    let mut x = Mat::randn(2, 64, 1.0, &mut rng);
+    for v in x.data.iter_mut() {
+        *v = v.abs() + 0.05; // dense-ish union => gather goes parallel
+    }
+    let wg = Mat::randn(64, 512, 0.3, &mut rng);
+    let wu_t = Mat::randn(512, 64, 0.3, &mut rng);
+    let wd = Mat::randn(512, 64, 0.3, &mut rng);
+    let hg = gate_matmul_twell(&x, &wg, 32, 1);
+    let (r1, r2) = sweep(|| {
+        let mut rs = route::RouteScratch::new(512, 64);
+        let u = route::build_union(&hg, &mut rs);
+        assert!(u > 0);
+        let mut y = Mat::zeros(2, 64);
+        route::routed_up_down_into(&x, &mut rs, &wu_t, &wd, &mut y);
+        y.data
+    });
+    assert_eq!(r1, r2);
+    // the routed path must stay bit-identical to the fused fallback
+    let fused_y = fused::fused_up_down(&x, &hg, &wu_t, &wd);
+    assert_eq!(r1, fused_y.data);
+}
+
+#[test]
+fn miri_hybrid_pattern_masked_pack() {
+    let mut rng = Pcg32::seeded(6);
+    let mut pat = Mat::zeros(32, 48);
+    for v in pat.data.iter_mut() {
+        if rng.f32() < 0.15 {
+            *v = rng.f32() + 0.01;
+        }
+    }
+    for c in 0..40 {
+        pat.data[5 * 48 + c] = 1.0; // heavy row -> dense tail branch
+    }
+    let hy = crate::sparse::hybrid::HybridMatrix::from_dense(&pat, 8, 4);
+    assert!(hy.is_dense[5] && !hy.overflow);
+    let a = Mat::randn(32, 12, 0.5, &mut rng);
+    let b_t = Mat::randn(48, 12, 0.5, &mut rng);
+    let (h1, h2) = sweep(|| {
+        let out = hy.dense_to_hybrid_matmul(&a, &b_t);
+        (out.ell_val.clone(), out.dense_tail.clone())
+    });
+    assert_eq!(h1, h2);
+}

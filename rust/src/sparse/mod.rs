@@ -54,6 +54,8 @@ pub mod ell;
 pub mod ffn;
 pub mod fused;
 pub mod hybrid;
+#[cfg(all(test, miri))]
+mod miri_suite;
 pub mod par;
 pub mod route;
 pub mod twell;

@@ -29,6 +29,53 @@
 //! thread count and either dispatch shape** — the property the serving
 //! engine's stream-parity tests pin down.
 //!
+//! # Concurrency invariants
+//!
+//! The pool's synchronization protocol, in the order a reviewer (or a
+//! loom model) should check it:
+//!
+//! * **Lock order.**  `submit` is taken first, and only by submitters;
+//!   `state` is taken second (by submitters) or alone (by workers).
+//!   No path acquires `submit` while holding `state`, so the order is
+//!   acyclic and deadlock-free.
+//! * **One job in flight.**  `submit` serializes `run_pooled`, so
+//!   `state.job` / `remaining` / `generation` always describe at most
+//!   one job, and `ensure_workers` only runs with no job in flight.
+//! * **Borrow liveness (the `WaitGuard` argument).**  `Job.data`
+//!   erases a `&F` living on the submitter's stack.  The submitter
+//!   arms a [`WaitGuard`] *before* running its own partition and drops
+//!   it on every exit path — including unwinding out of its own
+//!   partition's panic — and the guard's drop blocks until
+//!   `remaining == 0`.  A worker decrements `remaining` (under
+//!   `state`) only *after* its last use of `job.data`, so no worker
+//!   can touch the closure once the guard returns: the borrow strictly
+//!   outlives every dereference.
+//! * **Parked workers never hold a job.**  Workers park on `work_cv`
+//!   holding only `state` (released while waiting) and re-check
+//!   `generation` on every wakeup.  A worker that wakes into a
+//!   generation whose job already drained observes `job == None`
+//!   (cleared by the guard under the same lock) and parks again;
+//!   participants cannot lag past completion because completion *is*
+//!   the sum of their decrements.
+//! * **Poisoning is benign.**  Every `state` access goes through
+//!   [`Pool::lock_state`], which unwraps poison via `into_inner`: the
+//!   state is plain counters plus a `Copy` job descriptor — consistent
+//!   at any instant a panic could unwind through the lock — and a
+//!   panicking kernel closure is already reported via `panicked`.
+//!   Wedging every later kernel call on a poisoned mutex would turn
+//!   one kernel bug into a process-wide outage.
+//! * **Panic propagation.**  Worker panics are caught in the worker
+//!   loop, recorded in `panicked`, and re-raised on the submitter
+//!   after the completion barrier; the submitter's own panic resumes
+//!   unwinding after the guard has drained the job.
+//!
+//! These transitions are machine-checked: `loom_tests` (build with
+//! `RUSTFLAGS="--cfg loom"`, run `cargo test --release --lib loom_`)
+//! drives dispatch/wakeup, narrow fan-out, unwind-drain, panic-flag
+//! and double-submitter interleavings through loom's model checker,
+//! using the [`crate::util::sync`] shim that swaps every primitive
+//! here for its loom twin.  See `.github/workflows/analysis.yml`.
+//!
 //! # Process-global knobs
 //!
 //! [`set_threads`] and [`set_skinny_fast_path`] are **process-global**:
@@ -50,9 +97,13 @@
 //! they must hold [`test_guard`] for the duration of the sweep, and
 //! restore the original settings before releasing it.
 
+#[cfg(not(loom))]
 use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Condvar, Mutex, MutexGuard, OnceLock};
+#[cfg(not(loom))]
+use std::sync::OnceLock;
+
+use crate::util::sync::{thread_local, Condvar, Mutex, MutexGuard};
 
 /// Row count at which row-blocking amortizes; below it the skinny
 /// kernels dispatch column-parallel (the seed dispatch simply went
@@ -131,7 +182,14 @@ pub(crate) fn skinny_col_dispatch(m: usize) -> bool {
 /// Raw pointer wrapper for disjoint-range writes from pool workers
 /// (the caller's contract: no two ranges overlap).
 pub(crate) struct SendPtr<T>(*mut T);
+// SAFETY: the wrapped pointer is only handed to pool workers that
+// write *disjoint* ranges behind it (the partitioners' contract), and
+// the submitter's completion barrier keeps the pointee alive and
+// un-reborrowed until every worker is done.
 unsafe impl<T> Send for SendPtr<T> {}
+// SAFETY: same argument — a `&SendPtr` only exposes the raw pointer
+// value, and every dereference made through it targets a range no
+// other thread touches.
 unsafe impl<T> Sync for SendPtr<T> {}
 impl<T> SendPtr<T> {
     pub(crate) fn new(p: *mut T) -> SendPtr<T> {
@@ -188,50 +246,118 @@ struct Pool {
     submit: Mutex<()>,
 }
 
+#[cfg(not(loom))]
 fn pool() -> &'static Pool {
     static POOL: OnceLock<Pool> = OnceLock::new();
-    POOL.get_or_init(|| Pool {
-        state: Mutex::new(PoolState {
-            generation: 0,
-            job: None,
-            remaining: 0,
-            workers: 0,
-            panicked: false,
-        }),
-        work_cv: Condvar::new(),
-        done_cv: Condvar::new(),
-        submit: Mutex::new(()),
-    })
-}
-
-/// Mutex poisoning is benign here (the state is plain counters), and a
-/// panicking kernel closure must not wedge every later kernel call.
-fn lock_state(p: &Pool) -> MutexGuard<'_, PoolState> {
-    p.state.lock().unwrap_or_else(|e| e.into_inner())
+    POOL.get_or_init(Pool::new)
 }
 
 thread_local! {
-    /// Set on pool workers (and on the submitter while it runs its own
-    /// partition) so nested kernel calls degrade to sequential instead
-    /// of deadlocking on the single job slot.
-    static IN_POOL: std::cell::Cell<bool> =
-        const { std::cell::Cell::new(false) };
+    // Set on pool workers (and on the submitter while it runs its own
+    // partition) so nested kernel calls degrade to sequential instead
+    // of deadlocking on the single job slot.
+    static IN_POOL: std::cell::Cell<bool> = std::cell::Cell::new(false);
 }
 
 fn in_pool() -> bool {
     IN_POOL.with(|c| c.get())
 }
 
+/// The pool's state transitions, factored into instance methods so the
+/// real worker/submitter paths and the loom models drive the *same*
+/// code: `post_job` → (`next_job` → `finish_partition`)* → `drain`.
+impl Pool {
+    fn new() -> Pool {
+        Pool {
+            state: Mutex::new(PoolState {
+                generation: 0,
+                job: None,
+                remaining: 0,
+                workers: 0,
+                panicked: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            submit: Mutex::new(()),
+        }
+    }
+
+    /// Mutex poisoning is benign here (the state is plain counters),
+    /// and a panicking kernel closure must not wedge every later
+    /// kernel call — see the module-level invariants.
+    fn lock_state(&self) -> MutexGuard<'_, PoolState> {
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Submitter side, holding `submit`: publish `job` as the one in
+    /// flight — bump the generation, set the worker countdown, wake
+    /// the parked workers.
+    fn post_job(&self, job: Job) {
+        let mut st = self.lock_state();
+        st.generation += 1;
+        st.remaining = job.parts - 1;
+        st.job = Some(job);
+        if job.parts > 1 {
+            self.work_cv.notify_all();
+        }
+    }
+
+    /// Worker side: park until the generation moves past `last_gen`,
+    /// then return the job slot.  `None` means the job already drained
+    /// (and was cleared) before this non-participating worker got the
+    /// lock — participants can't lag past completion, since completion
+    /// waits on their decrement.
+    fn next_job(&self, last_gen: &mut u64) -> Option<Job> {
+        let mut st = self.lock_state();
+        while st.generation == *last_gen {
+            st = self.work_cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+        *last_gen = st.generation;
+        st.job
+    }
+
+    /// Worker side, after the *last* use of `job.data`: record one
+    /// completed partition (and whether its closure panicked), waking
+    /// the submitter on the final decrement.
+    fn finish_partition(&self, panicked: bool) {
+        let mut st = self.lock_state();
+        if panicked {
+            st.panicked = true;
+        }
+        st.remaining -= 1;
+        if st.remaining == 0 {
+            self.done_cv.notify_all();
+        }
+    }
+
+    /// Submitter side (`WaitGuard::drop`): block until every
+    /// participating worker has finished, then clear the job slot so
+    /// late-waking non-participants observe `None`.
+    fn drain(&self) {
+        let mut st = self.lock_state();
+        while st.remaining > 0 {
+            st = self.done_cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+        st.job = None;
+    }
+
+    /// Submitter side, after `drain`: take-and-reset the panic flag.
+    fn take_panicked(&self) -> bool {
+        std::mem::take(&mut self.lock_state().panicked)
+    }
+}
+
+#[cfg(not(loom))]
 impl Pool {
     /// Spawn parked workers until at least `needed` exist.  Only called
     /// by a submitter holding `submit`, i.e. with no job in flight.
     fn ensure_workers(&'static self, needed: usize) {
-        let mut st = lock_state(self);
+        let mut st = self.lock_state();
         while st.workers < needed {
             st.workers += 1;
             let id = st.workers;
             let start_gen = st.generation;
-            std::thread::Builder::new()
+            crate::util::sync::thread::Builder::new()
                 .name(format!("repro-par-{id}"))
                 .spawn(move || worker_loop(pool(), id, start_gen))
                 .expect("failed to spawn pool worker");
@@ -239,43 +365,23 @@ impl Pool {
     }
 }
 
+#[cfg(not(loom))]
 fn worker_loop(pool: &'static Pool, id: usize, mut last_gen: u64) {
     IN_POOL.with(|c| c.set(true));
     loop {
-        let job = {
-            let mut st = lock_state(pool);
-            while st.generation == last_gen {
-                st = pool
-                    .work_cv
-                    .wait(st)
-                    .unwrap_or_else(|e| e.into_inner());
-            }
-            last_gen = st.generation;
-            st.job
-        };
-        // `None`: the job drained (and was cleared) before this
-        // non-participating worker got the lock — participants can't
-        // lag past completion, since completion waits on their
-        // decrement.  Either way there is nothing to do.
-        let Some(job) = job else { continue };
+        let Some(job) = pool.next_job(&mut last_gen) else { continue };
         if id >= job.parts {
             continue; // this job fans out narrower than the pool
         }
         let lo = id * job.chunk;
         let hi = ((id + 1) * job.chunk).min(job.len);
         // SAFETY: `data`/`call` form a live `&F` until the submitter's
-        // completion barrier, which our decrement below releases.
+        // completion barrier, which our `finish_partition` below
+        // releases (the borrow-liveness invariant in the module docs).
         let r = std::panic::catch_unwind(AssertUnwindSafe(|| unsafe {
             (job.call)(job.data, lo, hi)
         }));
-        let mut st = lock_state(pool);
-        if r.is_err() {
-            st.panicked = true;
-        }
-        st.remaining -= 1;
-        if st.remaining == 0 {
-            pool.done_cv.notify_all();
-        }
+        pool.finish_partition(r.is_err());
     }
 }
 
@@ -291,26 +397,19 @@ unsafe fn call_shim<F: Fn(usize, usize) + Sync>(
 /// Blocks until the in-flight job fully drains — **also during an
 /// unwind**, so the erased closure borrow can never dangle even if the
 /// submitter's own partition panics.
-struct WaitGuard {
-    pool: &'static Pool,
+struct WaitGuard<'a> {
+    pool: &'a Pool,
 }
 
-impl Drop for WaitGuard {
+impl Drop for WaitGuard<'_> {
     fn drop(&mut self) {
-        let mut st = lock_state(self.pool);
-        while st.remaining > 0 {
-            st = self
-                .pool
-                .done_cv
-                .wait(st)
-                .unwrap_or_else(|e| e.into_inner());
-        }
-        st.job = None;
+        self.pool.drain();
     }
 }
 
 /// Fan `f` out over `parts` partitions of `0..len` on the pool; the
 /// submitting thread runs partition 0 itself.  `parts >= 2`, `len >= 2`.
+#[cfg(not(loom))]
 fn run_pooled<F>(len: usize, parts: usize, f: &F)
 where
     F: Fn(usize, usize) + Sync,
@@ -320,36 +419,37 @@ where
     let chunk = len.div_ceil(parts);
     let live = len.div_ceil(chunk); // partitions that are non-empty
     pool.ensure_workers(live - 1);
-    {
-        let mut st = lock_state(pool);
-        st.generation += 1;
-        st.job = Some(Job {
-            data: f as *const F as *const (),
-            call: call_shim::<F>,
-            len,
-            chunk,
-            parts: live,
-        });
-        st.remaining = live - 1;
-        if live > 1 {
-            pool.work_cv.notify_all();
-        }
-    }
+    pool.post_job(Job {
+        data: f as *const F as *const (),
+        call: call_shim::<F>,
+        len,
+        chunk,
+        parts: live,
+    });
     let wait = WaitGuard { pool };
     let was = IN_POOL.with(|c| c.replace(true));
     let r = std::panic::catch_unwind(AssertUnwindSafe(|| f(0, chunk.min(len))));
     IN_POOL.with(|c| c.set(was));
     drop(wait); // completion barrier (runs even when `r` is a panic)
-    let worker_panicked = {
-        let mut st = lock_state(pool);
-        std::mem::take(&mut st.panicked)
-    };
+    let worker_panicked = pool.take_panicked();
     if let Err(p) = r {
         std::panic::resume_unwind(p);
     }
     if worker_panicked {
         panic!("pool worker panicked during a parallel kernel");
     }
+}
+
+/// Under loom the partitioners degrade to sequential: the loom models
+/// drive the `Pool` transitions directly (see `loom_tests`), and
+/// fanning every kernel out inside a model would explode the state
+/// space without checking anything new.
+#[cfg(loom)]
+fn run_pooled<F>(len: usize, _parts: usize, f: &F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    f(0, len);
 }
 
 // ---------------------------------------------------------------------
@@ -441,17 +541,20 @@ where
 
 /// Serializes tests that flip the global `set_threads` /
 /// `set_skinny_fast_path` knobs, so two determinism sweeps never
-/// interleave their settings.
+/// interleave their settings.  (Deliberately a `std` mutex even under
+/// `--cfg loom`: it guards the *test harness*, not modeled code, and
+/// loom mutexes cannot live outside `loom::model`.)
 #[cfg(test)]
-pub(crate) fn test_guard() -> MutexGuard<'static, ()> {
-    static LOCK: Mutex<()> = Mutex::new(());
+pub(crate) fn test_guard() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
     LOCK.lock().unwrap_or_else(|e| e.into_inner())
 }
 
-#[cfg(test)]
+#[cfg(all(test, not(loom)))]
 mod tests {
     use super::*;
     use std::sync::atomic::AtomicU64;
+    use std::sync::Mutex;
 
     #[test]
     fn covers_all_rows_exactly_once() {
@@ -594,6 +697,40 @@ mod tests {
     }
 
     #[test]
+    fn concurrent_submitters_hammer_real_kernels() {
+        // N caller threads × many iterations of real matmul kernels in
+        // a tight loop: the submit lock must serialize cleanly under
+        // contention — no deadlock, and every caller's result stays
+        // bit-identical to its single-threaded golden even while other
+        // callers keep the job slot churning.  (Bit-equality holds for
+        // any thread count / dispatch shape, so a concurrently running
+        // knob-sweeping test cannot perturb this one.)
+        use crate::sparse::dense;
+        use crate::tensor::Mat;
+        use crate::util::rng::Pcg32;
+
+        let mut rng = Pcg32::seeded(0x7a77);
+        let skinny = Mat::randn(4, 96, 1.0, &mut rng); // column dispatch
+        let wide = Mat::randn(64, 96, 1.0, &mut rng); // row dispatch
+        let b = Mat::randn(96, 512, 1.0, &mut rng);
+        let golden_skinny = dense::matmul(&skinny, &b).data;
+        let golden_wide = dense::matmul(&wide, &b).data;
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for _ in 0..8 {
+                        assert_eq!(
+                            dense::matmul(&skinny, &b).data,
+                            golden_skinny
+                        );
+                        assert_eq!(dense::matmul(&wide, &b).data, golden_wide);
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
     fn worker_panic_propagates_and_pool_survives() {
         let _g = test_guard();
         let orig = num_threads();
@@ -613,5 +750,222 @@ mod tests {
         });
         set_threads(orig);
         assert_eq!(hits.load(Ordering::Relaxed), 1024);
+    }
+}
+
+/// Loom model checks of the pool protocol.  Build + run with:
+///
+/// ```text
+/// RUSTFLAGS="--cfg loom" LOOM_MAX_PREEMPTIONS=3 \
+///     cargo test --release --lib loom_
+/// ```
+///
+/// Each test wraps one hairy transition of the real `Pool` methods in
+/// `loom::model`, which executes the closure under **every** possible
+/// interleaving of the participating threads (bounded by the
+/// preemption budget) and additionally fails on deadlock or a missed
+/// condvar wakeup.  The models can't use `worker_loop` itself — loom
+/// requires every modeled thread to terminate — so workers run
+/// [`worker_n`], the same `next_job`/`finish_partition` transitions
+/// with a bounded job count.
+#[cfg(all(test, loom))]
+mod loom_tests {
+    use super::*;
+    use loom::sync::atomic::AtomicUsize as LoomUsize;
+    use loom::sync::Arc;
+    use loom::thread;
+
+    /// Erase `f` into a job descriptor exactly the way `run_pooled`
+    /// does.
+    fn job_for<F: Fn(usize, usize) + Sync>(
+        f: &F, len: usize, parts: usize,
+    ) -> Job {
+        let chunk = len.div_ceil(parts);
+        Job {
+            data: f as *const F as *const (),
+            call: call_shim::<F>,
+            len,
+            chunk,
+            parts,
+        }
+    }
+
+    /// One worker servicing exactly `jobs` generation bumps — the
+    /// bounded stand-in for `worker_loop`.
+    fn worker_n(pool: &Pool, id: usize, mut last_gen: u64, jobs: usize) {
+        for _ in 0..jobs {
+            let Some(job) = pool.next_job(&mut last_gen) else {
+                continue;
+            };
+            if id >= job.parts {
+                continue;
+            }
+            let lo = id * job.chunk;
+            let hi = ((id + 1) * job.chunk).min(job.len);
+            // SAFETY: same contract as `worker_loop` — the submitter's
+            // drain barrier keeps the erased `&F` alive until the
+            // `finish_partition` below.
+            unsafe { (job.call)(job.data, lo, hi) };
+            pool.finish_partition(false);
+        }
+    }
+
+    /// The full submitter protocol over an existing pool reference:
+    /// post under the submit lock, run partition 0 inline, drain.
+    fn submit_once(pool: &Pool, hits: &LoomUsize, len: usize) {
+        let f = move |lo: usize, hi: usize| {
+            hits.fetch_add(hi - lo, Ordering::Relaxed);
+        };
+        let job = job_for(&f, len, 2);
+        let _submit = pool.submit.lock().unwrap();
+        pool.post_job(job);
+        let wait = WaitGuard { pool };
+        f(0, job.chunk.min(job.len));
+        drop(wait);
+        assert!(!pool.take_panicked());
+    }
+
+    /// Scenario 1 — generation bump vs. parked-worker wakeup: however
+    /// the post interleaves with the worker reaching its condvar wait,
+    /// the worker must observe the new generation and its partition
+    /// must land exactly once.
+    #[test]
+    fn loom_dispatch_wakes_parked_worker() {
+        loom::model(|| {
+            let pool = Arc::new(Pool::new());
+            let hits = Arc::new(LoomUsize::new(0));
+            let w = {
+                let p = pool.clone();
+                thread::spawn(move || worker_n(&p, 1, 0, 1))
+            };
+            submit_once(&pool, &hits, 8);
+            assert_eq!(hits.load(Ordering::Relaxed), 8);
+            w.join().unwrap();
+        });
+    }
+
+    /// Scenario 2 — the non-participating worker: a pool wider than
+    /// the job's fan-out must leave the extra worker contributing
+    /// nothing, whether it wakes while the job is live (`id >= parts`)
+    /// or after the drain cleared the slot (`job == None`) — and the
+    /// countdown must not be double-decremented either way.
+    #[test]
+    fn loom_nonparticipant_sees_cleared_or_narrow_slot() {
+        loom::model(|| {
+            let pool = Arc::new(Pool::new());
+            let hits = Arc::new(LoomUsize::new(0));
+            let a = {
+                let p = pool.clone();
+                thread::spawn(move || worker_n(&p, 1, 0, 1))
+            };
+            let b = {
+                let p = pool.clone();
+                thread::spawn(move || worker_n(&p, 2, 0, 1))
+            };
+            submit_once(&pool, &hits, 4);
+            assert_eq!(hits.load(Ordering::Relaxed), 4);
+            {
+                let st = pool.lock_state();
+                assert!(st.job.is_none(), "drain must clear the slot");
+                assert_eq!(st.remaining, 0);
+            }
+            a.join().unwrap();
+            b.join().unwrap();
+        });
+    }
+
+    /// Scenario 3 — `WaitGuard` draining during an unwind: the
+    /// submitter posts and then *never runs its own partition*
+    /// (modeling a panic before/inside it); dropping the guard alone
+    /// must keep the erased closure borrow alive until the worker is
+    /// done and leave the slot cleared.
+    #[test]
+    fn loom_waitguard_drains_on_unwind_path() {
+        loom::model(|| {
+            let pool = Arc::new(Pool::new());
+            let hits = Arc::new(LoomUsize::new(0));
+            let w = {
+                let p = pool.clone();
+                thread::spawn(move || worker_n(&p, 1, 0, 1))
+            };
+            {
+                let h = hits.clone();
+                let f = move |lo: usize, hi: usize| {
+                    h.fetch_add(hi - lo, Ordering::Relaxed);
+                };
+                let job = job_for(&f, 6, 2);
+                let _submit = pool.submit.lock().unwrap();
+                pool.post_job(job);
+                let wait = WaitGuard { pool: &*pool };
+                drop(wait); // unwind path: no partition-0 call
+            }
+            // after the barrier the worker can no longer touch `f`,
+            // and only its half [3, 6) ever ran
+            assert_eq!(hits.load(Ordering::Relaxed), 3);
+            let st = pool.lock_state();
+            assert!(st.job.is_none());
+            assert_eq!(st.remaining, 0);
+            drop(st);
+            w.join().unwrap();
+        });
+    }
+
+    /// Scenario 4 — panic-flag propagation: a worker whose closure
+    /// panicked reports through `finish_partition(true)`; the flag
+    /// must reach the submitter after the barrier, exactly once, and
+    /// the pool must accept the next job cleanly.
+    #[test]
+    fn loom_panic_flag_propagates_and_resets() {
+        loom::model(|| {
+            let pool = Arc::new(Pool::new());
+            let w = {
+                let p = pool.clone();
+                thread::spawn(move || {
+                    let mut last = 0;
+                    let job = p.next_job(&mut last);
+                    assert!(job.is_some(), "participant can't see None");
+                    p.finish_partition(true); // closure "panicked"
+                })
+            };
+            let f = |_lo: usize, _hi: usize| {};
+            let job = job_for(&f, 2, 2);
+            {
+                let _submit = pool.submit.lock().unwrap();
+                pool.post_job(job);
+                let wait = WaitGuard { pool: &*pool };
+                f(0, 1);
+                drop(wait);
+            }
+            assert!(pool.take_panicked(), "worker panic must surface");
+            assert!(!pool.take_panicked(), "flag is take-once");
+            w.join().unwrap();
+        });
+    }
+
+    /// Scenario 5 — two submitters racing one worker: the submit lock
+    /// must serialize the jobs into distinct generations, the worker
+    /// must service both, and each submitter must observe its own
+    /// complete result.
+    #[test]
+    fn loom_submit_lock_serializes_two_submitters() {
+        loom::model(|| {
+            let pool = Arc::new(Pool::new());
+            let hits_a = Arc::new(LoomUsize::new(0));
+            let hits_b = Arc::new(LoomUsize::new(0));
+            let w = {
+                let p = pool.clone();
+                thread::spawn(move || worker_n(&p, 1, 0, 2))
+            };
+            let b = {
+                let p = pool.clone();
+                let h = hits_b.clone();
+                thread::spawn(move || submit_once(&p, &h, 4))
+            };
+            submit_once(&pool, &hits_a, 6);
+            b.join().unwrap();
+            w.join().unwrap();
+            assert_eq!(hits_a.load(Ordering::Relaxed), 6);
+            assert_eq!(hits_b.load(Ordering::Relaxed), 4);
+        });
     }
 }

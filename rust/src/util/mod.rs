@@ -1,13 +1,15 @@
 //! Infrastructure substrates built from scratch for the offline testbed:
 //! PRNG (no `rand`), JSON codec (no `serde`), wall-clock bench harness
-//! (no `criterion`), statistics helpers, and a mini property-testing
-//! framework (no `proptest`).
+//! (no `criterion`), statistics helpers, a mini property-testing
+//! framework (no `proptest`), and the loom-switchable synchronization
+//! shim every thread in the process is created through.
 
 pub mod bench;
 pub mod json;
 pub mod prop;
 pub mod rng;
 pub mod stats;
+pub(crate) mod sync;
 
 /// Convenient alias used across the crate.
 pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,61 @@
+//! Synchronization shim — the one place the crate names its lock,
+//! condvar and thread primitives.
+//!
+//! The worker pool (`sparse::par`) and the serving engine import
+//! `Mutex` / `Condvar` / `thread` / `thread_local!` from here instead
+//! of from `std::sync` directly.  A normal build re-exports the `std`
+//! types unchanged (zero cost).  Building with `RUSTFLAGS="--cfg
+//! loom"` swaps in [loom]'s model-checked replacements, which lets
+//! `cargo test --release --lib loom_` exhaustively enumerate every
+//! interleaving of the pool's lock/condvar protocol instead of hoping
+//! the OS scheduler stumbles onto the bad one (see `par::loom_tests`
+//! and `.github/workflows/analysis.yml`).
+//!
+//! Policy, enforced by `cargo run -p xtask -- check`: OS threads are
+//! created only inside this module and `sparse/par.rs` (the pool's
+//! workers and its tests).  Everything else — the serving engine
+//! included — goes through [`spawn_named`], so the set of threads in
+//! the process stays enumerable and the loom models stay a faithful
+//! abstraction of the real concurrency.
+//!
+//! [loom]: https://docs.rs/loom
+
+#[cfg(not(loom))]
+pub(crate) use std::sync::{Condvar, Mutex, MutexGuard};
+#[cfg(not(loom))]
+pub(crate) use std::thread;
+#[cfg(not(loom))]
+pub(crate) use std::thread::JoinHandle;
+#[cfg(not(loom))]
+pub(crate) use std::thread_local;
+
+#[cfg(loom)]
+pub(crate) use loom::sync::{Condvar, Mutex, MutexGuard};
+#[cfg(loom)]
+pub(crate) use loom::thread;
+#[cfg(loom)]
+pub(crate) use loom::thread::JoinHandle;
+#[cfg(loom)]
+pub(crate) use loom::thread_local;
+
+/// Spawn a named OS thread.  The crate's front door for long-lived
+/// non-pool threads (the serving engine's scheduler); the pool spawns
+/// its own workers via `thread::Builder` in `sparse/par.rs`.  Under
+/// loom the name is dropped — loom threads are anonymous.
+pub(crate) fn spawn_named<F>(name: &str, f: F) -> JoinHandle<()>
+where
+    F: FnOnce() + Send + 'static,
+{
+    #[cfg(not(loom))]
+    {
+        thread::Builder::new()
+            .name(name.to_string())
+            .spawn(f)
+            .expect("failed to spawn thread")
+    }
+    #[cfg(loom)]
+    {
+        let _ = name;
+        thread::spawn(f)
+    }
+}

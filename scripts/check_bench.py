@@ -1,0 +1,34 @@
+#!/usr/bin/env python3
+"""Validate the serve_throughput bench report (BENCH_serve_throughput.json).
+
+CI runs the bench in --smoke mode and then this script; developers can
+run it locally the same way:
+
+    cargo bench --bench serve_throughput -- --smoke
+    python3 scripts/check_bench.py [path-to-report.json]
+
+The routing A/B sweep must land in the persisted report with a measured
+union density and a dispatch label on every row, for all three paths
+(routed union-gather, TwELL row fallback, dense baseline) — the
+trajectory tooling indexes on these.
+"""
+import json
+import sys
+
+
+def check(report_path):
+    with open(report_path) as f:
+        report = json.load(f)
+    rows = [r for r in report["rows"] if r.get("section") == "decode_routing"]
+    assert rows, "no section=decode_routing rows in the report"
+    for r in rows:
+        assert "union_density" in r, f"missing union_density: {r}"
+        assert "dispatch" in r, f"missing dispatch: {r}"
+    paths = {r["path"] for r in rows}
+    want = {"routed", "twell-row", "dense"}
+    assert want <= paths, f"paths {paths} missing {want - paths}"
+    print(f"{len(rows)} decode_routing rows ok; paths: {sorted(paths)}")
+
+
+if __name__ == "__main__":
+    check(sys.argv[1] if len(sys.argv) > 1 else "BENCH_serve_throughput.json")

@@ -1,0 +1,461 @@
+//! Repo lint gate — `cargo run -p xtask -- check`.
+//!
+//! A std-only scanner (no `syn`: nothing to vendor in this offline
+//! environment) that walks `rust/` and `examples/` through a
+//! comment/string-aware mini-lexer and enforces the concurrency
+//! invariants the analysis tooling rests on:
+//!
+//! 1. **SAFETY comments.**  Every `unsafe` block and `unsafe impl`
+//!    must be immediately preceded by (or share a line with) a comment
+//!    containing `SAFETY:`.  `unsafe fn` signatures are exempt: the
+//!    crate-wide `#![deny(unsafe_op_in_unsafe_fn)]` (also asserted
+//!    here) forces their bodies into explicit `unsafe { }` blocks,
+//!    which the rule does cover.
+//! 2. **Thread confinement.**  `thread::spawn` / `thread::scope` /
+//!    `thread::Builder` appear only in `util/sync.rs` and
+//!    `sparse/par.rs`, so every OS thread is created through the
+//!    loom-switchable shim and the loom models stay a faithful
+//!    abstraction of the process's concurrency.
+//! 3. **Kernel purity.**  No `Instant::now` under `rust/src/sparse/`
+//!    — kernels stay deterministic and timing-free; measurement
+//!    belongs to the bench harness and the serving loop.
+//!
+//! Prints the full `unsafe` inventory either way; exits non-zero with
+//! a violation list when the gate fails.
+
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("check") => check(),
+        _ => {
+            eprintln!("usage: cargo run -p xtask -- check");
+            ExitCode::from(2)
+        }
+    }
+}
+
+struct Violation {
+    file: String,
+    line: usize,
+    msg: String,
+}
+
+struct UnsafeSite {
+    file: String,
+    line: usize,
+    kind: &'static str,
+    safety: Option<String>,
+}
+
+fn check() -> ExitCode {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("xtask lives directly under the repo root")
+        .to_path_buf();
+    let mut files = Vec::new();
+    for dir in ["rust", "examples"] {
+        collect_rs(&root.join(dir), &mut files);
+    }
+    files.sort();
+
+    let mut violations = Vec::new();
+    let mut inventory = Vec::new();
+    for path in &files {
+        let rel = rel_path(&root, path);
+        let src = match std::fs::read_to_string(path) {
+            Ok(s) => s,
+            Err(e) => {
+                violations.push(Violation {
+                    file: rel,
+                    line: 0,
+                    msg: format!("unreadable: {e}"),
+                });
+                continue;
+            }
+        };
+        let lines = lex(&src);
+        scan_unsafe(&rel, &lines, &mut inventory, &mut violations);
+        scan_threads(&rel, &lines, &mut violations);
+        scan_kernel_purity(&rel, &lines, &mut violations);
+    }
+    check_deny_attr(&root, &mut violations);
+
+    println!("xtask check: {} files scanned", files.len());
+    print_inventory(&inventory);
+    if violations.is_empty() {
+        println!("ok: zero violations");
+        ExitCode::SUCCESS
+    } else {
+        for v in &violations {
+            eprintln!("violation: {}:{}: {}", v.file, v.line, v.msg);
+        }
+        eprintln!("{} violation(s)", violations.len());
+        ExitCode::FAILURE
+    }
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return;
+    };
+    for entry in entries.flatten() {
+        let path = entry.path();
+        if path.is_dir() {
+            if path.file_name().is_some_and(|n| n == "target") {
+                continue;
+            }
+            collect_rs(&path, out);
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+}
+
+fn rel_path(root: &Path, path: &Path) -> String {
+    path.strip_prefix(root)
+        .unwrap_or(path)
+        .to_string_lossy()
+        .replace('\\', "/")
+}
+
+// ---------------------------------------------------------------------
+// Mini-lexer
+// ---------------------------------------------------------------------
+
+/// One physical source line: `code` with comments removed and
+/// string/char-literal contents blanked, plus the line's comment text
+/// (kept verbatim so the SAFETY rule can read it).
+struct Line {
+    code: String,
+    comment: String,
+}
+
+fn flush(lines: &mut Vec<Line>, code: &mut String, comment: &mut String) {
+    lines.push(Line {
+        code: std::mem::take(code),
+        comment: std::mem::take(comment),
+    });
+}
+
+/// Split `src` into [`Line`]s, handling line comments, nested block
+/// comments, string literals (with escapes), raw strings
+/// (`r"…"` / `r#"…"#`), and char-vs-lifetime disambiguation.
+fn lex(src: &str) -> Vec<Line> {
+    let b = src.as_bytes();
+    let mut lines = Vec::new();
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut i = 0;
+    while i < b.len() {
+        match b[i] {
+            b'\n' => {
+                flush(&mut lines, &mut code, &mut comment);
+                i += 1;
+            }
+            b'/' if b.get(i + 1) == Some(&b'/') => {
+                let start = i;
+                while i < b.len() && b[i] != b'\n' {
+                    i += 1;
+                }
+                comment.push_str(&src[start..i]);
+            }
+            b'/' if b.get(i + 1) == Some(&b'*') => {
+                let mut depth = 1u32;
+                i += 2;
+                while i < b.len() && depth > 0 {
+                    if b[i] == b'/' && b.get(i + 1) == Some(&b'*') {
+                        depth += 1;
+                        i += 2;
+                    } else if b[i] == b'*' && b.get(i + 1) == Some(&b'/') {
+                        depth -= 1;
+                        i += 2;
+                    } else {
+                        if b[i] == b'\n' {
+                            flush(&mut lines, &mut code, &mut comment);
+                        }
+                        i += 1;
+                    }
+                }
+            }
+            b'"' => {
+                code.push_str("\"\"");
+                i += 1;
+                while i < b.len() {
+                    match b[i] {
+                        b'\\' => i += 2,
+                        b'"' => {
+                            i += 1;
+                            break;
+                        }
+                        b'\n' => {
+                            flush(&mut lines, &mut code, &mut comment);
+                            i += 1;
+                        }
+                        _ => i += 1,
+                    }
+                }
+            }
+            b'r' if !ends_in_ident(&code) => {
+                if let Some(hashes) = raw_string_hashes(b, i + 1) {
+                    code.push_str("r\"\"");
+                    i += 2 + hashes; // past `r`, the `#`s and the quote
+                    while i < b.len() {
+                        if b[i] == b'"' && closes_raw(b, i + 1, hashes) {
+                            i += 1 + hashes;
+                            break;
+                        }
+                        if b[i] == b'\n' {
+                            flush(&mut lines, &mut code, &mut comment);
+                        }
+                        i += 1;
+                    }
+                } else {
+                    code.push('r');
+                    i += 1;
+                }
+            }
+            b'\'' => {
+                if b.get(i + 1) == Some(&b'\\') {
+                    i += 3; // past `'`, `\` and the escaped byte
+                    while i < b.len() && b[i] != b'\'' {
+                        i += 1;
+                    }
+                    i += 1;
+                    code.push_str("''");
+                } else if b.get(i + 2) == Some(&b'\'')
+                    && b.get(i + 1) != Some(&b'\'')
+                {
+                    code.push_str("''"); // plain char literal
+                    i += 3;
+                } else {
+                    code.push('\''); // lifetime or loop label
+                    i += 1;
+                }
+            }
+            c if c.is_ascii() => {
+                code.push(c as char);
+                i += 1;
+            }
+            // non-ASCII code bytes can't be part of any rule token
+            _ => i += 1,
+        }
+    }
+    if !code.is_empty() || !comment.is_empty() {
+        flush(&mut lines, &mut code, &mut comment);
+    }
+    lines
+}
+
+fn ends_in_ident(code: &str) -> bool {
+    code.chars()
+        .next_back()
+        .is_some_and(|c| c.is_ascii_alphanumeric() || c == '_')
+}
+
+/// Does `b[j..]` read `#*"` — the tail of a raw-string opener?
+fn raw_string_hashes(b: &[u8], j: usize) -> Option<usize> {
+    let mut h = 0;
+    while b.get(j + h) == Some(&b'#') {
+        h += 1;
+    }
+    (b.get(j + h) == Some(&b'"')).then_some(h)
+}
+
+/// Does `b[j..]` hold the `hashes` `#`s that close a raw string?
+fn closes_raw(b: &[u8], j: usize, hashes: usize) -> bool {
+    (0..hashes).all(|k| b.get(j + k) == Some(&b'#'))
+}
+
+/// Byte offsets of standalone occurrences of `word` in `hay` (not
+/// embedded inside a longer identifier).
+fn find_word(hay: &str, word: &str) -> Vec<usize> {
+    let ident = |c: char| c.is_ascii_alphanumeric() || c == '_';
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(p) = hay[from..].find(word) {
+        let at = from + p;
+        let before = hay[..at].chars().next_back();
+        let after = hay[at + word.len()..].chars().next();
+        if !before.is_some_and(ident) && !after.is_some_and(ident) {
+            out.push(at);
+        }
+        from = at + word.len();
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// Rules
+// ---------------------------------------------------------------------
+
+fn scan_unsafe(
+    file: &str,
+    lines: &[Line],
+    inventory: &mut Vec<UnsafeSite>,
+    violations: &mut Vec<Violation>,
+) {
+    for (li, line) in lines.iter().enumerate() {
+        for col in find_word(&line.code, "unsafe") {
+            let kind = classify(lines, li, col + "unsafe".len());
+            let safety = safety_comment(lines, li);
+            if kind != "fn" && safety.is_none() {
+                violations.push(Violation {
+                    file: file.to_string(),
+                    line: li + 1,
+                    msg: format!(
+                        "`unsafe {kind}` without a `// SAFETY:` comment \
+                         immediately above (or on the same line)"
+                    ),
+                });
+            }
+            inventory.push(UnsafeSite {
+                file: file.to_string(),
+                line: li + 1,
+                kind,
+                safety,
+            });
+        }
+    }
+}
+
+/// The token following an `unsafe` keyword (possibly on a later line):
+/// `impl`, `fn` (signature or fn-pointer type — exempt), `extern`,
+/// `block`, or `?` when nothing parsable follows.
+fn classify(lines: &[Line], li: usize, after: usize) -> &'static str {
+    let mut rest = lines[li].code[after..].to_string();
+    let mut j = li + 1;
+    while rest.trim().is_empty() && j < lines.len() {
+        rest.clone_from(&lines[j].code);
+        j += 1;
+    }
+    let rest = rest.trim_start();
+    if rest.starts_with("impl") {
+        "impl"
+    } else if rest.starts_with("fn") {
+        "fn"
+    } else if rest.starts_with("extern") {
+        "extern"
+    } else if rest.starts_with('{') {
+        "block"
+    } else {
+        "?"
+    }
+}
+
+/// The `SAFETY:` text attached to line `li`: on the line itself or in
+/// the contiguous run of comment-only lines directly above it.
+fn safety_comment(lines: &[Line], li: usize) -> Option<String> {
+    if let Some(s) = extract_safety(&lines[li].comment) {
+        return Some(s);
+    }
+    let mut j = li;
+    while j > 0 {
+        j -= 1;
+        let l = &lines[j];
+        if !l.code.trim().is_empty() || l.comment.trim().is_empty() {
+            break;
+        }
+        if let Some(s) = extract_safety(&l.comment) {
+            return Some(s);
+        }
+    }
+    None
+}
+
+fn extract_safety(comment: &str) -> Option<String> {
+    comment.find("SAFETY:").map(|p| {
+        let tail = comment[p + "SAFETY:".len()..].trim();
+        let mut s: String = tail.chars().take(60).collect();
+        if tail.chars().count() > 60 {
+            s.push('…');
+        }
+        s
+    })
+}
+
+const THREAD_ALLOWED: [&str; 2] =
+    ["rust/src/util/sync.rs", "rust/src/sparse/par.rs"];
+const THREAD_TOKENS: [&str; 3] =
+    ["thread::spawn", "thread::scope", "thread::Builder"];
+
+fn scan_threads(file: &str, lines: &[Line], violations: &mut Vec<Violation>) {
+    if THREAD_ALLOWED.contains(&file) {
+        return;
+    }
+    for (li, line) in lines.iter().enumerate() {
+        for tok in THREAD_TOKENS {
+            if line.code.contains(tok) {
+                violations.push(Violation {
+                    file: file.to_string(),
+                    line: li + 1,
+                    msg: format!(
+                        "`{tok}` outside util/sync.rs / sparse/par.rs — \
+                         spawn through `util::sync::spawn_named` so the \
+                         loom models stay faithful"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+fn scan_kernel_purity(
+    file: &str,
+    lines: &[Line],
+    violations: &mut Vec<Violation>,
+) {
+    if !file.starts_with("rust/src/sparse/") {
+        return;
+    }
+    for (li, line) in lines.iter().enumerate() {
+        if line.code.contains("Instant::now") {
+            violations.push(Violation {
+                file: file.to_string(),
+                line: li + 1,
+                msg: "`Instant::now` inside a kernel module — timing \
+                      belongs to the bench harness / serving loop"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+fn check_deny_attr(root: &Path, violations: &mut Vec<Violation>) {
+    let lib = root.join("rust/src/lib.rs");
+    let ok = std::fs::read_to_string(&lib)
+        .map(|src| {
+            lex(&src)
+                .iter()
+                .any(|l| l.code.contains("deny(unsafe_op_in_unsafe_fn)"))
+        })
+        .unwrap_or(false);
+    if !ok {
+        violations.push(Violation {
+            file: "rust/src/lib.rs".to_string(),
+            line: 1,
+            msg: "missing crate-wide `#![deny(unsafe_op_in_unsafe_fn)]`"
+                .to_string(),
+        });
+    }
+}
+
+fn print_inventory(inventory: &[UnsafeSite]) {
+    let exempt = inventory.iter().filter(|s| s.kind == "fn").count();
+    println!(
+        "unsafe inventory: {} sites ({} `unsafe fn` signatures / \
+         fn-pointer types, exempt from the comment rule):",
+        inventory.len(),
+        exempt
+    );
+    for s in inventory {
+        let mut row = format!("  {}:{} {}", s.file, s.line, s.kind);
+        if let Some(sfty) = &s.safety {
+            let _ = write!(row, " — SAFETY: {sfty}");
+        }
+        println!("{row}");
+    }
+}
