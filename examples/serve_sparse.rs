@@ -9,13 +9,14 @@
 //!        [--kv-blocks 128] [--kv-block-size 16] [--prefill-chunk 16] \
 //!        [--route-density 0.25] \
 //!        [--temperature 0.8] [--top-k 40] [--top-p 0.95] [--seed 0] \
-//!        [--threads N]
+//!        [--threads N] [--shards 1]
 //! (trains a quick tiny model if the run does not exist yet;
 //! temperature 0 — the default — decodes greedily, request i samples
 //! with seed `--seed + i` so runs stay reproducible, --threads pins
-//! the kernel worker pool before first use, and --route-density sets
-//! the union-density threshold for batch-contextual FFN routing on
-//! the twell engine — 0 disables the routed path)
+//! the kernel worker pool before first use — it is the TOTAL budget,
+//! split evenly across --shards engine shards — and --route-density
+//! sets the union-density threshold for batch-contextual FFN routing
+//! on the twell engine — 0 disables the routed path)
 
 use std::time::{Duration, Instant};
 
@@ -31,10 +32,19 @@ use repro::util::json::Json;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse(std::env::args().skip(1))?;
-    // pin the kernel worker pool before the first kernel call
+    let shards = args.get_usize("shards", 1)?.max(1);
+    // pin the kernel worker pool before the first kernel call;
+    // --threads is the total budget, divided evenly across shards
     let threads = args.get_usize("threads", 0)?;
     if threads > 0 {
-        repro::sparse::par::set_threads(threads);
+        repro::sparse::par::set_threads(
+            repro::sparse::par::threads_per_shard(threads, shards),
+        );
+    } else if shards > 1 {
+        let auto = repro::sparse::par::num_threads();
+        repro::sparse::par::set_threads(
+            repro::sparse::par::threads_per_shard(auto, shards),
+        );
     }
     let run = args.get_or("run", "serve_demo");
     let n_requests = args.get_usize("requests", 24)?;
@@ -61,7 +71,7 @@ fn main() -> anyhow::Result<()> {
         ..base_params
     };
     println!(
-        "kernel worker pool: {} threads",
+        "kernel worker pool: {} threads/shard x {shards} shards",
         repro::sparse::par::num_threads()
     );
     let paths = default_paths();
@@ -101,6 +111,7 @@ fn main() -> anyhow::Result<()> {
                 prefill_chunk,
                 route_density,
                 mode,
+                shards,
             };
             let server = Server::start(model, policy);
             let t0 = Instant::now();
@@ -120,12 +131,14 @@ fn main() -> anyhow::Result<()> {
                 metrics.record(rx.recv()?);
             }
             let wall = t0.elapsed().as_secs_f64();
+            let per_shard = server.shard_stats();
             let stats = server.stats();
             println!(
                 "{label:>6} {:<22} {n_requests} reqs: p50 {:.1} ms, \
                  p95 {:.1} ms, ttft p50 {:.1} ms, {:.0} tok/s \
                  ({} backfills, {} prefill chunks, ffn {} routed / \
-                 {} fallback, mean union density {:.3})",
+                 {} fallback, mean union density {:.3}, \
+                 queue peak {})",
                 format!("{mode:?}/{eff_slots} slots"),
                 metrics.p50_ms(),
                 metrics.p95_ms(),
@@ -136,7 +149,20 @@ fn main() -> anyhow::Result<()> {
                 stats.ffn_routed,
                 stats.ffn_fallback,
                 stats.mean_union_density(),
+                stats.queue_peak,
             );
+            if shards > 1 {
+                for (i, st) in per_shard.iter().enumerate() {
+                    println!(
+                        "        shard {i}: {} admissions \
+                         ({} backfilled), {} steps, max active {}",
+                        st.admissions,
+                        st.backfilled,
+                        st.steps,
+                        st.max_active,
+                    );
+                }
+            }
             server.shutdown();
         }
     }
@@ -151,6 +177,7 @@ fn main() -> anyhow::Result<()> {
         prefill_chunk,
         route_density,
         mode: ServeMode::Continuous,
+        shards,
     });
     let (_, tok_rx, done_rx) = server.submit_streaming_sampled(
         bpe.encode(prompts[0]),

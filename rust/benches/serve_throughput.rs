@@ -10,7 +10,10 @@
 //! the batch-contextual union-gathered routed FFN vs the unrouted
 //! twell row path vs the dense backend at ~99% sparsity, batch 1..64,
 //! with the measured batch-union column density and the dominant
-//! dispatch label on every row.
+//! dispatch label on every row, and a **shard sweep**
+//! (`section=shard_sweep`): 1/2/4 engine shards pulling from one
+//! admission queue, the total worker-pool budget split evenly across
+//! shards.
 //!
 //! Claims under test: decode throughput grows with the number of slots
 //! because the batched step hands the FFN backends a multi-row
@@ -36,7 +39,8 @@ use repro::model::kv::{argmax, kv_positions_needed, DecodeScratch,
                        PagedKvCache};
 use repro::model::sample::SamplingParams;
 use repro::model::{FfnBackend, Layer, Model};
-use repro::serve::{ServeMetrics, ServeMode, ServePolicy, Server};
+use repro::serve::{EngineStats, ServeMetrics, ServeMode, ServePolicy,
+                   Server};
 use repro::sparse::ffn::synth_sparse_ffn;
 use repro::sparse::par;
 use repro::sparse::route::RouteStats;
@@ -91,13 +95,17 @@ fn synthetic_model(layers: usize, target_nnz: f64, backend: FfnBackend)
 }
 
 /// One serving wave; returns (tok/s, p50 ms, p95 ms, TTFT p50 ms,
-/// backfills).  Request i samples with seed `params.seed + i`, so a
-/// sampled wave exercises genuinely divergent decode traffic while
-/// staying reproducible run to run.
-fn run_wave(backend: FfnBackend, slots: usize, n_requests: usize,
-            prompt_len: usize, max_new: usize, kv_block_size: usize,
-            prefill_chunk: usize, params: SamplingParams)
-    -> (f64, f64, f64, f64, u64) {
+/// merged engine stats).  Request i samples with seed
+/// `params.seed + i`, so a sampled wave exercises genuinely divergent
+/// decode traffic while staying reproducible run to run.  `shards`
+/// engine shards pull from one admission queue; `slots`/`kv_blocks`
+/// are per shard, so capacity scales with the shard count here (the
+/// shard sweep measures placement overhead, not admission pressure).
+fn run_wave(backend: FfnBackend, shards: usize, slots: usize,
+            n_requests: usize, prompt_len: usize, max_new: usize,
+            kv_block_size: usize, prefill_chunk: usize,
+            params: SamplingParams)
+    -> (f64, f64, f64, f64, EngineStats) {
     let model = synthetic_model(4, 30.0, backend);
     let vocab = model.cfg.vocab_size;
     // paged KV pool sized so every slot can hold one request's worst
@@ -112,6 +120,7 @@ fn run_wave(backend: FfnBackend, slots: usize, n_requests: usize,
         prefill_chunk,
         route_density: 0.25,
         mode: ServeMode::Continuous,
+        shards,
     });
     let t0 = Instant::now();
     let rxs: Vec<_> = (0..n_requests)
@@ -141,7 +150,7 @@ fn run_wave(backend: FfnBackend, slots: usize, n_requests: usize,
         metrics.p50_ms(),
         metrics.p95_ms(),
         metrics.p50_first_token_ms(),
-        stats.backfilled,
+        stats,
     );
     server.shutdown();
     out
@@ -248,10 +257,11 @@ fn main() {
     for backend in [FfnBackend::Dense, FfnBackend::Twell] {
         let label = backend_label(backend);
         for &slots in slot_sweep {
-            let (tok_s, p50, p95, ttft, backfills) = run_wave(
-                backend, slots, n_requests, prompt_len, max_new,
+            let (tok_s, p50, p95, ttft, stats) = run_wave(
+                backend, 1, slots, n_requests, prompt_len, max_new,
                 kv_block_size, kv_block_size, SamplingParams::greedy(),
             );
+            let backfills = stats.backfilled;
             table.row(&[
                 label.to_string(),
                 slots.to_string(),
@@ -305,11 +315,12 @@ fn main() {
     for backend in [FfnBackend::Dense, FfnBackend::Twell] {
         let label = backend_label(backend);
         for &prefill_chunk in &[1usize, kv_block_size, long_prompt] {
-            let (tok_s, p50, p95, ttft, backfills) = run_wave(
-                backend, ttft_slots, ttft_requests, long_prompt,
+            let (tok_s, p50, p95, ttft, stats) = run_wave(
+                backend, 1, ttft_slots, ttft_requests, long_prompt,
                 ttft_max_new, kv_block_size, prefill_chunk,
                 SamplingParams::greedy(),
             );
+            let backfills = stats.backfilled;
             ttft_table.row(&[
                 label.to_string(),
                 prefill_chunk.to_string(),
@@ -371,10 +382,11 @@ fn main() {
     for backend in [FfnBackend::Dense, FfnBackend::Twell] {
         let label = backend_label(backend);
         for (sampling, params) in sweeps {
-            let (tok_s, p50, p95, ttft, backfills) = run_wave(
-                backend, sample_slots, n_requests, prompt_len, max_new,
-                kv_block_size, kv_block_size, params,
+            let (tok_s, p50, p95, ttft, stats) = run_wave(
+                backend, 1, sample_slots, n_requests, prompt_len,
+                max_new, kv_block_size, kv_block_size, params,
             );
+            let backfills = stats.backfilled;
             sample_table.row(&[
                 label.to_string(),
                 sampling.to_string(),
@@ -517,6 +529,70 @@ fn main() {
          path's skinny GEMMs should beat the per-row twell walk as \
          batch grows and beat dense everywhere the union stays far \
          below f."
+    );
+
+    // ---- shard sweep: N engine shards behind one admission queue,
+    // slots per shard, the total thread budget split evenly across
+    // shards (every shard's kernel steps still serialize on the one
+    // process-global pool, so this measures placement + admission
+    // overhead, not parallel model speedup) -----------------------------
+    let shard_slot_sweep: &[usize] = if smoke { &[2] } else { &[2, 4] };
+    let total_threads = threads;
+    println!(
+        "\n== shard sweep: 1/2/4 engine shards, one admission queue \
+         ==\n\
+         {n_requests} requests, prompt {prompt_len}, max_new \
+         {max_new}; slots are per shard and the {total_threads}-thread \
+         budget is split evenly across shards\n"
+    );
+    let mut shard_table = Table::new(&[
+        "backend", "shards", "slots", "tok/s", "p50 ms", "ttft p50",
+        "queue peak",
+    ]);
+    for backend in [FfnBackend::Dense, FfnBackend::Twell] {
+        let label = backend_label(backend);
+        for &shards in &[1usize, 2, 4] {
+            par::set_threads(
+                par::threads_per_shard(total_threads, shards),
+            );
+            for &slots in shard_slot_sweep {
+                let (tok_s, p50, p95, ttft, stats) = run_wave(
+                    backend, shards, slots, n_requests, prompt_len,
+                    max_new, kv_block_size, kv_block_size,
+                    SamplingParams::greedy(),
+                );
+                shard_table.row(&[
+                    label.to_string(),
+                    shards.to_string(),
+                    slots.to_string(),
+                    format!("{tok_s:.0}"),
+                    format!("{p50:.1}"),
+                    format!("{ttft:.1}"),
+                    stats.queue_peak.to_string(),
+                ]);
+                rows.push(Json::obj(vec![
+                    ("section", Json::str("shard_sweep")),
+                    ("backend", Json::str(label)),
+                    ("shards", Json::Num(shards as f64)),
+                    ("slots", Json::Num(slots as f64)),
+                    ("threads", Json::Num(par::num_threads() as f64)),
+                    ("prompt_len", Json::Num(prompt_len as f64)),
+                    ("tok_s", Json::Num(tok_s)),
+                    ("p50_ms", Json::Num(p50)),
+                    ("p95_ms", Json::Num(p95)),
+                    ("first_token_ms", Json::Num(ttft)),
+                    ("queue_peak", Json::Num(stats.queue_peak as f64)),
+                ]));
+            }
+        }
+    }
+    par::set_threads(total_threads);
+    shard_table.print();
+    println!(
+        "\nshape check: shards > 1 should hold tok/s near the 1-shard \
+         line (kernels serialize on the shared pool either way) while \
+         queue peak shrinks — more shards drain the admission queue \
+         faster."
     );
 
     let report = Json::obj(vec![

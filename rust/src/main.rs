@@ -209,12 +209,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let run = args.require("run")?;
     let n_requests = args.get_usize("requests", 16)?.max(1);
     let max_new = args.get_usize("max-new", 16)?;
+    // engine shards behind the one admission queue; each owns a full
+    // slots/kv-blocks pool and one engine thread
+    let shards = args.get_usize("shards", 1)?.max(1);
     // kernel worker-pool size (0 = auto: REPRO_THREADS or the core
-    // count).  Set before the first kernel call so the pool and every
-    // partition decision see it.
+    // count), interpreted as a TOTAL budget split across shards.  Set
+    // before the first kernel call so the pool and every partition
+    // decision see it.
     let threads = args.get_usize("threads", 0)?;
     if threads > 0 {
-        repro::sparse::par::set_threads(threads);
+        repro::sparse::par::set_threads(
+            repro::sparse::par::threads_per_shard(threads, shards),
+        );
+    } else if shards > 1 {
+        let auto = repro::sparse::par::num_threads();
+        repro::sparse::par::set_threads(
+            repro::sparse::par::threads_per_shard(auto, shards),
+        );
     }
     // scheduler tunables (continuous-batching engine, paged KV pool)
     let slots = args.get_usize("slots", 8)?;
@@ -261,6 +272,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         kv_blocks,
         prefill_chunk,
         route_density,
+        shards,
         mode,
     };
     let server = repro::serve::Server::start(model, policy);
@@ -317,11 +329,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         format!("t={temperature} top_k={top_k} top_p={top_p} seed={seed}")
     };
     println!(
-        "served {n_requests} requests ({mode:?}, {slots} slots, \
-         {kv_blocks} KV blocks x {kv_block_size} positions, prefill \
-         chunk {prefill_chunk}, {} pool threads, {sampling}): p50 \
-         {:.1} ms, p95 {:.1} ms, p99 {:.1} ms, ttft p50 {:.1} ms, \
-         {:.0} tok/s",
+        "served {n_requests} requests ({mode:?}, {shards} shards x \
+         {slots} slots, {kv_blocks} KV blocks x {kv_block_size} \
+         positions per shard, prefill chunk {prefill_chunk}, {} pool \
+         threads/shard, {sampling}): p50 {:.1} ms, p95 {:.1} ms, p99 \
+         {:.1} ms, ttft p50 {:.1} ms, {:.0} tok/s",
         repro::sparse::par::num_threads(),
         metrics.p50_ms(),
         metrics.p95_ms(),
@@ -329,14 +341,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
         metrics.p50_first_token_ms(),
         metrics.throughput_tok_s(wall)
     );
+    for (i, st) in server.shard_stats().iter().enumerate() {
+        println!(
+            "shard {i}: {} admissions ({} backfilled), {} steps, \
+             max active {}",
+            st.admissions, st.backfilled, st.steps, st.max_active
+        );
+    }
     println!(
-        "engine: {} steps, {} prefill chunks, {} admissions \
-         ({} backfilled), max active {}, {} abandoned, {} fallbacks",
+        "engine (merged): {} steps, {} prefill chunks, {} admissions \
+         ({} backfilled), max active {}, queue peak {}, {} abandoned, \
+         {} fallbacks",
         stats.steps,
         stats.prefill_chunks,
         stats.admissions,
         stats.backfilled,
         stats.max_active,
+        stats.queue_peak,
         stats.abandoned,
         stats.fallbacks
     );

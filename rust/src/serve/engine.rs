@@ -1,0 +1,373 @@
+//! Per-shard engine loops: each shard engine thread runs one of these
+//! functions for the lifetime of the `Server`.
+//!
+//! A shard owns its execution state outright — its `PagedKvCache`
+//! (the full `policy.kv_blocks` pool), its slot vector, and its
+//! zero-allocation `DecodeScratch` — and shares exactly two things
+//! with the rest of the process: the `AdmissionQueue` it pulls
+//! requests from, and the per-shard `EngineStats` mutex the facade
+//! snapshots.  Nothing else crosses shard boundaries, which is why
+//! adding shards multiplies capacity without adding synchronization
+//! to the decode hot path.
+//!
+//! Compute-wise the shards are *not* independent: every kernel call
+//! lands on the single process-global worker pool in `sparse::par`,
+//! whose one job slot serializes concurrent steps (see "Per-shard
+//! thread budgeting" in `par`'s docs).  That serialization is also
+//! what keeps sharded serving bit-exact: each step runs the same
+//! kernels over the same per-request state as a single-shard engine
+//! would, and each request's seeded sampler consumes draws only for
+//! its own tokens, so placement cannot perturb any stream.
+
+use std::sync::{Arc, Mutex};
+
+use crate::model::kv::{kv_positions_needed, sample_decode, DecodeScratch,
+                       PagedKvCache};
+use crate::model::sample::Sampler;
+use crate::model::Model;
+
+use super::admission::{AdmissionQueue, Pending, Wave};
+use super::stats::EngineStats;
+use super::{Completion, ServePolicy, Token};
+
+/// Serve one request start-to-finish on the sequential path.
+/// `queue_ms` was measured once, at dequeue.  Stats are recorded
+/// *before* the completion is sent — the send releases the caller,
+/// who may snapshot `Server::stats` immediately and must find this
+/// request already counted.
+fn serve_one(
+    model: &Model, p: Pending, queue_ms: f64,
+    stats: &Mutex<EngineStats>,
+) {
+    let mut first_token_ms = None;
+    let tokens = sample_decode(model, &p.req.prompt, p.req.max_new,
+                               p.req.params, |i, t| {
+        if i == 0 {
+            first_token_ms =
+                Some(p.enqueued.elapsed().as_secs_f64() * 1e3);
+        }
+        if let Some(stream) = &p.stream {
+            let _ = stream.send(Token { id: p.req.id, index: i, token: t });
+        }
+    });
+    let total_ms = p.enqueued.elapsed().as_secs_f64() * 1e3;
+    {
+        let mut st = stats.lock().unwrap();
+        st.admissions += 1;
+        st.record_latency(total_ms);
+    }
+    let _ = p.tx.send(Completion {
+        id: p.req.id,
+        tokens,
+        queue_ms,
+        first_token_ms: first_token_ms.unwrap_or(total_ms),
+        total_ms,
+        prefill_tokens: p.req.prompt.len(),
+    });
+}
+
+/// Legacy shard loop: collect a batch (waiting up to `max_wait` for it
+/// to fill), then serve each request sequentially.
+pub(crate) fn sequential_loop(
+    model: Arc<Model>, queue: Arc<AdmissionQueue>, policy: ServePolicy,
+    stats: Arc<Mutex<EngineStats>>,
+) {
+    while let Some(batch) =
+        queue.collect_batch(policy.slots, policy.max_wait)
+    {
+        // queue time ends here, at dequeue — measured exactly once
+        let dequeued: Vec<(Pending, f64)> = batch
+            .into_iter()
+            .map(|p| {
+                let q_ms = p.enqueued.elapsed().as_secs_f64() * 1e3;
+                (p, q_ms)
+            })
+            .collect();
+        for (p, q_ms) in dequeued {
+            if p.abandoned() {
+                // every receiver is gone: nobody can observe a result
+                stats.lock().unwrap().abandoned += 1;
+                continue;
+            }
+            serve_one(&model, p, q_ms, &stats);
+        }
+    }
+}
+
+/// Per-slot state of an in-flight sequence.
+struct Slot {
+    p: Pending,
+    queue_ms: f64,
+    /// next prompt token index to feed (== prompt.len() once decoding)
+    prompt_pos: usize,
+    tokens: Vec<u32>,
+    /// last sampled token, fed on the next iteration
+    next_feed: u32,
+    /// enqueue-to-first-sample latency, set when token 0 is chosen
+    first_token_ms: Option<f64>,
+    /// the request's private sampler (params + seeded RNG): one draw
+    /// per sampled token, so the stream is independent of how other
+    /// slots interleave with this one
+    sampler: Sampler,
+}
+
+/// The continuous-batching shard loop over this shard's paged KV pool.
+pub(crate) fn continuous_loop(
+    model: Arc<Model>, queue: Arc<AdmissionQueue>, policy: ServePolicy,
+    stats: Arc<Mutex<EngineStats>>,
+) {
+    let mut cache = PagedKvCache::new(
+        &model, policy.slots, policy.kv_blocks, policy.kv_block_size,
+    );
+    let mut slots: Vec<Option<Slot>> =
+        (0..policy.slots).map(|_| None).collect();
+    let mut active = 0usize;
+    let chunk = policy.prefill_chunk.max(1);
+    // the zero-allocation decode scratch: every engine step's
+    // activations, fused q|k|v, FFN intermediates and logits live in
+    // these buffers for the lifetime of the shard
+    let mut scratch =
+        DecodeScratch::new(&model, policy.slots * chunk, policy.slots);
+    // batch-contextual FFN routing policy (TwELL backend only): the
+    // scratch owns the knobs, the union buffers and the dispatch
+    // counters; the shard drains the counters into its `EngineStats`
+    // after every step
+    scratch.route.enabled = policy.route_density > 0.0;
+    scratch.route.max_density = policy.route_density;
+    enum Admit {
+        /// answered or installed this wave
+        Take,
+        /// worst case exceeds the whole pool: can never be served
+        Reject,
+        /// head of the queue waits for blocks / a slot to free up —
+        /// on *this* shard; another shard's wave may still take it
+        Wait,
+    }
+    loop {
+        // ---- admission wave: pull queued requests in FIFO order while
+        // this shard's block budget and slot pool cover them.  The scan
+        // runs under the queue lock (deterministic budget arithmetic
+        // only — no kernels, no other locks); an idle shard parks
+        // inside `poll` until work or shutdown arrives ----------------
+        let wave = queue.poll(active > 0, |items| {
+            let mut take = Vec::new();
+            let mut budget = cache.available_blocks();
+            let mut free_slots = policy.slots - active;
+            loop {
+                let decision = match items.front() {
+                    None => break,
+                    // abandoned or degenerate requests take no slot or
+                    // blocks, so they never have to wait for either
+                    Some(p) if p.abandoned() => Admit::Take,
+                    Some(p) if p.req.max_new == 0
+                        || p.req.prompt.is_empty() =>
+                    {
+                        Admit::Take
+                    }
+                    Some(p) => {
+                        let need = cache.blocks_for(kv_positions_needed(
+                            p.req.prompt.len(),
+                            p.req.max_new,
+                        ));
+                        if need > cache.num_blocks {
+                            Admit::Reject
+                        } else if free_slots == 0 || need > budget {
+                            Admit::Wait
+                        } else {
+                            budget -= need;
+                            free_slots -= 1;
+                            Admit::Take
+                        }
+                    }
+                };
+                match decision {
+                    Admit::Take => {
+                        take.push(items.pop_front().unwrap());
+                    }
+                    Admit::Reject => {
+                        // unreachable through submit (which validates
+                        // against the pool), kept as a safety net so a
+                        // broken invariant degrades to a dropped
+                        // channel instead of an admission livelock
+                        let p = items.pop_front().unwrap();
+                        log::warn!(
+                            "request {} needs more KV than the whole \
+                             pool ({} blocks); rejecting",
+                            p.req.id,
+                            cache.num_blocks
+                        );
+                    }
+                    Admit::Wait => break, // FIFO: keep arrival order
+                }
+            }
+            take
+        });
+        let admitted = match wave {
+            Wave::Admitted(v) => v,
+            Wave::Stopped => return,
+        };
+        for p in admitted {
+            // queue time ends here, at dequeue — measured exactly once
+            let queue_ms = p.enqueued.elapsed().as_secs_f64() * 1e3;
+            if p.abandoned() {
+                // the caller vanished while the request was queued:
+                // don't spend a slot (or any KV blocks) on it
+                stats.lock().unwrap().abandoned += 1;
+                continue;
+            }
+            if p.req.max_new == 0 || p.req.prompt.is_empty() {
+                // nothing to generate — an empty prompt has no logits
+                // to sample (see `argmax`): empty completion, no slot.
+                // Stats land before the send (see `serve_one`).
+                let total_ms = p.enqueued.elapsed().as_secs_f64() * 1e3;
+                stats.lock().unwrap().record_latency(total_ms);
+                let _ = p.tx.send(Completion {
+                    id: p.req.id,
+                    tokens: Vec::new(),
+                    queue_ms,
+                    first_token_ms: total_ms,
+                    total_ms,
+                    prefill_tokens: p.req.prompt.len(),
+                });
+                continue;
+            }
+            let si = slots
+                .iter()
+                .position(|s| s.is_none())
+                .expect("admission beyond free slots");
+            cache.reserve(
+                si,
+                kv_positions_needed(p.req.prompt.len(), p.req.max_new),
+            );
+            // a true backfill: some already-admitted sequence has made
+            // progress, i.e. this admission lands mid-decode (not in
+            // the same first wave into an idle shard)
+            let backfill = slots.iter().flatten().any(|s| {
+                s.prompt_pos > 0 || !s.tokens.is_empty()
+            });
+            let sampler = Sampler::new(p.req.params);
+            slots[si] = Some(Slot {
+                p,
+                queue_ms,
+                prompt_pos: 0,
+                tokens: Vec::new(),
+                next_feed: 0,
+                first_token_ms: None,
+                sampler,
+            });
+            active += 1;
+            let mut st = stats.lock().unwrap();
+            st.admissions += 1;
+            if backfill {
+                st.backfilled += 1;
+            }
+            st.max_active = st.max_active.max(active);
+        }
+        // ---- reap abandoned sequences: a caller that dropped every
+        // receiver can never observe the result, so decoding on would
+        // only burn compute and strand KV blocks --------------------------
+        for (si, entry) in slots.iter_mut().enumerate() {
+            if entry.as_ref().is_some_and(|s| s.p.abandoned()) {
+                *entry = None;
+                cache.release_slot(si);
+                active -= 1;
+                stats.lock().unwrap().abandoned += 1;
+            }
+        }
+        if active == 0 {
+            continue;
+        }
+
+        // ---- one batched engine step over every active slot: a
+        // prefilling slot feeds its next prompt chunk (up to one KV
+        // block by default), a decoding slot feeds its last sample ----
+        let prefilling = slots
+            .iter()
+            .flatten()
+            .filter(|s| s.prompt_pos < s.p.req.prompt.len())
+            .count() as u64;
+        let feeds: Vec<(usize, &[u32])> = slots
+            .iter()
+            .enumerate()
+            .filter_map(|(si, s)| {
+                s.as_ref().map(|s| {
+                    let span: &[u32] =
+                        if s.prompt_pos < s.p.req.prompt.len() {
+                            let end = (s.prompt_pos + chunk)
+                                .min(s.p.req.prompt.len());
+                            &s.p.req.prompt[s.prompt_pos..end]
+                        } else {
+                            std::slice::from_ref(&s.next_feed)
+                        };
+                    (si, span)
+                })
+            })
+            .collect();
+        let logits =
+            model.prefill_decode_step_into(&mut cache, &feeds, &mut scratch);
+        let fed: Vec<(usize, usize)> =
+            feeds.iter().map(|&(si, span)| (si, span.len())).collect();
+        drop(feeds);
+        {
+            let mut st = stats.lock().unwrap();
+            st.steps += 1;
+            st.prefill_chunks += prefilling;
+            let r = scratch.route.stats.take();
+            st.ffn_row += r.row;
+            st.ffn_col += r.col;
+            st.ffn_routed += r.routed;
+            st.ffn_fallback += r.fallback;
+            st.union_density_sum += r.density_sum;
+            st.union_density_calls += r.density_calls;
+        }
+
+        // ---- sample / retire --------------------------------------------
+        for (row, &(si, n_fed)) in fed.iter().enumerate() {
+            let slot = slots[si].as_mut().unwrap();
+            if slot.prompt_pos < slot.p.req.prompt.len() {
+                slot.prompt_pos += n_fed;
+                if slot.prompt_pos < slot.p.req.prompt.len() {
+                    continue; // still prefilling
+                }
+                // the prompt's last logits arrive with its final
+                // chunk: fall through and sample the first token
+            }
+            let next = slot.sampler.sample(logits.row(row)) as u32;
+            let index = slot.tokens.len();
+            if index == 0 {
+                slot.first_token_ms =
+                    Some(slot.p.enqueued.elapsed().as_secs_f64() * 1e3);
+            }
+            slot.tokens.push(next);
+            if let Some(stream) = &slot.p.stream {
+                let _ = stream.send(Token {
+                    id: slot.p.req.id,
+                    index,
+                    token: next,
+                });
+            }
+            if slot.tokens.len() >= slot.p.req.max_new {
+                // finished: retire immediately — blocks go back to the
+                // free list and the slot backfills next iteration (no
+                // batch barrier)
+                let s = slots[si].take().unwrap();
+                cache.release_slot(si);
+                active -= 1;
+                let total_ms =
+                    s.p.enqueued.elapsed().as_secs_f64() * 1e3;
+                // stats land before the send (see `serve_one`)
+                stats.lock().unwrap().record_latency(total_ms);
+                let _ = s.p.tx.send(Completion {
+                    id: s.p.req.id,
+                    tokens: s.tokens,
+                    queue_ms: s.queue_ms,
+                    first_token_ms: s.first_token_ms.unwrap_or(total_ms),
+                    total_ms,
+                    prefill_tokens: s.p.req.prompt.len(),
+                });
+            } else {
+                slot.next_feed = next;
+            }
+        }
+    }
+}

@@ -1,18 +1,19 @@
 //! Serving layer: continuous-batching inference engine over the rust
 //! model (the vllm-shaped L3 component).
 //!
-//! Requests enter a shared queue; the worker thread owns the model plus
-//! a *paged* KV pool (`PagedKvCache`): physical KV storage is a global
-//! array of fixed-size blocks (`kv_block_size` positions each,
-//! `kv_blocks` total), and each admitted sequence maps its logical
-//! positions onto physical blocks through a per-slot block table that
-//! grows on demand.  Long and short requests therefore share physical
-//! KV memory instead of each stranding a fixed `max_context` region,
-//! and an oversized prompt needs no special path — any request that
-//! fits the pool is batched like every other.
+//! Requests enter a shared admission queue; each *shard* engine thread
+//! owns the model (shared read-only) plus a *paged* KV pool
+//! (`PagedKvCache`): physical KV storage is a per-shard array of
+//! fixed-size blocks (`kv_block_size` positions each, `kv_blocks`
+//! total), and each admitted sequence maps its logical positions onto
+//! physical blocks through a per-slot block table that grows on
+//! demand.  Long and short requests therefore share physical KV
+//! memory instead of each stranding a fixed `max_context` region, and
+//! an oversized prompt needs no special path — any request that fits
+//! the pool is batched like every other.
 //!
-//! Every engine iteration the worker (1) admits queued requests in
-//! FIFO order while a sequence slot is free AND the pool's block budget
+//! Every engine iteration a shard (1) admits queued requests in FIFO
+//! order while a sequence slot is free AND its pool's block budget
 //! covers the request's worst case (`kv_positions_needed`) — under
 //! memory pressure admission *waits* for retiring sequences to return
 //! blocks rather than overcommitting — (2) retires sequences whose
@@ -24,7 +25,7 @@
 //! batch presents a `(sum of span lengths, d)` activation matrix to
 //! the FFN backends (the TwELL pipeline runs batched exactly where it
 //! pays most: long-prompt prefill) and writes whole blocks of K/V rows
-//! per step — every buffer on that path lives in the engine's one
+//! per step — every buffer on that path lives in the shard's one
 //! `DecodeScratch` (no per-step heap allocation), the kernels run on
 //! the persistent worker pool, and skinny decode batches dispatch
 //! column-parallel instead of collapsing onto one core — and (4)
@@ -40,9 +41,9 @@
 //!
 //! Degenerate requests (empty prompt, or `max_new == 0`) are answered
 //! with an empty `Completion`: an empty prompt produces no logits, so
-//! there is nothing to sample.  A request whose worst case exceeds the
-//! *entire* pool could never be admitted, so `submit` rejects it up
-//! front with an actionable error instead of queueing it forever.
+//! there is nothing to sample.  A request whose worst case exceeds an
+//! *entire* shard pool could never be admitted, so `submit` rejects it
+//! up front with an actionable error instead of queueing it forever.
 //!
 //! Per-token streaming: `submit_streaming` returns an `Rx<Token>`
 //! that yields each generated token as it is chosen, alongside the
@@ -64,20 +65,72 @@
 //! `ServeMode::Sequential` as the parity baseline.  Both paths share
 //! the same sampler, so a given `(seed, prompt)` yields the same
 //! tokens on either.
+//!
+//! # Sharded architecture (`ServePolicy::shards`)
+//!
+//! The serve layer is three submodules behind this facade:
+//!
+//! * `serve/admission.rs` — the shared FIFO admission queue + stop
+//!   flag every shard pulls from, built on the `util::sync` shim so
+//!   its handoff protocol model-checks under loom
+//!   (`admission::loom_tests`).
+//! * `serve/engine.rs` — the per-shard continuous/sequential loops.
+//!   Each shard owns a full `PagedKvCache` (`policy.kv_blocks`
+//!   blocks), `policy.slots` sequence slots and one `DecodeScratch`;
+//!   total serving capacity is `shards ×` each of those.
+//! * `serve/stats.rs` — [`EngineStats`] + cross-shard merging
+//!   (counters sum, gauges max, histograms add element-wise).
+//!
+//! **Shard topology.** `Server::start` spawns `policy.shards` engine
+//! threads (through `util::sync::spawn_named`, named
+//! `repro-serve-<i>`), each running `policy.mode`'s loop against the
+//! one shared queue.  The model sits behind an `Arc`, read-only;
+//! every mutable structure (cache, slots, scratch, stats) is
+//! per-shard.  Kernels from all shards serialize on the
+//! process-global worker pool (`sparse::par` has one job slot), so
+//! callers size the pool with `par::threads_per_shard(total, shards)`
+//! — the `--threads` budget is a *total* split across shards.
+//!
+//! **Placement policy.** Pull-based work stealing, not assignment: an
+//! idle shard parks on the queue condvar; a push wakes all shards and
+//! whichever wins the lock admits the FIFO head under its own
+//! slot/block budget.  A head too big for a busy shard's free blocks
+//! stays queued (FIFO order is never reordered) and the next shard
+//! with capacity takes it.  There is no shard affinity to tune —
+//! per-request seeded samplers make every completion independent of
+//! placement, which the cross-shard parity tests pin bit-exactly at
+//! shards {1, 2, 4} on both FFN backends.
+//!
+//! **Lock order.** The queue mutex and the per-shard stats mutexes
+//! are leaves: none is ever held while acquiring another, and none is
+//! ever held across a kernel call.  The admission scan runs under the
+//! queue lock but is pure slot/block-budget arithmetic.
+//!
+//! **Admission protocol invariants** (loom-modeled): every pushed
+//! request is dispatched to exactly one shard; shutdown drains the
+//! queue before any shard exits; no lost wakeups (`stop` lives inside
+//! the queue mutex, so there is no check-then-sleep race); a shard
+//! with active sequences never blocks on an empty queue.
 
-use std::collections::VecDeque;
+mod admission;
+mod engine;
+mod stats;
+
+pub use stats::{EngineStats, ServeMetrics, LATENCY_BUCKETS};
+
 use std::ops::Deref;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Condvar, Mutex, Weak};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
-use crate::model::kv::{kv_positions_needed, sample_decode, DecodeScratch,
-                       PagedKvCache};
-use crate::model::sample::{Sampler, SamplingParams};
+use crate::model::kv::kv_positions_needed;
+use crate::model::sample::SamplingParams;
 use crate::model::Model;
+
+use admission::{AdmissionQueue, Pending};
 
 #[derive(Clone, Debug)]
 pub struct Request {
@@ -131,28 +184,6 @@ impl<T> Deref for Rx<T> {
     }
 }
 
-struct Pending {
-    req: Request,
-    enqueued: Instant,
-    tx: Sender<Completion>,
-    stream: Option<Sender<Token>>,
-    /// liveness of the caller-side receivers (completion + optional
-    /// stream): when every watch fails to upgrade, nobody can observe
-    /// this request's results anymore
-    watch: Vec<Weak<()>>,
-}
-
-impl Pending {
-    fn abandoned(&self) -> bool {
-        self.watch.iter().all(|w| w.upgrade().is_none())
-    }
-}
-
-#[derive(Default)]
-struct Queue {
-    items: VecDeque<Pending>,
-}
-
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ServeMode {
     /// Legacy collect-then-serialize loop (kept for parity testing).
@@ -165,16 +196,16 @@ pub enum ServeMode {
 /// these).
 #[derive(Clone, Copy, Debug)]
 pub struct ServePolicy {
-    /// KV slot pool size: max concurrently decoding sequences
-    /// (continuous) or max collected batch (sequential).
+    /// KV slot pool size *per shard*: max concurrently decoding
+    /// sequences (continuous) or max collected batch (sequential).
     pub slots: usize,
     /// Sequential mode: how long to wait for the batch to fill.
     pub max_wait: Duration,
     /// Positions per physical KV block (paging granularity).
     pub kv_block_size: usize,
-    /// Total physical KV blocks shared by all slots; the admission
-    /// budget is `kv_blocks * kv_block_size` positions pool-wide, not
-    /// per slot.
+    /// Physical KV blocks *per shard*, shared by that shard's slots;
+    /// a shard's admission budget is `kv_blocks * kv_block_size`
+    /// positions pool-wide, not per slot.
     pub kv_blocks: usize,
     /// Max prompt tokens fed per prefilling slot per engine iteration
     /// (continuous mode; clamped to >= 1).  One KV block per step —
@@ -190,6 +221,11 @@ pub struct ServePolicy {
     /// fall back to the fused row path.  `0.0` disables routing
     /// entirely.  Ignored by the dense backend.
     pub route_density: f32,
+    /// Engine shards behind the shared admission queue (clamped to
+    /// >= 1).  Each shard owns its own full `slots`/`kv_blocks`
+    /// capacity and one engine thread; see the module docs for the
+    /// topology and placement policy.
+    pub shards: usize,
     pub mode: ServeMode,
 }
 
@@ -202,107 +238,58 @@ impl Default for ServePolicy {
             kv_blocks: 256,
             prefill_chunk: 16,
             route_density: crate::sparse::route::DEFAULT_ROUTE_DENSITY,
+            shards: 1,
             mode: ServeMode::Continuous,
         }
     }
 }
 
-/// Engine counters, exposed for tests and the serve CLI.
-#[derive(Clone, Copy, Debug, Default)]
-pub struct EngineStats {
-    /// requests admitted into a KV slot
-    pub admissions: u64,
-    /// admissions that landed while other sequences were mid-decode —
-    /// i.e. backfills into a freed slot, the no-batch-barrier property
-    pub backfilled: u64,
-    /// batched engine steps executed
-    pub steps: u64,
-    /// prompt chunks fed (one per prefilling slot per engine step): a
-    /// length-L prompt finishes prefill in `ceil(L / prefill_chunk)`
-    /// chunks
-    pub prefill_chunks: u64,
-    /// requests retired early because the caller dropped every
-    /// receiver; their KV blocks returned to the pool immediately
-    pub abandoned: u64,
-    /// most simultaneously active slots observed
-    pub max_active: usize,
-    /// requests routed through the (removed) sequential fallback —
-    /// always 0 since the paged cache serves any request that fits the
-    /// pool; kept so dashboards and the acceptance checks can assert it
-    pub fallbacks: u64,
-    /// FFN layer-steps dispatched row-parallel (tall batches)
-    pub ffn_row: u64,
-    /// FFN layer-steps dispatched column-parallel (skinny batches)
-    pub ffn_col: u64,
-    /// FFN layer-steps executed by the routed union-gathered kernel
-    pub ffn_routed: u64,
-    /// FFN layer-steps where routing was considered but fell back to
-    /// the fused row path (union too dense, or a mixed
-    /// prefill+decode feed)
-    pub ffn_fallback: u64,
-    /// sum of measured union densities (over `union_density_calls`
-    /// pure-decode routing decisions); see `mean_union_density`
-    pub union_density_sum: f64,
-    /// number of union-density measurements folded into
-    /// `union_density_sum`
-    pub union_density_calls: u64,
-}
-
-impl EngineStats {
-    /// Mean batch-union FFN column density over every pure-decode
-    /// routing decision, or 0 when routing never measured one.
-    pub fn mean_union_density(&self) -> f64 {
-        if self.union_density_calls == 0 {
-            0.0
-        } else {
-            self.union_density_sum / self.union_density_calls as f64
-        }
-    }
-}
-
 pub struct Server {
-    queue: Arc<(Mutex<Queue>, Condvar)>,
-    stop: Arc<AtomicBool>,
+    queue: Arc<AdmissionQueue>,
     next_id: AtomicU64,
-    worker: Option<crate::util::sync::JoinHandle<()>>,
-    stats: Arc<Mutex<EngineStats>>,
+    workers: Vec<crate::util::sync::JoinHandle<()>>,
+    shard_stats: Vec<Arc<Mutex<EngineStats>>>,
     pub policy: ServePolicy,
 }
 
 impl Server {
-    /// Spawn the worker thread owning the model.
+    /// Spawn `policy.shards` engine threads sharing the model and one
+    /// admission queue.
     pub fn start(model: Model, policy: ServePolicy) -> Server {
         assert!(policy.slots > 0, "need at least one slot");
-        let queue = Arc::new((Mutex::new(Queue::default()), Condvar::new()));
-        let stop = Arc::new(AtomicBool::new(false));
-        let stats = Arc::new(Mutex::new(EngineStats::default()));
-        let q2 = queue.clone();
-        let s2 = stop.clone();
-        let st2 = stats.clone();
-        let worker =
-            crate::util::sync::spawn_named("repro-serve", move || {
-                match policy.mode {
+        let shards = policy.shards.max(1);
+        let queue = Arc::new(AdmissionQueue::new());
+        let model = Arc::new(model);
+        let mut workers = Vec::with_capacity(shards);
+        let mut shard_stats = Vec::with_capacity(shards);
+        for i in 0..shards {
+            let stats = Arc::new(Mutex::new(EngineStats::default()));
+            let (m, q, st) = (model.clone(), queue.clone(), stats.clone());
+            workers.push(crate::util::sync::spawn_named(
+                &format!("repro-serve-{i}"),
+                move || match policy.mode {
                     ServeMode::Sequential => {
-                        sequential_loop(model, q2, s2, policy, st2)
+                        engine::sequential_loop(m, q, policy, st)
                     }
                     ServeMode::Continuous => {
-                        continuous_loop(model, q2, s2, policy, st2)
+                        engine::continuous_loop(m, q, policy, st)
                     }
-                }
-            });
+                },
+            ));
+            shard_stats.push(stats);
+        }
         Server {
             queue,
-            stop,
             next_id: AtomicU64::new(0),
-            worker: Some(worker),
-            stats,
+            workers,
+            shard_stats,
             policy,
         }
     }
 
     /// Enqueue a greedy request; returns (id, completion receiver).
-    /// Errors if the request's worst-case KV footprint exceeds the
-    /// whole pool (it could never be admitted).
+    /// Errors if the request's worst-case KV footprint exceeds a whole
+    /// shard pool (it could never be admitted).
     pub fn submit(&self, prompt: Vec<u32>, max_new: usize)
         -> Result<(u64, Rx<Completion>)> {
         self.submit_sampled(prompt, max_new, SamplingParams::greedy())
@@ -347,6 +334,7 @@ impl Server {
         // Degenerate requests (empty prompt / max_new == 0) are exempt:
         // the engine answers them with an empty completion using no KV.
         // The sequential path sizes its cache per request, no limit.
+        // Every shard owns a full pool, so the bound is per shard.
         if self.policy.mode == ServeMode::Continuous
             && !prompt.is_empty()
             && max_new > 0
@@ -375,31 +363,46 @@ impl Server {
         } else {
             (None, None)
         };
-        let (lock, cv) = &*self.queue;
-        lock.lock().unwrap().items.push_back(Pending {
+        self.queue.push(Pending {
             req: Request { id, prompt, max_new, params },
             enqueued: Instant::now(),
             tx,
             stream: stream_tx,
             watch,
         });
-        cv.notify_one();
         Ok((id, stream_rx, rx))
     }
 
     pub fn queue_len(&self) -> usize {
-        self.queue.0.lock().unwrap().items.len()
+        self.queue.len()
     }
 
-    /// Snapshot of the engine counters.
+    /// Merged snapshot of the engine counters across every shard:
+    /// counters sum, gauges (`max_active`, `queue_peak`) take the
+    /// max, the latency histogram adds element-wise.
     pub fn stats(&self) -> EngineStats {
-        *self.stats.lock().unwrap()
+        EngineStats::merged(&self.shard_stats())
+    }
+
+    /// Per-shard snapshots of the engine counters, each stamped with
+    /// the shared queue's peak depth (the queue belongs to no single
+    /// shard, so every snapshot carries the same `queue_peak` and the
+    /// merge's max preserves it).
+    pub fn shard_stats(&self) -> Vec<EngineStats> {
+        let peak = self.queue.peak();
+        self.shard_stats
+            .iter()
+            .map(|s| {
+                let mut st = *s.lock().unwrap();
+                st.queue_peak = st.queue_peak.max(peak);
+                st
+            })
+            .collect()
     }
 
     pub fn shutdown(mut self) {
-        self.stop.store(true, Ordering::Relaxed);
-        self.queue.1.notify_all();
-        if let Some(w) = self.worker.take() {
+        self.queue.shutdown();
+        for w in self.workers.drain(..) {
             let _ = w.join();
         }
     }
@@ -407,430 +410,10 @@ impl Server {
 
 impl Drop for Server {
     fn drop(&mut self) {
-        self.stop.store(true, Ordering::Relaxed);
-        self.queue.1.notify_all();
-        if let Some(w) = self.worker.take() {
+        self.queue.shutdown();
+        for w in self.workers.drain(..) {
             let _ = w.join();
         }
-    }
-}
-
-/// Serve one request start-to-finish on the sequential path.
-/// `queue_ms` was measured once, at dequeue.
-fn serve_one(model: &Model, p: Pending, queue_ms: f64) {
-    let mut first_token_ms = None;
-    let tokens = sample_decode(model, &p.req.prompt, p.req.max_new,
-                               p.req.params, |i, t| {
-        if i == 0 {
-            first_token_ms =
-                Some(p.enqueued.elapsed().as_secs_f64() * 1e3);
-        }
-        if let Some(stream) = &p.stream {
-            let _ = stream.send(Token { id: p.req.id, index: i, token: t });
-        }
-    });
-    let total_ms = p.enqueued.elapsed().as_secs_f64() * 1e3;
-    let _ = p.tx.send(Completion {
-        id: p.req.id,
-        tokens,
-        queue_ms,
-        first_token_ms: first_token_ms.unwrap_or(total_ms),
-        total_ms,
-        prefill_tokens: p.req.prompt.len(),
-    });
-}
-
-/// Legacy worker: collect a batch (waiting up to `max_wait` for it to
-/// fill), then serve each request sequentially.
-fn sequential_loop(
-    model: Model, queue: Arc<(Mutex<Queue>, Condvar)>,
-    stop: Arc<AtomicBool>, policy: ServePolicy,
-    stats: Arc<Mutex<EngineStats>>,
-) {
-    loop {
-        let batch: Vec<Pending> = {
-            let (lock, cv) = &*queue;
-            let mut q = lock.lock().unwrap();
-            while q.items.is_empty() && !stop.load(Ordering::Relaxed) {
-                let (qq, _timeout) =
-                    cv.wait_timeout(q, Duration::from_millis(50)).unwrap();
-                q = qq;
-            }
-            if stop.load(Ordering::Relaxed) && q.items.is_empty() {
-                return;
-            }
-            // fill the batch up to max_wait — but not while stopping:
-            // a shutdown with requests still queued used to sit out
-            // the whole deadline before draining
-            let deadline = Instant::now() + policy.max_wait;
-            while !stop.load(Ordering::Relaxed)
-                && q.items.len() < policy.slots
-                && Instant::now() < deadline
-            {
-                let (qq, timeout) = cv
-                    .wait_timeout(q, deadline - Instant::now())
-                    .unwrap();
-                q = qq;
-                if timeout.timed_out() {
-                    break;
-                }
-            }
-            let take = q.items.len().min(policy.slots);
-            q.items.drain(..take).collect()
-        };
-        // queue time ends here, at dequeue — measured exactly once
-        let dequeued: Vec<(Pending, f64)> = batch
-            .into_iter()
-            .map(|p| {
-                let q_ms = p.enqueued.elapsed().as_secs_f64() * 1e3;
-                (p, q_ms)
-            })
-            .collect();
-        for (p, q_ms) in dequeued {
-            if p.abandoned() {
-                // every receiver is gone: nobody can observe a result
-                stats.lock().unwrap().abandoned += 1;
-                continue;
-            }
-            serve_one(&model, p, q_ms);
-            stats.lock().unwrap().admissions += 1;
-        }
-    }
-}
-
-/// Per-slot state of an in-flight sequence.
-struct Slot {
-    p: Pending,
-    queue_ms: f64,
-    /// next prompt token index to feed (== prompt.len() once decoding)
-    prompt_pos: usize,
-    tokens: Vec<u32>,
-    /// last sampled token, fed on the next iteration
-    next_feed: u32,
-    /// enqueue-to-first-sample latency, set when token 0 is chosen
-    first_token_ms: Option<f64>,
-    /// the request's private sampler (params + seeded RNG): one draw
-    /// per sampled token, so the stream is independent of how other
-    /// slots interleave with this one
-    sampler: Sampler,
-}
-
-/// The continuous-batching engine loop over the paged KV pool.
-fn continuous_loop(
-    model: Model, queue: Arc<(Mutex<Queue>, Condvar)>,
-    stop: Arc<AtomicBool>, policy: ServePolicy,
-    stats: Arc<Mutex<EngineStats>>,
-) {
-    let mut cache = PagedKvCache::new(
-        &model, policy.slots, policy.kv_blocks, policy.kv_block_size,
-    );
-    let mut slots: Vec<Option<Slot>> =
-        (0..policy.slots).map(|_| None).collect();
-    let mut active = 0usize;
-    let chunk = policy.prefill_chunk.max(1);
-    // the zero-allocation decode scratch: every engine step's
-    // activations, fused q|k|v, FFN intermediates and logits live in
-    // these buffers for the lifetime of the engine
-    let mut scratch =
-        DecodeScratch::new(&model, policy.slots * chunk, policy.slots);
-    // batch-contextual FFN routing policy (TwELL backend only): the
-    // scratch owns the knobs, the union buffers and the dispatch
-    // counters; the engine drains the counters into `EngineStats`
-    // after every step
-    scratch.route.enabled = policy.route_density > 0.0;
-    scratch.route.max_density = policy.route_density;
-    enum Admit {
-        /// answered or installed this wave
-        Take,
-        /// worst case exceeds the whole pool: can never be served
-        Reject,
-        /// head of the queue waits for blocks / a slot to free up
-        Wait,
-    }
-    loop {
-        // ---- admission: pull queued requests in FIFO order while the
-        // block budget and slot pool cover them ------------------------
-        let admitted: Vec<Pending> = {
-            let (lock, cv) = &*queue;
-            let mut q = lock.lock().unwrap();
-            while active == 0 && q.items.is_empty() {
-                if stop.load(Ordering::Relaxed) {
-                    return;
-                }
-                let (qq, _) = cv
-                    .wait_timeout(q, Duration::from_millis(50))
-                    .unwrap();
-                q = qq;
-            }
-            let mut take = Vec::new();
-            let mut budget = cache.available_blocks();
-            let mut free_slots = policy.slots - active;
-            loop {
-                let decision = match q.items.front() {
-                    None => break,
-                    // abandoned or degenerate requests take no slot or
-                    // blocks, so they never have to wait for either
-                    Some(p) if p.abandoned() => Admit::Take,
-                    Some(p) if p.req.max_new == 0
-                        || p.req.prompt.is_empty() =>
-                    {
-                        Admit::Take
-                    }
-                    Some(p) => {
-                        let need = cache.blocks_for(kv_positions_needed(
-                            p.req.prompt.len(),
-                            p.req.max_new,
-                        ));
-                        if need > cache.num_blocks {
-                            Admit::Reject
-                        } else if free_slots == 0 || need > budget {
-                            Admit::Wait
-                        } else {
-                            budget -= need;
-                            free_slots -= 1;
-                            Admit::Take
-                        }
-                    }
-                };
-                match decision {
-                    Admit::Take => {
-                        take.push(q.items.pop_front().unwrap());
-                    }
-                    Admit::Reject => {
-                        // unreachable through submit (which validates
-                        // against the pool), kept as a safety net so a
-                        // broken invariant degrades to a dropped
-                        // channel instead of an admission livelock
-                        let p = q.items.pop_front().unwrap();
-                        log::warn!(
-                            "request {} needs more KV than the whole \
-                             pool ({} blocks); rejecting",
-                            p.req.id,
-                            cache.num_blocks
-                        );
-                    }
-                    Admit::Wait => break, // FIFO: keep arrival order
-                }
-            }
-            take
-        };
-        for p in admitted {
-            // queue time ends here, at dequeue — measured exactly once
-            let queue_ms = p.enqueued.elapsed().as_secs_f64() * 1e3;
-            if p.abandoned() {
-                // the caller vanished while the request was queued:
-                // don't spend a slot (or any KV blocks) on it
-                stats.lock().unwrap().abandoned += 1;
-                continue;
-            }
-            if p.req.max_new == 0 || p.req.prompt.is_empty() {
-                // nothing to generate — an empty prompt has no logits
-                // to sample (see `argmax`): empty completion, no slot
-                let total_ms = p.enqueued.elapsed().as_secs_f64() * 1e3;
-                let _ = p.tx.send(Completion {
-                    id: p.req.id,
-                    tokens: Vec::new(),
-                    queue_ms,
-                    first_token_ms: total_ms,
-                    total_ms,
-                    prefill_tokens: p.req.prompt.len(),
-                });
-                continue;
-            }
-            let si = slots
-                .iter()
-                .position(|s| s.is_none())
-                .expect("admission beyond free slots");
-            cache.reserve(
-                si,
-                kv_positions_needed(p.req.prompt.len(), p.req.max_new),
-            );
-            // a true backfill: some already-admitted sequence has made
-            // progress, i.e. this admission lands mid-decode (not in
-            // the same first wave into an idle engine)
-            let backfill = slots.iter().flatten().any(|s| {
-                s.prompt_pos > 0 || !s.tokens.is_empty()
-            });
-            let sampler = Sampler::new(p.req.params);
-            slots[si] = Some(Slot {
-                p,
-                queue_ms,
-                prompt_pos: 0,
-                tokens: Vec::new(),
-                next_feed: 0,
-                first_token_ms: None,
-                sampler,
-            });
-            active += 1;
-            let mut st = stats.lock().unwrap();
-            st.admissions += 1;
-            if backfill {
-                st.backfilled += 1;
-            }
-            st.max_active = st.max_active.max(active);
-        }
-        // ---- reap abandoned sequences: a caller that dropped every
-        // receiver can never observe the result, so decoding on would
-        // only burn compute and strand KV blocks --------------------------
-        for (si, entry) in slots.iter_mut().enumerate() {
-            if entry.as_ref().is_some_and(|s| s.p.abandoned()) {
-                *entry = None;
-                cache.release_slot(si);
-                active -= 1;
-                stats.lock().unwrap().abandoned += 1;
-            }
-        }
-        if active == 0 {
-            continue;
-        }
-
-        // ---- one batched engine step over every active slot: a
-        // prefilling slot feeds its next prompt chunk (up to one KV
-        // block by default), a decoding slot feeds its last sample ----
-        let prefilling = slots
-            .iter()
-            .flatten()
-            .filter(|s| s.prompt_pos < s.p.req.prompt.len())
-            .count() as u64;
-        let feeds: Vec<(usize, &[u32])> = slots
-            .iter()
-            .enumerate()
-            .filter_map(|(si, s)| {
-                s.as_ref().map(|s| {
-                    let span: &[u32] =
-                        if s.prompt_pos < s.p.req.prompt.len() {
-                            let end = (s.prompt_pos + chunk)
-                                .min(s.p.req.prompt.len());
-                            &s.p.req.prompt[s.prompt_pos..end]
-                        } else {
-                            std::slice::from_ref(&s.next_feed)
-                        };
-                    (si, span)
-                })
-            })
-            .collect();
-        let logits =
-            model.prefill_decode_step_into(&mut cache, &feeds, &mut scratch);
-        let fed: Vec<(usize, usize)> =
-            feeds.iter().map(|&(si, span)| (si, span.len())).collect();
-        drop(feeds);
-        {
-            let mut st = stats.lock().unwrap();
-            st.steps += 1;
-            st.prefill_chunks += prefilling;
-            let r = scratch.route.stats.take();
-            st.ffn_row += r.row;
-            st.ffn_col += r.col;
-            st.ffn_routed += r.routed;
-            st.ffn_fallback += r.fallback;
-            st.union_density_sum += r.density_sum;
-            st.union_density_calls += r.density_calls;
-        }
-
-        // ---- sample / retire --------------------------------------------
-        for (row, &(si, n_fed)) in fed.iter().enumerate() {
-            let slot = slots[si].as_mut().unwrap();
-            if slot.prompt_pos < slot.p.req.prompt.len() {
-                slot.prompt_pos += n_fed;
-                if slot.prompt_pos < slot.p.req.prompt.len() {
-                    continue; // still prefilling
-                }
-                // the prompt's last logits arrive with its final
-                // chunk: fall through and sample the first token
-            }
-            let next = slot.sampler.sample(logits.row(row)) as u32;
-            let index = slot.tokens.len();
-            if index == 0 {
-                slot.first_token_ms =
-                    Some(slot.p.enqueued.elapsed().as_secs_f64() * 1e3);
-            }
-            slot.tokens.push(next);
-            if let Some(stream) = &slot.p.stream {
-                let _ = stream.send(Token {
-                    id: slot.p.req.id,
-                    index,
-                    token: next,
-                });
-            }
-            if slot.tokens.len() >= slot.p.req.max_new {
-                // finished: retire immediately — blocks go back to the
-                // free list and the slot backfills next iteration (no
-                // batch barrier)
-                let s = slots[si].take().unwrap();
-                cache.release_slot(si);
-                active -= 1;
-                let total_ms =
-                    s.p.enqueued.elapsed().as_secs_f64() * 1e3;
-                let _ = s.p.tx.send(Completion {
-                    id: s.p.req.id,
-                    tokens: s.tokens,
-                    queue_ms: s.queue_ms,
-                    first_token_ms: s.first_token_ms.unwrap_or(total_ms),
-                    total_ms,
-                    prefill_tokens: s.p.req.prompt.len(),
-                });
-            } else {
-                slot.next_feed = next;
-            }
-        }
-    }
-}
-
-/// Latency/throughput aggregation for the serving example + benches.
-#[derive(Default, Debug)]
-pub struct ServeMetrics {
-    pub completions: Vec<Completion>,
-}
-
-impl ServeMetrics {
-    pub fn record(&mut self, c: Completion) {
-        self.completions.push(c);
-    }
-
-    pub fn p50_ms(&self) -> f64 {
-        self.latencies(|c| c.total_ms).map(|l| crate::util::stats::median(&l))
-            .unwrap_or(0.0)
-    }
-
-    pub fn p95_ms(&self) -> f64 {
-        self.latencies(|c| c.total_ms)
-            .map(|l| crate::util::stats::percentile(&l, 95.0))
-            .unwrap_or(0.0)
-    }
-
-    pub fn p99_ms(&self) -> f64 {
-        self.latencies(|c| c.total_ms)
-            .map(|l| crate::util::stats::percentile(&l, 99.0))
-            .unwrap_or(0.0)
-    }
-
-    /// Median time-to-first-token — the latency prefill chunking buys.
-    pub fn p50_first_token_ms(&self) -> f64 {
-        self.latencies(|c| c.first_token_ms)
-            .map(|l| crate::util::stats::median(&l))
-            .unwrap_or(0.0)
-    }
-
-    pub fn p95_first_token_ms(&self) -> f64 {
-        self.latencies(|c| c.first_token_ms)
-            .map(|l| crate::util::stats::percentile(&l, 95.0))
-            .unwrap_or(0.0)
-    }
-
-    pub fn throughput_tok_s(&self, wall_s: f64) -> f64 {
-        let toks: usize = self
-            .completions
-            .iter()
-            .map(|c| c.tokens.len() + c.prefill_tokens)
-            .sum();
-        toks as f64 / wall_s
-    }
-
-    fn latencies(&self, f: impl Fn(&Completion) -> f64) -> Option<Vec<f64>> {
-        if self.completions.is_empty() {
-            return None;
-        }
-        Some(self.completions.iter().map(f).collect())
     }
 }
 
@@ -855,6 +438,7 @@ mod tests {
             kv_blocks: 64,
             prefill_chunk: 8,
             route_density: 0.25,
+            shards: 1,
             mode,
         }
     }
@@ -952,6 +536,173 @@ mod tests {
     #[test]
     fn continuous_parity_twell() {
         continuous_parity(FfnBackend::Twell);
+    }
+
+    /// The sharding acceptance criterion: one mixed workload (sampled
+    /// + greedy, ragged lengths) must produce bit-identical token
+    /// streams at shards {1, 2, 4} — placement cannot perturb any
+    /// request because each carries its own seeded sampler and every
+    /// shard runs the same bit-exact kernels.  The greedy half is
+    /// additionally pinned to `generate`, so all shard counts are
+    /// anchored to the same external reference, not just each other.
+    fn cross_shard_parity(backend: FfnBackend) {
+        let reference_model = toy_model(backend);
+        let prompts: Vec<Vec<u32>> = vec![
+            vec![1, 2, 3, 4, 5, 6, 7],
+            vec![9],
+            vec![30, 30, 2],
+            vec![4, 0, 11, 19, 23],
+            vec![8, 8],
+            vec![17, 3, 5, 21],
+        ];
+        let max_news = [6usize, 2, 9, 1, 4, 5];
+        let greedy_expected: Vec<Vec<u32>> = prompts
+            .iter()
+            .zip(max_news)
+            .map(|(p, n)| reference_model.generate(p, n))
+            .collect();
+        let run = |shards: usize| -> (Vec<Vec<u32>>, Vec<Vec<u32>>) {
+            // slots=2 per shard: at 1 shard the queue backs up, at 4
+            // shards requests spread out — maximally different
+            // placements for the same workload
+            let server = Server::start(toy_model(backend), ServePolicy {
+                shards,
+                ..policy(2, ServeMode::Continuous)
+            });
+            let sampled_rxs: Vec<_> = prompts
+                .iter()
+                .zip(max_news)
+                .enumerate()
+                .map(|(i, (p, n))| {
+                    server
+                        .submit_sampled(
+                            p.clone(), n, sampled_params(100 + i as u64),
+                        )
+                        .unwrap()
+                        .1
+                })
+                .collect();
+            let greedy_rxs: Vec<_> = prompts
+                .iter()
+                .zip(max_news)
+                .map(|(p, n)| server.submit(p.clone(), n).unwrap().1)
+                .collect();
+            let recv = |rxs: Vec<Rx<Completion>>| -> Vec<Vec<u32>> {
+                rxs.into_iter()
+                    .map(|rx| {
+                        rx.recv_timeout(Duration::from_secs(60))
+                            .unwrap()
+                            .tokens
+                    })
+                    .collect()
+            };
+            let out = (recv(sampled_rxs), recv(greedy_rxs));
+            server.shutdown();
+            out
+        };
+        let golden = run(1);
+        assert_eq!(golden.1, greedy_expected,
+                   "single shard != generate ({backend:?})");
+        for shards in [2usize, 4] {
+            let got = run(shards);
+            assert_eq!(got.0, golden.0,
+                       "sampled streams diverged at {shards} shards \
+                        ({backend:?})");
+            assert_eq!(got.1, greedy_expected,
+                       "greedy streams diverged at {shards} shards \
+                        ({backend:?})");
+        }
+    }
+
+    #[test]
+    fn cross_shard_parity_dense() {
+        cross_shard_parity(FfnBackend::Dense);
+    }
+
+    #[test]
+    fn cross_shard_parity_twell() {
+        cross_shard_parity(FfnBackend::Twell);
+    }
+
+    #[test]
+    fn sharded_stats_merge_equals_sum_of_shards() {
+        // the satellite contract: Server::stats() is exactly
+        // EngineStats::merged over the per-shard snapshots — counters
+        // (admissions breakdown) sum to the submitted total, gauges
+        // and the shared queue_peak survive as maxes
+        let model = toy_model(FfnBackend::Dense);
+        let server = Server::start(model, ServePolicy {
+            shards: 3,
+            ..policy(2, ServeMode::Continuous)
+        });
+        let rxs: Vec<_> = (0..9u32)
+            .map(|i| server.submit(vec![i % 32, 3], 4).unwrap().1)
+            .collect();
+        for rx in rxs {
+            rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        }
+        // all completions received => every shard is idle: snapshots
+        // taken now are final and mutually consistent
+        let per_shard = server.shard_stats();
+        assert_eq!(per_shard.len(), 3);
+        let merged = server.stats();
+        assert_eq!(merged, EngineStats::merged(&per_shard));
+        assert_eq!(merged.admissions, 9);
+        assert_eq!(
+            merged.admissions,
+            per_shard.iter().map(|s| s.admissions).sum::<u64>(),
+            "per-shard admissions must partition the total"
+        );
+        assert_eq!(merged.latency_samples(), 9,
+                   "every completion lands in the latency histogram");
+        // at least one push saw a non-empty queue, and the shared
+        // queue's peak is stamped identically onto every shard
+        assert!(merged.queue_peak >= 1, "{merged:?}");
+        assert!(per_shard.iter().all(|s| s.queue_peak == merged.queue_peak));
+        assert_eq!(
+            merged.max_active,
+            per_shard.iter().map(|s| s.max_active).max().unwrap(),
+        );
+        server.shutdown();
+    }
+
+    #[test]
+    fn sharded_shutdown_drains_queued_requests() {
+        // shutdown with requests still queued and 2 shards racing the
+        // drain: every receiver must still get its completion (the
+        // loom model pins the protocol; this exercises the real build)
+        let model = toy_model(FfnBackend::Dense);
+        let expected = model.generate(&[1, 2], 3);
+        let server = Server::start(model, ServePolicy {
+            shards: 2,
+            ..policy(1, ServeMode::Continuous)
+        });
+        let rxs: Vec<_> =
+            (0..6).map(|_| server.submit(vec![1, 2], 3).unwrap().1).collect();
+        server.shutdown();
+        for rx in rxs {
+            let c = rx.recv_timeout(Duration::from_secs(1)).unwrap();
+            assert_eq!(c.tokens, expected);
+        }
+    }
+
+    #[test]
+    fn sharded_sequential_mode_matches_generate() {
+        // the legacy path shards too: batches are collected
+        // exactly-once through the same queue
+        let model = toy_model(FfnBackend::Dense);
+        let expected = model.generate(&[5, 7], 4);
+        let server = Server::start(model, ServePolicy {
+            shards: 2,
+            ..policy(2, ServeMode::Sequential)
+        });
+        let rxs: Vec<_> =
+            (0..6).map(|_| server.submit(vec![5, 7], 4).unwrap().1).collect();
+        for rx in rxs {
+            let c = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+            assert_eq!(c.tokens, expected);
+        }
+        server.shutdown();
     }
 
     #[test]
@@ -1246,6 +997,7 @@ mod tests {
             kv_blocks: 8,
             prefill_chunk: 4,
             route_density: 0.25,
+            shards: 1,
             mode: ServeMode::Continuous,
         });
         let (_, rx) = server.submit(prompt, 3).unwrap();
@@ -1299,6 +1051,7 @@ mod tests {
             kv_blocks: 32, // 512 positions: exactly A's worst case
             prefill_chunk: 16,
             route_density: 0.25,
+            shards: 1,
             mode: ServeMode::Continuous,
         });
         let (_, rx_a) = server.submit(vec![1, 2, 3], 500).unwrap();
@@ -1323,11 +1076,12 @@ mod tests {
             kv_blocks: 64,
             prefill_chunk: 8,
             route_density: 0.25,
+            shards: 1,
             mode: ServeMode::Sequential,
         });
         let (_, rx) = server.submit(vec![1, 2], 3).unwrap();
         let t0 = Instant::now();
-        server.shutdown(); // joins the worker
+        server.shutdown(); // joins the workers
         assert!(t0.elapsed() < Duration::from_secs(5),
                 "shutdown waited out max_wait: {:?}", t0.elapsed());
         let c = rx.recv_timeout(Duration::from_secs(1)).unwrap();
@@ -1406,6 +1160,7 @@ mod tests {
             kv_blocks: 16, // 128 positions pool-wide
             prefill_chunk: 8,
             route_density: 0.25,
+            shards: 1,
             mode: ServeMode::Continuous,
         });
         let (_, rx) = server.submit(long_prompt, 3).unwrap();
@@ -1448,6 +1203,7 @@ mod tests {
             kv_blocks: 4,
             prefill_chunk: 4,
             route_density: 0.25,
+            shards: 1,
             mode: ServeMode::Continuous,
         });
         let (_, rx) = server.submit(prompt, 4).unwrap();
@@ -1474,6 +1230,7 @@ mod tests {
             kv_blocks: 3,
             prefill_chunk: 4,
             route_density: 0.25,
+            shards: 1,
             mode: ServeMode::Continuous,
         });
         let rxs: Vec<_> = (0..5u32)
@@ -1532,9 +1289,9 @@ mod tests {
 
     #[test]
     fn prop_scheduler_preserves_per_submission_results() {
-        // property: any submission pattern against any slot count gets
-        // every request answered with the tokens direct generation
-        // would produce
+        // property: any submission pattern against any slot count and
+        // shard count gets every request answered with the tokens
+        // direct generation would produce
         check("continuous scheduler correctness", 5, 31, |g: &mut Gen| {
             let model = toy_model(FfnBackend::Dense);
             let n_req = g.usize_in(1, 6);
@@ -1548,10 +1305,10 @@ mod tests {
                 expected.push(model.generate(&prompt, 2));
                 prompts.push(prompt);
             }
-            let server = Server::start(
-                model,
-                policy(g.usize_in(1, 4), ServeMode::Continuous),
-            );
+            let server = Server::start(model, ServePolicy {
+                shards: g.usize_in(1, 3),
+                ..policy(g.usize_in(1, 4), ServeMode::Continuous)
+            });
             let rxs: Vec<_> = prompts
                 .into_iter()
                 .map(|p| server.submit(p, 2).map(|r| r.1))

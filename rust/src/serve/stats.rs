@@ -1,0 +1,330 @@
+//! Engine counters and latency aggregation for the serving layer.
+//!
+//! Every shard engine owns one [`EngineStats`] behind its own mutex
+//! (no cross-shard contention on the hot path); the `Server` facade
+//! snapshots all of them and folds them with [`EngineStats::merge`],
+//! so dashboards see one logical engine regardless of
+//! `ServePolicy::shards`.  Merge semantics, field by field:
+//!
+//! * **Counters** (admissions, steps, FFN dispatch, …) **sum** — each
+//!   shard observed a disjoint subset of the traffic.
+//! * **Gauges** (`max_active`, `queue_peak`) take the **max** — a peak
+//!   across shards is the largest peak any shard (or the shared
+//!   admission queue) saw, not their sum.
+//! * **Histograms** (`latency_hist`) add **element-wise**, which is
+//!   exactly the histogram of the concatenated per-shard samples
+//!   (`util::stats::merge_histograms` is the same identity for the
+//!   analysis-side `Vec` histograms).
+//!
+//! The merged-equals-sum/max contract is pinned by the tests below and
+//! by the live `Server::stats` vs `Server::shard_stats` test in
+//! `serve::tests`.
+
+use crate::serve::Completion;
+
+/// Number of latency histogram buckets on [`EngineStats`].  Bucket `i`
+/// counts completions whose `total_ms` fell in `[2^(i-1), 2^i)` ms
+/// (bucket 0 is `< 1 ms`); the last bucket is unbounded above.  A
+/// fixed-size array keeps `EngineStats` `Copy` and makes the merge a
+/// branch-free element-wise add.
+pub const LATENCY_BUCKETS: usize = 12;
+
+/// Engine counters, exposed for tests and the serve CLI.  One instance
+/// per shard engine; [`EngineStats::merge`] folds shards together.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct EngineStats {
+    /// requests admitted into a KV slot (per shard: the shard's share
+    /// of the traffic; merged: the total)
+    pub admissions: u64,
+    /// admissions that landed while other sequences were mid-decode —
+    /// i.e. backfills into a freed slot, the no-batch-barrier property
+    pub backfilled: u64,
+    /// batched engine steps executed
+    pub steps: u64,
+    /// prompt chunks fed (one per prefilling slot per engine step): a
+    /// length-L prompt finishes prefill in `ceil(L / prefill_chunk)`
+    /// chunks
+    pub prefill_chunks: u64,
+    /// requests retired early because the caller dropped every
+    /// receiver; their KV blocks returned to the pool immediately
+    pub abandoned: u64,
+    /// most simultaneously active slots observed (gauge: merge takes
+    /// the max across shards, since each shard has its own slot pool)
+    pub max_active: usize,
+    /// peak depth of the shared admission queue (gauge).  The queue is
+    /// shared by every shard, so each shard snapshot carries the same
+    /// value and the merge's max preserves it.
+    pub queue_peak: usize,
+    /// requests routed through the (removed) sequential fallback —
+    /// always 0 since the paged cache serves any request that fits the
+    /// pool; kept so dashboards and the acceptance checks can assert it
+    pub fallbacks: u64,
+    /// FFN layer-steps dispatched row-parallel (tall batches)
+    pub ffn_row: u64,
+    /// FFN layer-steps dispatched column-parallel (skinny batches)
+    pub ffn_col: u64,
+    /// FFN layer-steps executed by the routed union-gathered kernel
+    pub ffn_routed: u64,
+    /// FFN layer-steps where routing was considered but fell back to
+    /// the fused row path (union too dense, or a mixed
+    /// prefill+decode feed)
+    pub ffn_fallback: u64,
+    /// sum of measured union densities (over `union_density_calls`
+    /// pure-decode routing decisions); see `mean_union_density`
+    pub union_density_sum: f64,
+    /// number of union-density measurements folded into
+    /// `union_density_sum`
+    pub union_density_calls: u64,
+    /// power-of-two request-latency histogram over `total_ms`: bucket
+    /// `i` counts completions in `[2^(i-1), 2^i)` ms (see
+    /// [`LATENCY_BUCKETS`]); merged element-wise across shards
+    pub latency_hist: [u64; LATENCY_BUCKETS],
+}
+
+impl EngineStats {
+    /// Mean batch-union FFN column density over every pure-decode
+    /// routing decision, or 0 when routing never measured one.
+    pub fn mean_union_density(&self) -> f64 {
+        if self.union_density_calls == 0 {
+            0.0
+        } else {
+            self.union_density_sum / self.union_density_calls as f64
+        }
+    }
+
+    /// Fold one completed request's latency into `latency_hist`.
+    pub fn record_latency(&mut self, total_ms: f64) {
+        let mut b = 0usize;
+        while b + 1 < LATENCY_BUCKETS
+            && total_ms >= (1u64 << b) as f64
+        {
+            b += 1;
+        }
+        self.latency_hist[b] += 1;
+    }
+
+    /// Total completions folded into `latency_hist`.
+    pub fn latency_samples(&self) -> u64 {
+        self.latency_hist.iter().sum()
+    }
+
+    /// Fold another shard's stats into this one: counters and
+    /// histograms sum, gauges take the max (see the module docs).
+    pub fn merge(&mut self, other: &EngineStats) {
+        self.admissions += other.admissions;
+        self.backfilled += other.backfilled;
+        self.steps += other.steps;
+        self.prefill_chunks += other.prefill_chunks;
+        self.abandoned += other.abandoned;
+        self.fallbacks += other.fallbacks;
+        self.ffn_row += other.ffn_row;
+        self.ffn_col += other.ffn_col;
+        self.ffn_routed += other.ffn_routed;
+        self.ffn_fallback += other.ffn_fallback;
+        self.union_density_sum += other.union_density_sum;
+        self.union_density_calls += other.union_density_calls;
+        self.max_active = self.max_active.max(other.max_active);
+        self.queue_peak = self.queue_peak.max(other.queue_peak);
+        for (a, b) in
+            self.latency_hist.iter_mut().zip(&other.latency_hist)
+        {
+            *a += b;
+        }
+    }
+
+    /// Merge a whole shard set into one aggregate view.
+    pub fn merged(shards: &[EngineStats]) -> EngineStats {
+        let mut out = EngineStats::default();
+        for s in shards {
+            out.merge(s);
+        }
+        out
+    }
+}
+
+/// Latency/throughput aggregation for the serving example + benches.
+#[derive(Default, Debug)]
+pub struct ServeMetrics {
+    pub completions: Vec<Completion>,
+}
+
+impl ServeMetrics {
+    pub fn record(&mut self, c: Completion) {
+        self.completions.push(c);
+    }
+
+    pub fn p50_ms(&self) -> f64 {
+        self.latencies(|c| c.total_ms)
+            .map(|l| crate::util::stats::median(&l))
+            .unwrap_or(0.0)
+    }
+
+    pub fn p95_ms(&self) -> f64 {
+        self.latencies(|c| c.total_ms)
+            .map(|l| crate::util::stats::percentile(&l, 95.0))
+            .unwrap_or(0.0)
+    }
+
+    pub fn p99_ms(&self) -> f64 {
+        self.latencies(|c| c.total_ms)
+            .map(|l| crate::util::stats::percentile(&l, 99.0))
+            .unwrap_or(0.0)
+    }
+
+    /// Median time-to-first-token — the latency prefill chunking buys.
+    pub fn p50_first_token_ms(&self) -> f64 {
+        self.latencies(|c| c.first_token_ms)
+            .map(|l| crate::util::stats::median(&l))
+            .unwrap_or(0.0)
+    }
+
+    pub fn p95_first_token_ms(&self) -> f64 {
+        self.latencies(|c| c.first_token_ms)
+            .map(|l| crate::util::stats::percentile(&l, 95.0))
+            .unwrap_or(0.0)
+    }
+
+    pub fn throughput_tok_s(&self, wall_s: f64) -> f64 {
+        let toks: usize = self
+            .completions
+            .iter()
+            .map(|c| c.tokens.len() + c.prefill_tokens)
+            .sum();
+        toks as f64 / wall_s
+    }
+
+    fn latencies(&self, f: impl Fn(&Completion) -> f64) -> Option<Vec<f64>> {
+        if self.completions.is_empty() {
+            return None;
+        }
+        Some(self.completions.iter().map(f).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shard_a() -> EngineStats {
+        let mut s = EngineStats {
+            admissions: 3,
+            backfilled: 1,
+            steps: 10,
+            prefill_chunks: 4,
+            abandoned: 1,
+            max_active: 2,
+            queue_peak: 5,
+            fallbacks: 0,
+            ffn_row: 7,
+            ffn_col: 2,
+            ffn_routed: 6,
+            ffn_fallback: 3,
+            union_density_sum: 0.5,
+            union_density_calls: 6,
+            ..EngineStats::default()
+        };
+        s.record_latency(0.5);
+        s.record_latency(3.0);
+        s
+    }
+
+    fn shard_b() -> EngineStats {
+        let mut s = EngineStats {
+            admissions: 5,
+            backfilled: 2,
+            steps: 20,
+            prefill_chunks: 6,
+            abandoned: 0,
+            max_active: 4,
+            queue_peak: 3,
+            fallbacks: 0,
+            ffn_row: 1,
+            ffn_col: 9,
+            ffn_routed: 2,
+            ffn_fallback: 1,
+            union_density_sum: 0.25,
+            union_density_calls: 2,
+            ..EngineStats::default()
+        };
+        s.record_latency(3.5);
+        s.record_latency(4096.0);
+        s
+    }
+
+    #[test]
+    fn merge_sums_counters_and_maxes_gauges() {
+        let m = EngineStats::merged(&[shard_a(), shard_b()]);
+        // counters: sum of the shard counters
+        assert_eq!(m.admissions, 8);
+        assert_eq!(m.backfilled, 3);
+        assert_eq!(m.steps, 30);
+        assert_eq!(m.prefill_chunks, 10);
+        assert_eq!(m.abandoned, 1);
+        assert_eq!(m.ffn_row, 8);
+        assert_eq!(m.ffn_col, 11);
+        assert_eq!(m.ffn_routed, 8);
+        assert_eq!(m.ffn_fallback, 4);
+        assert_eq!(m.union_density_calls, 8);
+        assert!((m.union_density_sum - 0.75).abs() < 1e-12);
+        // gauges: max across shards, never the sum
+        assert_eq!(m.max_active, 4);
+        assert_eq!(m.queue_peak, 5);
+        assert_eq!(m.latency_samples(), 4);
+    }
+
+    #[test]
+    fn merge_with_default_is_identity() {
+        // an idle shard (all-zero stats) must not perturb the merge —
+        // the empty-shard analogue of merging an empty histogram
+        let a = shard_a();
+        let m = EngineStats::merged(&[a, EngineStats::default()]);
+        assert_eq!(m, a);
+        assert_eq!(EngineStats::merged(&[]), EngineStats::default());
+    }
+
+    #[test]
+    fn merged_latency_hist_equals_hist_of_concatenated_samples() {
+        // recording all samples into one EngineStats must produce the
+        // same histogram as recording them shard-by-shard and merging
+        let xs = [0.2, 1.0, 1.9, 2.0, 700.0, 5000.0];
+        let (a_half, b_half) = xs.split_at(3);
+        let mut a = EngineStats::default();
+        let mut b = EngineStats::default();
+        for &x in a_half {
+            a.record_latency(x);
+        }
+        for &x in b_half {
+            b.record_latency(x);
+        }
+        let mut all = EngineStats::default();
+        for &x in &xs {
+            all.record_latency(x);
+        }
+        let m = EngineStats::merged(&[a, b]);
+        assert_eq!(m.latency_hist, all.latency_hist);
+        assert_eq!(m.latency_samples(), xs.len() as u64);
+    }
+
+    #[test]
+    fn latency_buckets_are_powers_of_two() {
+        let mut s = EngineStats::default();
+        s.record_latency(0.0); // < 1 ms → bucket 0
+        s.record_latency(0.99);
+        s.record_latency(1.0); // [1, 2) → bucket 1
+        s.record_latency(2.0); // [2, 4) → bucket 2
+        s.record_latency(1e9); // beyond every bound → last bucket
+        assert_eq!(s.latency_hist[0], 2);
+        assert_eq!(s.latency_hist[1], 1);
+        assert_eq!(s.latency_hist[2], 1);
+        assert_eq!(s.latency_hist[LATENCY_BUCKETS - 1], 1);
+        assert_eq!(s.latency_samples(), 5);
+    }
+
+    #[test]
+    fn mean_union_density_of_merged_shards() {
+        let m = EngineStats::merged(&[shard_a(), shard_b()]);
+        // (0.5 + 0.25) / (6 + 2)
+        assert!((m.mean_union_density() - 0.09375).abs() < 1e-12);
+        assert_eq!(EngineStats::default().mean_union_density(), 0.0);
+    }
+}

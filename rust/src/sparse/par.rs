@@ -96,6 +96,20 @@
 //! tests) would race each other under `cargo test`'s threaded runner;
 //! they must hold [`test_guard`] for the duration of the sweep, and
 //! restore the original settings before releasing it.
+//!
+//! # Per-shard thread budgeting
+//!
+//! Sharded serving (`ServePolicy::shards`) does **not** give each
+//! shard its own pool or knob — the pool's single job slot already
+//! serializes concurrent kernel calls, so N shard engines interleave
+//! whole steps on one set of workers.  A shard's "thread budget" is
+//! therefore just the partition count its steps fan out to: callers
+//! split a total budget with [`threads_per_shard`] and call
+//! [`set_threads`] once (the serve CLI, example and bench all do), so
+//! each serialized step uses `total / shards` cores and the machine
+//! is never oversubscribed by `shards × total` partitions.  Since the
+//! kernels are bit-exact for any partition count, this splitting
+//! never perturbs served streams — only step latency.
 
 #[cfg(not(loom))]
 use std::panic::AssertUnwindSafe;
@@ -147,6 +161,16 @@ pub fn num_threads() -> usize {
 /// results are bit-exact across any setting (see the module docs).
 pub fn set_threads(n: usize) {
     THREADS.store(n.max(1), Ordering::Relaxed);
+}
+
+/// Partition count for each of `shards` serving engines splitting a
+/// `total` thread budget (the `--threads` flag is a *total*; see
+/// "Per-shard thread budgeting" in the module docs).  Integer
+/// division, clamped so every shard keeps at least one partition —
+/// leftover threads (`total % shards`) stay idle rather than making
+/// one shard's steps faster than its siblings'.
+pub fn threads_per_shard(total: usize, shards: usize) -> usize {
+    (total / shards.max(1)).max(1)
 }
 
 /// Toggle the skinny-batch fast path (default on).  When off, kernels
@@ -555,6 +579,16 @@ mod tests {
     use super::*;
     use std::sync::atomic::AtomicU64;
     use std::sync::Mutex;
+
+    #[test]
+    fn threads_per_shard_splits_the_total_budget() {
+        assert_eq!(threads_per_shard(8, 1), 8);
+        assert_eq!(threads_per_shard(8, 2), 4);
+        assert_eq!(threads_per_shard(8, 3), 2); // remainder stays idle
+        assert_eq!(threads_per_shard(1, 4), 1); // never below one
+        assert_eq!(threads_per_shard(0, 2), 1);
+        assert_eq!(threads_per_shard(8, 0), 8); // shards clamps to 1
+    }
 
     #[test]
     fn covers_all_rows_exactly_once() {

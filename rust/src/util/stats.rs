@@ -117,6 +117,17 @@ pub fn histogram(xs: &[f64], lo: f64, hi: f64, bins: usize) -> Vec<usize> {
     h
 }
 
+/// Element-wise sum of two equal-shape histograms — the shard-merge
+/// operation: because `histogram` is a pure per-sample bin count,
+/// merging two shards' histograms is identical to histogramming the
+/// concatenation of their samples, and merging with an all-zero
+/// (empty-shard) histogram is the identity.  The same contract backs
+/// `serve::EngineStats::merge`'s latency histogram.
+pub fn merge_histograms(a: &[usize], b: &[usize]) -> Vec<usize> {
+    assert_eq!(a.len(), b.len(), "histogram shapes must match");
+    a.iter().zip(b).map(|(x, y)| x + y).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -187,6 +198,60 @@ mod tests {
         assert_eq!(percentile(&xs, 0.0), 1.0);
         assert_eq!(percentile(&xs, 50.0), 2.0);
         assert!(percentile(&xs, 100.0).is_nan());
+    }
+
+    #[test]
+    fn merged_histograms_equal_histogram_of_concatenated_samples() {
+        // the shard-merge identity: per-shard binning then summing ==
+        // binning the pooled samples
+        let xs = [0.1, 0.4, 0.9, 2.5, -1.0];
+        let ys = [0.6, 0.6, 1.2, 0.05];
+        let all: Vec<f64> =
+            xs.iter().chain(&ys).copied().collect();
+        let (lo, hi, bins) = (0.0, 1.0, 4);
+        assert_eq!(
+            merge_histograms(
+                &histogram(&xs, lo, hi, bins),
+                &histogram(&ys, lo, hi, bins),
+            ),
+            histogram(&all, lo, hi, bins)
+        );
+    }
+
+    #[test]
+    fn merging_an_empty_shard_histogram_is_identity() {
+        let xs = [0.2, 0.7, 3.0];
+        let h = histogram(&xs, 0.0, 1.0, 5);
+        let empty = histogram(&[], 0.0, 1.0, 5);
+        assert_eq!(empty, vec![0; 5]);
+        assert_eq!(merge_histograms(&h, &empty), h);
+        assert_eq!(merge_histograms(&empty, &h), h);
+        // degenerate meta-case: merging two empty shards
+        assert_eq!(merge_histograms(&empty, &empty), vec![0; 5]);
+    }
+
+    #[test]
+    #[should_panic(expected = "histogram shapes must match")]
+    fn merge_histograms_rejects_shape_mismatch() {
+        merge_histograms(&[1, 2], &[1, 2, 3]);
+    }
+
+    #[test]
+    fn percentiles_are_order_invariant_across_shard_concatenation() {
+        // percentile sorts internally, so pooling per-shard latency
+        // vectors in any order yields the same percentiles — the
+        // property the bench relies on when it concatenates shard
+        // completions before computing p50/p95
+        let shard_a = [5.0, 1.0, 9.0];
+        let shard_b = [2.0, 7.0];
+        let ab: Vec<f64> =
+            shard_a.iter().chain(&shard_b).copied().collect();
+        let ba: Vec<f64> =
+            shard_b.iter().chain(&shard_a).copied().collect();
+        for p in [0.0, 25.0, 50.0, 95.0, 100.0] {
+            assert_eq!(percentile(&ab, p), percentile(&ba, p));
+        }
+        assert_eq!(median(&ab), 5.0);
     }
 
     #[test]

@@ -7,9 +7,11 @@
 //! types unchanged (zero cost).  Building with `RUSTFLAGS="--cfg
 //! loom"` swaps in [loom]'s model-checked replacements, which lets
 //! `cargo test --release --lib loom_` exhaustively enumerate every
-//! interleaving of the pool's lock/condvar protocol instead of hoping
-//! the OS scheduler stumbles onto the bad one (see `par::loom_tests`
-//! and `.github/workflows/analysis.yml`).
+//! interleaving of the pool's lock/condvar protocol and of the serve
+//! layer's shared admission queue instead of hoping the OS scheduler
+//! stumbles onto the bad one (see `par::loom_tests`,
+//! `serve::admission::loom_tests` and
+//! `.github/workflows/analysis.yml`).
 //!
 //! Policy, enforced by `cargo run -p xtask -- check`: OS threads are
 //! created only inside this module and `sparse/par.rs` (the pool's
@@ -38,10 +40,37 @@ pub(crate) use loom::thread::JoinHandle;
 #[cfg(loom)]
 pub(crate) use loom::thread_local;
 
+/// Condvar wait with a deadline, loom-switchable.  A normal build
+/// delegates to `std`'s `wait_timeout` (poison recovered, since every
+/// caller's state is valid under a poisoned lock).  Under loom it
+/// degrades to a plain `wait` that never reports a timeout: loom has
+/// no model of time, so a modeled protocol must be woken explicitly
+/// (a notify after a push or a shutdown) — which is exactly what the
+/// admission-queue models exercise.  Timeout-dependent behavior
+/// (sequential batch filling) is therefore untestable under loom by
+/// construction; keep protocol correctness independent of it.
+pub(crate) fn wait_timeout<'a, T>(
+    cv: &Condvar, guard: MutexGuard<'a, T>, dur: std::time::Duration,
+) -> (MutexGuard<'a, T>, bool) {
+    #[cfg(not(loom))]
+    {
+        let (guard, timeout) = cv
+            .wait_timeout(guard, dur)
+            .unwrap_or_else(|e| e.into_inner());
+        (guard, timeout.timed_out())
+    }
+    #[cfg(loom)]
+    {
+        let _ = dur;
+        let guard = cv.wait(guard).unwrap_or_else(|e| e.into_inner());
+        (guard, false)
+    }
+}
+
 /// Spawn a named OS thread.  The crate's front door for long-lived
-/// non-pool threads (the serving engine's scheduler); the pool spawns
-/// its own workers via `thread::Builder` in `sparse/par.rs`.  Under
-/// loom the name is dropped — loom threads are anonymous.
+/// non-pool threads (the serving engine's shard loops); the pool
+/// spawns its own workers via `thread::Builder` in `sparse/par.rs`.
+/// Under loom the name is dropped — loom threads are anonymous.
 pub(crate) fn spawn_named<F>(name: &str, f: F) -> JoinHandle<()>
 where
     F: FnOnce() + Send + 'static,

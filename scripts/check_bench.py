@@ -10,7 +10,8 @@ run it locally the same way:
 The routing A/B sweep must land in the persisted report with a measured
 union density and a dispatch label on every row, for all three paths
 (routed union-gather, TwELL row fallback, dense baseline) — the
-trajectory tooling indexes on these.
+trajectory tooling indexes on these.  The shard sweep must cover shard
+counts {1, 2, 4} with a queue_peak gauge on every row.
 """
 import json
 import sys
@@ -28,6 +29,18 @@ def check(report_path):
     want = {"routed", "twell-row", "dense"}
     assert want <= paths, f"paths {paths} missing {want - paths}"
     print(f"{len(rows)} decode_routing rows ok; paths: {sorted(paths)}")
+
+    srows = [r for r in report["rows"] if r.get("section") == "shard_sweep"]
+    assert srows, "no section=shard_sweep rows in the report"
+    for r in srows:
+        assert "shards" in r, f"missing shards: {r}"
+        assert "queue_peak" in r, f"missing queue_peak: {r}"
+    shard_counts = {int(r["shards"]) for r in srows}
+    want_shards = {1, 2, 4}
+    assert want_shards <= shard_counts, (
+        f"shard counts {shard_counts} missing {want_shards - shard_counts}"
+    )
+    print(f"{len(srows)} shard_sweep rows ok; shards: {sorted(shard_counts)}")
 
 
 if __name__ == "__main__":

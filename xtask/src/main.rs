@@ -19,6 +19,10 @@
 //! 3. **Kernel purity.**  No `Instant::now` under `rust/src/sparse/`
 //!    — kernels stay deterministic and timing-free; measurement
 //!    belongs to the bench harness and the serving loop.
+//! 4. **Shim confinement.**  Loom-modeled modules (the serve admission
+//!    queue) name no `std::sync::{Mutex, Condvar, MutexGuard}`
+//!    directly — they go through the `util::sync` shim, so the loom
+//!    model checks the exact synchronization the release build runs.
 //!
 //! Prints the full `unsafe` inventory either way; exits non-zero with
 //! a violation list when the gate fails.
@@ -81,6 +85,7 @@ fn check() -> ExitCode {
         scan_unsafe(&rel, &lines, &mut inventory, &mut violations);
         scan_threads(&rel, &lines, &mut violations);
         scan_kernel_purity(&rel, &lines, &mut violations);
+        scan_sync_shim(&rel, &lines, &mut violations);
     }
     check_deny_attr(&root, &mut violations);
 
@@ -420,6 +425,42 @@ fn scan_kernel_purity(
                       belongs to the bench harness / serving loop"
                     .to_string(),
             });
+        }
+    }
+}
+
+/// Files whose locks are loom-model-checked: they must name the
+/// `util::sync` shim types only, never `std::sync` sync primitives
+/// directly — a direct `std::sync::Mutex` would compile under loom but
+/// sit outside the model, silently unchecked.
+const SYNC_SHIM_CONFINED: [&str; 1] = ["rust/src/serve/admission.rs"];
+const SYNC_STD_TOKENS: [&str; 3] = [
+    "std::sync::Mutex",
+    "std::sync::Condvar",
+    "std::sync::MutexGuard",
+];
+
+fn scan_sync_shim(
+    file: &str,
+    lines: &[Line],
+    violations: &mut Vec<Violation>,
+) {
+    if !SYNC_SHIM_CONFINED.contains(&file) {
+        return;
+    }
+    for (li, line) in lines.iter().enumerate() {
+        for tok in SYNC_STD_TOKENS {
+            if line.code.contains(tok) {
+                violations.push(Violation {
+                    file: file.to_string(),
+                    line: li + 1,
+                    msg: format!(
+                        "`{tok}` in a loom-modeled module — use the \
+                         `util::sync` shim so the loom model checks \
+                         the synchronization the release build runs"
+                    ),
+                });
+            }
         }
     }
 }
