@@ -7,7 +7,7 @@
 //! Run: cargo run --release --example serve_sparse -- \
 //!        [--run e2e_s] [--slots 8] [--requests 24] [--max-new 12] \
 //!        [--kv-blocks 128] [--kv-block-size 16] [--prefill-chunk 16] \
-//!        [--route-density 0.25] \
+//!        [--route-density 0.25] [--prefix-cache on|off] \
 //!        [--temperature 0.8] [--top-k 40] [--top-p 0.95] [--seed 0] \
 //!        [--threads N] [--shards 1]
 //! (trains a quick tiny model if the run does not exist yet;
@@ -58,6 +58,13 @@ fn main() -> anyhow::Result<()> {
     let prefill_chunk = args.get_usize("prefill-chunk", kv_block_size)?;
     // union-density threshold for routed decode FFN (twell backend)
     let route_density = args.get_f64("route-density", 0.25)? as f32;
+    // copy-on-write prefix caching in the paged KV pool — token
+    // streams are bit-identical on or off (placement only)
+    let prefix_cache = match args.get_or("prefix-cache", "on").as_str() {
+        "on" | "true" | "1" => true,
+        "off" | "false" | "0" => false,
+        other => anyhow::bail!("unknown --prefix-cache value {other:?}"),
+    };
     // per-request sampling (temperature 0 = greedy argmax)
     let base_params = SamplingParams {
         temperature: args.get_f64("temperature", 0.0)? as f32,
@@ -110,6 +117,7 @@ fn main() -> anyhow::Result<()> {
                 kv_blocks,
                 prefill_chunk,
                 route_density,
+                prefix_cache,
                 mode,
                 shards,
             };
@@ -138,7 +146,8 @@ fn main() -> anyhow::Result<()> {
                  p95 {:.1} ms, ttft p50 {:.1} ms, {:.0} tok/s \
                  ({} backfills, {} prefill chunks, ffn {} routed / \
                  {} fallback, mean union density {:.3}, \
-                 queue peak {})",
+                 queue peak {}, {} prefix hits / {} blocks shared, \
+                 peak {} KV blocks)",
                 format!("{mode:?}/{eff_slots} slots"),
                 metrics.p50_ms(),
                 metrics.p95_ms(),
@@ -150,6 +159,9 @@ fn main() -> anyhow::Result<()> {
                 stats.ffn_fallback,
                 stats.mean_union_density(),
                 stats.queue_peak,
+                stats.prefix_hits,
+                stats.prefix_blocks_shared,
+                stats.kv_blocks_peak,
             );
             if shards > 1 {
                 for (i, st) in per_shard.iter().enumerate() {
@@ -176,6 +188,7 @@ fn main() -> anyhow::Result<()> {
         kv_blocks,
         prefill_chunk,
         route_density,
+        prefix_cache,
         mode: ServeMode::Continuous,
         shards,
     });

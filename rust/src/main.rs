@@ -258,6 +258,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "continuous" => repro::serve::ServeMode::Continuous,
         other => bail!("unknown serve mode {other:?}"),
     };
+    // copy-on-write prefix caching across requests in the paged KV
+    // pool; token streams are bit-identical either way, so this is a
+    // pure memory/TTFT knob
+    let prefix_cache = match args.get_or("prefix-cache", "on").as_str() {
+        "on" | "true" | "1" => true,
+        "off" | "false" | "0" => false,
+        other => bail!("unknown --prefix-cache value {other:?}"),
+    };
     let backend = match args.get_or("backend", "twell").as_str() {
         "dense" => FfnBackend::Dense,
         "twell" => FfnBackend::Twell,
@@ -273,6 +281,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         prefill_chunk,
         route_density,
         shards,
+        prefix_cache,
         mode,
     };
     let server = repro::serve::Server::start(model, policy);
@@ -369,6 +378,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
         stats.ffn_col,
         stats.ffn_row,
         stats.mean_union_density()
+    );
+    println!(
+        "prefix cache ({}): {} hits, {} blocks shared, {} cow copies, \
+         peak {} KV blocks in use",
+        if prefix_cache { "on" } else { "off" },
+        stats.prefix_hits,
+        stats.prefix_blocks_shared,
+        stats.cow_copies,
+        stats.kv_blocks_peak
     );
     server.shutdown();
     Ok(())

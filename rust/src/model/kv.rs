@@ -30,7 +30,43 @@
 //! covers it), while physical blocks are still allocated lazily as
 //! positions are written — `blocks_in_use` therefore tracks tokens
 //! actually held, and a reserved sequence can never hit an exhausted
-//! free list mid-decode.
+//! free list mid-decode.  Over-budget reservations are a `Result`, not
+//! a panic: the admission scan turns them into a wait/reject decision
+//! instead of killing the shard.
+//!
+//! # Block sharing & copy-on-write
+//!
+//! With `set_prefix_cache(true)`, physical blocks carry a refcount and
+//! a content identity — the tokens written into them plus a *chain
+//! hash* folding in every full block before them — so a newly admitted
+//! prompt can attach its leading full blocks to blocks an earlier
+//! sequence already wrote (`admit`) and copy at most one divergent or
+//! partially-matched block into a private block (copy-on-write).
+//! Invariants:
+//!
+//! * **Hashability**: a block enters the lookup `index` only once all
+//!   `block_size` rows are written; partially-filled blocks are
+//!   reachable only as CoW sources via `children`.  Every match is
+//!   verified against the stored tokens, so a hash collision costs a
+//!   missed share, never a wrong one.
+//! * **Refcount lifecycle**: 1 on private allocation, +1 per attaching
+//!   sequence, −1 at `release_slot`.  At zero the block is *retained*
+//!   on the `cached` list — still indexed, still attachable — and only
+//!   evicted (identity scrubbed) when the free list runs dry.  Shared
+//!   blocks are never written: a sequence writes only past its
+//!   attached prefix, into blocks it owns exclusively.
+//! * **Budget**: `available_blocks` counts free + retained blocks
+//!   minus outstanding (not-yet-allocated) reservations; `admit`
+//!   charges a request only its *unshared* worst case plus any
+//!   retained blocks it revives, so sharing admits strictly more
+//!   sequences per pool while `ensure_block` still can never starve.
+//! * **Parity**: a K/V row depends only on the token prefix and the
+//!   absolute position — never on which physical block holds it — and
+//!   every kernel on the decode path computes its output rows
+//!   independently, so attaching (or byte-copying) rows another
+//!   sequence computed yields bit-identical logits to recomputing
+//!   them.  Only block *placement* changes; decoded streams with
+//!   sharing on vs off are pinned identical by the serve-level tests.
 //!
 //! The batched path is allocation-free: a long-lived engine owns one
 //! `DecodeScratch` and calls `prefill_decode_step_into`, which draws
@@ -46,6 +82,8 @@ use crate::sparse::dense;
 use crate::sparse::ffn::{forward_backend_step_into, FfnScratch};
 use crate::sparse::route::RouteScratch;
 use crate::tensor::Mat;
+use std::collections::{HashMap, VecDeque};
+use std::fmt;
 
 pub struct KvCache {
     /// per layer: (seq_cap, d_model) keys / values, post-RoPE
@@ -67,10 +105,98 @@ impl KvCache {
     }
 }
 
+/// An admission-time reservation that does not fit the block budget.
+/// Deliberately a value, not a panic: the scheduler turns it into a
+/// wait/reject decision instead of killing the shard.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReserveError {
+    /// blocks the reservation would have charged against the budget
+    pub need: usize,
+    /// blocks the budget had left
+    pub available: usize,
+}
+
+impl fmt::Display for ReserveError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "reservation of {} blocks exceeds the budget ({} available)",
+            self.need, self.available
+        )
+    }
+}
+
+impl std::error::Error for ReserveError {}
+
+/// Outcome of a prefix-aware admission ([`PagedKvCache::admit`]): how
+/// much of the prompt the pool already held and what attaching cost.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PrefixAdmit {
+    /// prompt positions already materialized in the slot's table
+    /// (`len[slot]` right after admission) — chunked prefill resumes
+    /// from here.  Capped at `prompt_len - 1`: the final prompt token
+    /// is always recomputed so there are logits to sample.
+    pub cached_positions: usize,
+    /// full blocks attached by refcount, with no data movement
+    pub shared_blocks: usize,
+    /// K/V rows copied into a fresh private block — the copy-on-write
+    /// of the first divergent or partially-matched block (0 = no copy)
+    pub cow_rows: usize,
+}
+
+/// Content identity of a physical block: the tokens written into it
+/// and the chain hash of everything before it.  Recorded only while
+/// prefix caching is enabled; an empty `tokens` means "no identity".
+#[derive(Debug, Clone, Default)]
+struct BlockMeta {
+    /// chain hash through the last full block *before* this one
+    parent: u64,
+    /// tokens written into this block so far (≤ `block_size`)
+    tokens: Vec<u32>,
+    /// `chain_hash(parent, tokens)` once the block filled completely
+    full_hash: Option<u64>,
+}
+
+/// Seed of every slot's hash chain (an arbitrary odd constant).
+const CHAIN_SEED: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// splitmix64 finalizer — deterministic, dependency-free mixing.
+fn mix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Fold a token span into a chain hash.  Collisions are harmless
+/// (matches are token-verified) but made vanishingly rare so hot
+/// prefixes actually hit.
+fn chain_hash(h: u64, tokens: &[u32]) -> u64 {
+    let mut acc = h;
+    for &t in tokens {
+        acc = mix64(acc ^ (t as u64 + 1));
+    }
+    acc
+}
+
+/// A prefix-attach plan computed against the current index: matched
+/// full blocks, how many of them must be revived off the `cached`
+/// list, the chain hash at the divergence point, and the best CoW
+/// source (block id, matching row count) past it.
+struct PrefixPlan {
+    blocks: Vec<usize>,
+    pins: usize,
+    chain: u64,
+    cow: Option<(usize, usize)>,
+}
+
 /// Paged KV storage for the continuous-batching engine: `num_blocks`
 /// physical blocks of `block_size` positions each, shared by `slots`
 /// sequences through per-slot block tables.  Retiring a sequence
-/// returns its blocks to the free list in O(blocks).
+/// returns its blocks to the free list in O(blocks).  With
+/// [`set_prefix_cache`](PagedKvCache::set_prefix_cache) enabled,
+/// blocks are refcounted and content-hashed so sequences sharing a
+/// prompt prefix share physical blocks (see the module docs).
 pub struct PagedKvCache {
     /// per layer: (num_blocks * block_size, d_model) keys / values,
     /// post-RoPE; row `b * block_size + o` is offset `o` of physical
@@ -86,10 +212,33 @@ pub struct PagedKvCache {
     tables: Vec<Vec<usize>>,
     /// free physical block ids (LIFO)
     free: Vec<usize>,
-    /// per-slot worst-case block reservation made at admission
+    /// per-slot worst-case reservation of *private* (unshared) blocks
+    /// made at admission, in blocks not yet allocated + to-allocate
     reserved: Vec<usize>,
-    /// sum of reservations across all slots
+    /// Σ over slots of blocks still promised but not yet allocated
+    /// (`reserved[s]` minus the slot's private allocations so far)
     committed: usize,
+    /// per-block count of sequences referencing it; 0 = free or
+    /// retained on `cached`
+    refcount: Vec<u32>,
+    /// per-block content identity (prefix caching only)
+    meta: Vec<BlockMeta>,
+    /// full-block chain hash → physical block.  First writer wins;
+    /// matches are token-verified, so a colliding entry only ever
+    /// costs a missed share
+    index: HashMap<u64, usize>,
+    /// chain hash → blocks whose parent is that chain (CoW candidates,
+    /// including partially-filled blocks)
+    children: HashMap<u64, Vec<usize>>,
+    /// refcount-0 blocks with valid contents, retained for future
+    /// prefix hits; evicted FIFO when the free list runs dry
+    cached: VecDeque<usize>,
+    /// per-slot count of leading table entries attached by refcount
+    shared: Vec<usize>,
+    /// per-slot chain hash through the slot's last *full* block
+    chain: Vec<u64>,
+    /// master switch; off = the exact historical allocator behaviour
+    prefix_cache: bool,
 }
 
 impl PagedKvCache {
@@ -113,7 +262,38 @@ impl PagedKvCache {
             free: (0..num_blocks).rev().collect(),
             reserved: vec![0; slots],
             committed: 0,
+            refcount: vec![0; num_blocks],
+            meta: vec![BlockMeta::default(); num_blocks],
+            index: HashMap::new(),
+            children: HashMap::new(),
+            cached: VecDeque::new(),
+            shared: vec![0; slots],
+            chain: vec![CHAIN_SEED; slots],
+            prefix_cache: false,
         }
+    }
+
+    /// Enable or disable prefix sharing.  Only valid on an idle pool
+    /// (nothing allocated, nothing reserved); disabling drops every
+    /// retained prefix back to the free list, restoring the exact
+    /// historical allocator behaviour.
+    pub fn set_prefix_cache(&mut self, on: bool) {
+        assert!(self.blocks_in_use() == 0 && self.committed == 0,
+                "toggle prefix caching only on an idle pool");
+        self.prefix_cache = on;
+        if !on {
+            while let Some(b) = self.cached.pop_front() {
+                self.forget_block(b);
+                self.free.push(b);
+            }
+            self.index.clear();
+            self.children.clear();
+        }
+    }
+
+    /// Whether prefix sharing is on (see `set_prefix_cache`).
+    pub fn prefix_cache_enabled(&self) -> bool {
+        self.prefix_cache
     }
 
     /// Blocks needed to hold `positions` KV entries.
@@ -121,50 +301,292 @@ impl PagedKvCache {
         positions.div_ceil(self.block_size)
     }
 
-    /// Blocks not yet promised to any slot — the admission budget.
+    /// Blocks not yet promised to any slot — the admission budget:
+    /// free blocks plus retained (refcount-0, evictable) prefix
+    /// blocks, minus reservations that have not yet turned into
+    /// allocations.
     pub fn available_blocks(&self) -> usize {
-        self.num_blocks - self.committed
+        self.free.len() + self.cached.len() - self.committed
     }
 
-    /// Physical blocks currently allocated (grows with tokens actually
-    /// written, not with reservations).
+    /// Physical blocks currently held by live sequences (grows with
+    /// tokens actually written, not with reservations; retained
+    /// refcount-0 prefix blocks do not count — they are reclaimable).
     pub fn blocks_in_use(&self) -> usize {
-        self.num_blocks - self.free.len()
+        self.num_blocks - self.free.len() - self.cached.len()
     }
 
-    /// Earmark the slot's worst-case block count (admission).  The slot
-    /// must be retired/empty and the reservation must fit the budget —
-    /// the scheduler checks `available_blocks` first.
-    pub fn reserve(&mut self, slot: usize, positions: usize) {
+    /// Earmark the slot's worst-case block count (admission), with no
+    /// prefix sharing.  The slot must be retired/empty; an over-budget
+    /// reservation is an `Err`, never a panic — the scheduler turns it
+    /// into a wait/reject decision.
+    pub fn reserve(
+        &mut self, slot: usize, positions: usize,
+    ) -> Result<(), ReserveError> {
         assert!(self.len[slot] == 0 && self.reserved[slot] == 0,
                 "slot {slot} still holds a sequence");
         let need = self.blocks_for(positions);
-        assert!(need <= self.available_blocks(),
-                "reservation of {need} blocks exceeds the budget");
+        if need > self.available_blocks() {
+            return Err(ReserveError {
+                need,
+                available: self.available_blocks(),
+            });
+        }
         self.reserved[slot] = need;
         self.committed += need;
+        Ok(())
     }
 
-    /// Retire a slot: return its physical blocks to the free list and
-    /// release its reservation.
+    /// Prefix-aware admission: reserve `positions` worth of KV for
+    /// `slot`, attaching any leading full blocks the pool already
+    /// holds for this prompt and copy-on-writing the first divergent
+    /// or partially-matched block.  Charges the budget only the
+    /// *unshared* worst case (plus retained blocks revived by the
+    /// attach); over budget is an `Err` with the pool untouched.  With
+    /// prefix caching disabled this is exactly `reserve`.
+    pub fn admit(
+        &mut self, slot: usize, prompt: &[u32], positions: usize,
+    ) -> Result<PrefixAdmit, ReserveError> {
+        assert!(!prompt.is_empty(), "admit with an empty prompt");
+        assert!(positions >= prompt.len(),
+                "positions must cover the prompt");
+        if !self.prefix_cache {
+            self.reserve(slot, positions)?;
+            return Ok(PrefixAdmit::default());
+        }
+        assert!(self.len[slot] == 0 && self.reserved[slot] == 0
+                    && self.tables[slot].is_empty(),
+                "slot {slot} still holds a sequence");
+        let total = self.blocks_for(positions);
+        let plan = self.plan_prefix(prompt);
+        let private_need = total - plan.blocks.len();
+        let charge = plan.pins + private_need;
+        if charge > self.available_blocks() {
+            return Err(ReserveError {
+                need: charge,
+                available: self.available_blocks(),
+            });
+        }
+        // attach the matched chain by refcount — no data movement
+        for &b in &plan.blocks {
+            if self.refcount[b] == 0 {
+                self.cached.retain(|&x| x != b);
+            }
+            self.refcount[b] += 1;
+            self.tables[slot].push(b);
+        }
+        self.shared[slot] = plan.blocks.len();
+        self.chain[slot] = plan.chain;
+        self.len[slot] = plan.blocks.len() * self.block_size;
+        self.reserved[slot] = private_need;
+        self.committed += private_need;
+        // copy-on-write of the divergence block: clone the matching
+        // rows of the best candidate into a fresh private block, so
+        // prefill resumes mid-block.  Skipped (recomputed instead) in
+        // the degenerate case where the only evictable block *is* the
+        // source.
+        let mut cow_rows = 0;
+        if let Some((src, rows)) = plan.cow {
+            if let Some(dst) = self.alloc_block(Some(src)) {
+                self.committed -= 1;
+                self.tables[slot].push(dst);
+                let bs = self.block_size;
+                for m in self.k.iter_mut().chain(self.v.iter_mut()) {
+                    let c = m.cols;
+                    let s0 = src * bs * c;
+                    let d0 = dst * bs * c;
+                    m.data.copy_within(s0..s0 + rows * c, d0);
+                }
+                let toks = self.meta[src].tokens[..rows].to_vec();
+                self.meta[dst].parent = plan.chain;
+                self.meta[dst].tokens = toks;
+                self.children.entry(plan.chain).or_default().push(dst);
+                self.len[slot] += rows;
+                cow_rows = rows;
+            }
+        }
+        Ok(PrefixAdmit {
+            cached_positions: self.len[slot],
+            shared_blocks: plan.blocks.len(),
+            cow_rows,
+        })
+    }
+
+    /// Walk the index along this prompt's hash chain: full blocks
+    /// matched within `prompt_len - 1` positions (the final token is
+    /// always recomputed so there are logits to sample), then the best
+    /// partial match among the divergence point's children as a CoW
+    /// source.  Read-only; `admit` applies the plan.
+    fn plan_prefix(&self, prompt: &[u32]) -> PrefixPlan {
+        let bs = self.block_size;
+        let usable = prompt.len() - 1;
+        let mut chain = CHAIN_SEED;
+        let mut blocks = Vec::new();
+        let mut pins = 0;
+        while (blocks.len() + 1) * bs <= usable {
+            let lo = blocks.len() * bs;
+            let span = &prompt[lo..lo + bs];
+            let h = chain_hash(chain, span);
+            match self.index.get(&h) {
+                Some(&b)
+                    if self.meta[b].parent == chain
+                        && self.meta[b].tokens == span =>
+                {
+                    if self.refcount[b] == 0 {
+                        pins += 1;
+                    }
+                    blocks.push(b);
+                    chain = h;
+                }
+                _ => break,
+            }
+        }
+        let start = blocks.len() * bs;
+        let mut cow = None;
+        if usable > start {
+            if let Some(kids) = self.children.get(&chain) {
+                // cap at bs - 1 rows so the CoW block is strictly
+                // partial — it re-enters the index through the normal
+                // fill path, never with a pre-made full hash
+                let budget = (usable - start).min(bs - 1);
+                let mut best = (0usize, 0usize);
+                for &b in kids {
+                    let toks = &self.meta[b].tokens;
+                    let lim = budget.min(toks.len());
+                    let lcp = prompt[start..start + lim]
+                        .iter()
+                        .zip(&toks[..lim])
+                        .take_while(|&(a, b)| a == b)
+                        .count();
+                    if lcp > best.1 {
+                        best = (b, lcp);
+                    }
+                }
+                if best.1 > 0 {
+                    cow = Some(best);
+                }
+            }
+        }
+        PrefixPlan { blocks, pins, chain, cow }
+    }
+
+    /// Retire a slot: drop one reference from each of its blocks,
+    /// retaining refcount-0 blocks with valid contents for future
+    /// prefix hits (or freeing them outright when sharing is off), and
+    /// release the slot's remaining reservation.
     pub fn release_slot(&mut self, slot: usize) {
-        self.free.append(&mut self.tables[slot]);
-        self.committed -= self.reserved[slot];
+        let private = self.tables[slot].len() - self.shared[slot];
+        debug_assert!(private <= self.reserved[slot]);
+        self.committed -= self.reserved[slot] - private;
+        for b in std::mem::take(&mut self.tables[slot]) {
+            self.refcount[b] -= 1;
+            if self.refcount[b] == 0 {
+                if self.prefix_cache && !self.meta[b].tokens.is_empty() {
+                    self.cached.push_back(b);
+                } else {
+                    self.forget_block(b);
+                    self.free.push(b);
+                }
+            }
+        }
         self.reserved[slot] = 0;
+        self.shared[slot] = 0;
+        self.chain[slot] = CHAIN_SEED;
         self.len[slot] = 0;
     }
 
     /// Make sure the block holding position `pos == len[slot]` is
-    /// allocated, pulling from the free list when `pos` opens a new
-    /// block.  Reservation guarantees the free list cannot be empty.
+    /// allocated, allocating a private block when `pos` opens a new
+    /// one.  Reservation guarantees allocation cannot fail.
     fn ensure_block(&mut self, slot: usize, pos: usize) {
         if pos == self.tables[slot].len() * self.block_size {
-            assert!(self.tables[slot].len() < self.reserved[slot],
+            let private = self.tables[slot].len() - self.shared[slot];
+            assert!(private < self.reserved[slot],
                     "slot {slot} grew past its reservation");
-            let b = self.free.pop()
+            let b = self.alloc_block(None)
                 .expect("free list empty despite reservation");
+            self.committed -= 1;
             self.tables[slot].push(b);
         }
+    }
+
+    /// Allocate one private block: pop the free list, else evict the
+    /// oldest retained prefix block (skipping `avoid` — a CoW source
+    /// must not be evicted to make room for its own copy).  `None`
+    /// only when every reclaimable block is `avoid`.
+    fn alloc_block(&mut self, avoid: Option<usize>) -> Option<usize> {
+        let b = match self.free.pop() {
+            Some(b) => b,
+            None => {
+                let i = (0..self.cached.len())
+                    .find(|&i| Some(self.cached[i]) != avoid)?;
+                let b = self.cached.remove(i).unwrap();
+                self.forget_block(b);
+                b
+            }
+        };
+        debug_assert!(
+            self.refcount[b] == 0 && self.meta[b].tokens.is_empty()
+        );
+        self.refcount[b] = 1;
+        Some(b)
+    }
+
+    /// Scrub a block's content identity: clear its metadata and remove
+    /// it from the index and its parent's children list.
+    fn forget_block(&mut self, b: usize) {
+        let meta = std::mem::take(&mut self.meta[b]);
+        if let Some(h) = meta.full_hash {
+            if self.index.get(&h) == Some(&b) {
+                self.index.remove(&h);
+            }
+        }
+        if let Some(kids) = self.children.get_mut(&meta.parent) {
+            kids.retain(|&x| x != b);
+            if kids.is_empty() {
+                self.children.remove(&meta.parent);
+            }
+        }
+    }
+
+    /// Advance a slot past a just-written span, recording the span's
+    /// tokens into its blocks' content identity and registering each
+    /// block that fills completely in the lookup index (prefix caching
+    /// only — with sharing off this is `len[slot] += span.len()`).
+    fn advance(&mut self, slot: usize, span: &[u32]) {
+        if self.prefix_cache {
+            let bs = self.block_size;
+            for (j, &tok) in span.iter().enumerate() {
+                let pos = self.len[slot] + j;
+                let b = self.tables[slot][pos / bs];
+                if pos % bs == 0 {
+                    // first row of a fresh private block: open its
+                    // identity under the slot's current chain
+                    debug_assert!(self.meta[b].tokens.is_empty(),
+                                  "reopened a block holding tokens");
+                    self.meta[b].parent = self.chain[slot];
+                    self.children
+                        .entry(self.chain[slot])
+                        .or_default()
+                        .push(b);
+                }
+                self.meta[b].tokens.push(tok);
+                if pos % bs == bs - 1 {
+                    let h =
+                        chain_hash(self.chain[slot], &self.meta[b].tokens);
+                    self.meta[b].full_hash = Some(h);
+                    self.index.entry(h).or_insert(b);
+                    self.chain[slot] = h;
+                }
+            }
+        }
+        self.len[slot] += span.len();
+    }
+
+    /// Total positions slot may hold: attached prefix plus private
+    /// reservation.
+    fn slot_capacity(&self, slot: usize) -> usize {
+        (self.shared[slot] + self.reserved[slot]) * self.block_size
     }
 }
 
@@ -366,7 +788,7 @@ impl Model {
             assert!(slot < cache.slots, "slot {slot} out of range");
             assert!(!span.is_empty(), "slot {slot} fed an empty span");
             assert!(cache.len[slot] + span.len()
-                        <= cache.reserved[slot] * cache.block_size,
+                        <= cache.slot_capacity(slot),
                     "slot {slot} kv full (reserve before decoding)");
             for &(other, _) in &feeds[i + 1..] {
                 assert_ne!(slot, other, "duplicate slot in feed set");
@@ -499,7 +921,7 @@ impl Model {
             super::add_inplace(x, ffn_y);
         }
         for &(slot, span) in feeds {
-            cache.len[slot] += span.len();
+            cache.advance(slot, span);
         }
         // logits only for each entry's last span token — the rows the
         // scheduler samples from; row independence makes selecting
@@ -726,7 +1148,7 @@ mod tests {
             seqs.iter().map(|_| (KvCache::new(&m, 8), 0)).collect();
         let mut batch = PagedKvCache::new(&m, 3, 16, 2);
         for (slot, s) in seqs.iter().enumerate() {
-            batch.reserve(slot, s.len());
+            batch.reserve(slot, s.len()).unwrap();
         }
         // step until every sequence is exhausted; shorter ones drop out,
         // making the active set genuinely ragged
@@ -780,7 +1202,7 @@ mod tests {
         }
         for chunk in [1usize, 2, 4, 64] {
             let mut paged = PagedKvCache::new(&m, 1, 8, 2);
-            paged.reserve(0, prompt.len());
+            paged.reserve(0, prompt.len()).unwrap();
             let mut logits = None;
             for span in prompt.chunks(chunk) {
                 logits =
@@ -823,8 +1245,8 @@ mod tests {
             l
         };
         let mut paged = PagedKvCache::new(&m, 2, 16, 2);
-        paged.reserve(0, long.len());
-        paged.reserve(1, short.len());
+        paged.reserve(0, long.len()).unwrap();
+        paged.reserve(1, short.len()).unwrap();
         let mut logits_long = Vec::new();
         let mut logits_short = Vec::new();
         for step in 0..3 {
@@ -864,8 +1286,8 @@ mod tests {
         let mut fresh = PagedKvCache::new(&m, 2, 16, 2);
         let mut reused = PagedKvCache::new(&m, 2, 16, 2);
         for c in [&mut fresh, &mut reused] {
-            c.reserve(0, long.len());
-            c.reserve(1, short.len());
+            c.reserve(0, long.len()).unwrap();
+            c.reserve(1, short.len()).unwrap();
         }
         // capacity 3 rows / 2 feeds: span 2 (slot 0) + span 1 (slot 1)
         let mut scratch = DecodeScratch::new(&m, 3, 2);
@@ -931,7 +1353,7 @@ mod tests {
                 crate::sparse::par::set_skinny_fast_path(fast);
                 let mut cache = PagedKvCache::new(&m, 3, 32, 4);
                 for s in 0..3 {
-                    cache.reserve(s, prompt.len() + 8);
+                    cache.reserve(s, prompt.len() + 8).unwrap();
                 }
                 let mut scratch =
                     DecodeScratch::new(&m, 3 * prompt.len(), 3);
@@ -1011,8 +1433,8 @@ mod tests {
         let m = toy_model(FfnBackend::Twell);
         let n_layers = m.cfg.n_layers as u64;
         let mut cache = PagedKvCache::new(&m, 2, 16, 2);
-        cache.reserve(0, 8);
-        cache.reserve(1, 8);
+        cache.reserve(0, 8).unwrap();
+        cache.reserve(1, 8).unwrap();
         let mut scratch = DecodeScratch::new(&m, 8, 2);
         scratch.route.enabled = true;
         scratch.route.max_density = 1.0; // any union would route
@@ -1042,14 +1464,14 @@ mod tests {
         // it recycles A's physical blocks
         let m = toy_model(FfnBackend::Dense);
         let mut batch = PagedKvCache::new(&m, 2, 8, 2);
-        batch.reserve(0, 4);
+        batch.reserve(0, 4).unwrap();
         for &t in &[9u32, 2, 2, 17] {
             m.decode_step_batch(&mut batch, &[(0, t)]);
         }
         batch.release_slot(0);
         assert_eq!(batch.len[0], 0);
         assert_eq!(batch.blocks_in_use(), 0);
-        batch.reserve(0, 3);
+        batch.reserve(0, 3).unwrap();
         let mut cache = KvCache::new(&m, 8);
         for &t in &[5u32, 31, 0] {
             let lb = m.decode_step_batch(&mut batch, &[(0, t)]);
@@ -1066,7 +1488,7 @@ mod tests {
         let m = toy_model(FfnBackend::Dense);
         let mut cache = PagedKvCache::new(&m, 4, 32, 4);
         assert_eq!(cache.blocks_in_use(), 0);
-        cache.reserve(0, 16); // worst case: 4 blocks promised
+        cache.reserve(0, 16).unwrap(); // worst case: 4 blocks promised
         assert_eq!(cache.blocks_in_use(), 0); // ...but none allocated yet
         for (n, &t) in [9u32, 2, 2, 17, 5].iter().enumerate() {
             m.decode_step_batch(&mut cache, &[(0, t)]);
@@ -1085,14 +1507,241 @@ mod tests {
         let mut cache = PagedKvCache::new(&m, 2, 8, 4);
         assert_eq!(cache.available_blocks(), 8);
         assert_eq!(cache.blocks_for(10), 3);
-        cache.reserve(0, 10); // 3 blocks
+        cache.reserve(0, 10).unwrap(); // 3 blocks
         assert_eq!(cache.available_blocks(), 5);
-        cache.reserve(1, 20); // 5 blocks
+        cache.reserve(1, 20).unwrap(); // 5 blocks
         assert_eq!(cache.available_blocks(), 0);
         cache.release_slot(0);
         assert_eq!(cache.available_blocks(), 3);
         cache.release_slot(1);
         assert_eq!(cache.available_blocks(), 8);
+    }
+
+    #[test]
+    fn over_budget_reservation_is_rejected_not_a_panic() {
+        // the admission path must get a value back, not a dead shard
+        let m = toy_model(FfnBackend::Dense);
+        let mut cache = PagedKvCache::new(&m, 2, 8, 4);
+        let err = cache.reserve(0, 40).unwrap_err();
+        assert_eq!(err, ReserveError { need: 10, available: 8 });
+        assert!(err.to_string().contains("exceeds the budget"));
+        // a failed reservation leaves the pool untouched and usable
+        assert_eq!(cache.available_blocks(), 8);
+        cache.reserve(0, 32).unwrap();
+        assert_eq!(cache.available_blocks(), 0);
+        // admit() surfaces the same error with sharing enabled
+        let mut shared = PagedKvCache::new(&m, 2, 8, 4);
+        shared.set_prefix_cache(true);
+        assert!(shared.admit(0, &[1, 2, 3], 40).is_err());
+        assert_eq!(shared.available_blocks(), 8);
+        assert!(shared.admit(0, &[1, 2, 3], 3).is_ok());
+    }
+
+    /// Warm-admit `prompt` into `slot` of a prefix-enabled cache and
+    /// check the resulting final-token logits are bit-exact with an
+    /// isolated no-sharing prefill of the same prompt.
+    fn assert_warm_parity(
+        m: &Model, cache: &mut PagedKvCache, slot: usize, prompt: &[u32],
+        info: PrefixAdmit,
+    ) {
+        let l =
+            m.prefill_decode_step(cache, &[(slot,
+                &prompt[info.cached_positions..])]);
+        let mut fresh = PagedKvCache::new(m, 1, 32, cache.block_size);
+        fresh.reserve(0, prompt.len()).unwrap();
+        let lf = m.prefill_decode_step(&mut fresh, &[(0, prompt)]);
+        assert_eq!(lf.row(0), l.row(0),
+                   "shared-prefix logits not bit-exact");
+    }
+
+    /// Two prompts sharing a multi-block prefix: the second admission
+    /// attaches the full blocks, CoW-copies the divergence block, and
+    /// stays bit-exact with an unshared prefill — on both backends.
+    fn prefix_sharing_parity(backend: FfnBackend) {
+        let m = toy_model(backend);
+        let mut cache = PagedKvCache::new(&m, 3, 32, 4);
+        cache.set_prefix_cache(true);
+        let prefix: Vec<u32> = (0..12).map(|i| (i * 7 + 3) % 32).collect();
+        let mut a = prefix.clone();
+        a.extend([5, 9]);
+        let mut b = prefix.clone();
+        b.extend([5, 11, 2]);
+        // cold: slot 0 computes everything itself
+        let info = cache.admit(0, &a, a.len()).unwrap();
+        assert_eq!(info, PrefixAdmit::default());
+        m.prefill_decode_step(&mut cache, &[(0, &a[..])]);
+        let cold_blocks = cache.blocks_in_use();
+        // warm: slot 1 attaches the 3 full prefix blocks and copies
+        // the 1 matching row (token 5) of the divergence block
+        let info = cache.admit(1, &b, b.len()).unwrap();
+        assert_eq!(
+            info,
+            PrefixAdmit {
+                cached_positions: 13,
+                shared_blocks: 3,
+                cow_rows: 1
+            }
+        );
+        assert_warm_parity(&m, &mut cache, 1, &b, info);
+        // sharing held the pool flat: slot 1 added one private block,
+        // not a second copy of the whole prefix
+        assert_eq!(cache.blocks_in_use(), cold_blocks + 1);
+    }
+
+    #[test]
+    fn prefix_sharing_bit_exact_dense() {
+        prefix_sharing_parity(FfnBackend::Dense);
+    }
+
+    #[test]
+    fn prefix_sharing_bit_exact_twell() {
+        prefix_sharing_parity(FfnBackend::Twell);
+    }
+
+    #[test]
+    fn full_prefix_hit_recomputes_only_the_last_token() {
+        // an identical prompt re-admitted: every position but the last
+        // comes from the pool (there must be logits to sample), and
+        // the logits match the cold run bit for bit
+        let m = toy_model(FfnBackend::Dense);
+        let mut cache = PagedKvCache::new(&m, 2, 32, 4);
+        cache.set_prefix_cache(true);
+        let prompt: Vec<u32> = (0..16).map(|i| (i * 3 + 1) % 32).collect();
+        cache.admit(0, &prompt, prompt.len()).unwrap();
+        let la = m.prefill_decode_step(&mut cache, &[(0, &prompt[..])]);
+        let la = la.row(0).to_vec();
+        let info = cache.admit(1, &prompt, prompt.len()).unwrap();
+        // 16 tokens = 4 blocks, but only 15 positions are reusable:
+        // 3 full blocks attach, rows 12..15 CoW-copy, the last token
+        // is recomputed
+        assert_eq!(
+            info,
+            PrefixAdmit {
+                cached_positions: 15,
+                shared_blocks: 3,
+                cow_rows: 3
+            }
+        );
+        let lb = m.prefill_decode_step(&mut cache, &[(1, &prompt[15..])]);
+        assert_eq!(la.as_slice(), lb.row(0));
+    }
+
+    #[test]
+    fn divergence_on_a_block_boundary_shares_without_cow() {
+        // prompts agree for exactly one block and split on the first
+        // token of the next: one attached block, no copy
+        let m = toy_model(FfnBackend::Dense);
+        let mut cache = PagedKvCache::new(&m, 2, 32, 4);
+        cache.set_prefix_cache(true);
+        let a: Vec<u32> = vec![1, 2, 3, 4, 5, 6, 7, 8, 9];
+        let b: Vec<u32> = vec![1, 2, 3, 4, 9, 9, 9, 9, 9];
+        cache.admit(0, &a, a.len()).unwrap();
+        m.prefill_decode_step(&mut cache, &[(0, &a[..])]);
+        let info = cache.admit(1, &b, b.len()).unwrap();
+        assert_eq!(
+            info,
+            PrefixAdmit {
+                cached_positions: 4,
+                shared_blocks: 1,
+                cow_rows: 0
+            }
+        );
+        assert_warm_parity(&m, &mut cache, 1, &b, info);
+    }
+
+    #[test]
+    fn prefix_shorter_than_one_block_shares_no_blocks() {
+        // agreement shorter than a block never attaches by refcount —
+        // each sequence owns its own physical blocks (at most the
+        // matching rows are copied)
+        let m = toy_model(FfnBackend::Dense);
+        let mut cache = PagedKvCache::new(&m, 2, 32, 8);
+        cache.set_prefix_cache(true);
+        let a: Vec<u32> = vec![1, 2, 3, 50, 51];
+        let b: Vec<u32> = vec![1, 2, 3, 60, 61];
+        cache.admit(0, &a, a.len()).unwrap();
+        m.prefill_decode_step(&mut cache, &[(0, &a[..])]);
+        let info = cache.admit(1, &b, b.len()).unwrap();
+        assert_eq!(info.shared_blocks, 0);
+        assert_eq!(info.cow_rows, 3);
+        assert_warm_parity(&m, &mut cache, 1, &b, info);
+        // one private block each — nothing refcount-shared
+        assert_eq!(cache.blocks_in_use(), 2);
+        cache.release_slot(0);
+        let c: Vec<u32> = vec![1, 2, 3, 60, 61, 7];
+        let info = cache.admit(0, &c, c.len()).unwrap();
+        assert_eq!((info.shared_blocks, info.cow_rows), (0, 5));
+        assert_warm_parity(&m, &mut cache, 0, &c, info);
+    }
+
+    #[test]
+    fn release_order_with_shared_refcounts() {
+        // the donor retires FIRST; the sharer's attached blocks must
+        // survive (refcount > 1 at attach time) and keep decoding
+        // bit-exactly, and only the final release reclaims everything
+        let m = toy_model(FfnBackend::Dense);
+        let mut cache = PagedKvCache::new(&m, 2, 16, 2);
+        cache.set_prefix_cache(true);
+        let prompt: Vec<u32> = vec![3, 1, 4, 1, 5, 9, 2];
+        cache.admit(0, &prompt, prompt.len() + 4).unwrap();
+        m.prefill_decode_step(&mut cache, &[(0, &prompt[..])]);
+        let info = cache.admit(1, &prompt, prompt.len() + 4).unwrap();
+        assert_eq!(info.shared_blocks, 3);
+        m.prefill_decode_step(
+            &mut cache, &[(1, &prompt[info.cached_positions..])]);
+        let held = cache.blocks_in_use();
+        cache.release_slot(0);
+        // shared blocks still referenced by slot 1: not reclaimable
+        assert!(cache.blocks_in_use() >= info.shared_blocks);
+        assert!(cache.blocks_in_use() <= held);
+        // slot 1 decodes on: greedy feedback vs an isolated reference
+        let mut kv = KvCache::new(&m, 16);
+        let mut expect = Vec::new();
+        for &t in &prompt {
+            expect = m.decode_step(&mut kv, t);
+        }
+        let mut tok = [argmax(&expect) as u32];
+        for _ in 0..3 {
+            let lb =
+                m.prefill_decode_step(&mut cache, &[(1, &tok[..])]);
+            let ls = m.decode_step(&mut kv, tok[0]);
+            assert_eq!(ls.as_slice(), lb.row(0),
+                       "sharer diverged after donor release");
+            tok[0] = argmax(&ls) as u32;
+        }
+        cache.release_slot(1);
+        assert_eq!(cache.blocks_in_use(), 0);
+        assert_eq!(cache.available_blocks(), 16);
+    }
+
+    #[test]
+    fn retained_prefixes_are_evicted_under_pressure() {
+        // a retired donor's blocks are retained for hits but evicted
+        // (identity scrubbed) the moment a stranger needs the space
+        let m = toy_model(FfnBackend::Dense);
+        let mut cache = PagedKvCache::new(&m, 1, 4, 2);
+        cache.set_prefix_cache(true);
+        let a: Vec<u32> = vec![1, 2, 3, 4, 5];
+        cache.admit(0, &a, a.len()).unwrap();
+        m.prefill_decode_step(&mut cache, &[(0, &a[..])]);
+        cache.release_slot(0);
+        assert_eq!(cache.blocks_in_use(), 0);
+        assert_eq!(cache.available_blocks(), 4);
+        // a disjoint prompt needing the whole pool must still admit
+        let b: Vec<u32> = vec![9, 8, 7, 6, 5, 4, 3, 2];
+        let info = cache.admit(0, &b, b.len()).unwrap();
+        assert_eq!(info, PrefixAdmit::default());
+        let lb = m.prefill_decode_step(&mut cache, &[(0, &b[..])]);
+        let mut kv = KvCache::new(&m, 8);
+        let mut ls = Vec::new();
+        for &t in &b {
+            ls = m.decode_step(&mut kv, t);
+        }
+        assert_eq!(ls.as_slice(), lb.row(0));
+        cache.release_slot(0);
+        // the evicted prefix is really gone: admitting `a` is cold
+        let info = cache.admit(0, &a, a.len()).unwrap();
+        assert_eq!(info.shared_blocks, 0);
     }
 
     #[test]

@@ -139,9 +139,14 @@ impl AdmissionQueue {
     /// prefix of the FIFO the shard's capacity covers (popping an item
     /// transfers ownership — exactly-once dispatch).  `scan` must be
     /// deterministic sequential logic over the deque and the shard's
-    /// own budget: it runs with the lock held, so no kernel work and
+    /// own state: it runs with the lock held, so no kernel work and
     /// no other lock belongs inside it (lock order: the queue lock is
-    /// a leaf).
+    /// a leaf).  The continuous engine *admits* inside its scan —
+    /// reserving KV, attaching shared prefix blocks, and copying at
+    /// most one block of K/V rows — which stays within the contract:
+    /// bounded shard-local work against the shard's own pool, so the
+    /// budget checked is exactly the budget consumed, with no window
+    /// for a concurrent install to invalidate the plan.
     ///
     /// Liveness note: an idle shard's capacity always covers the FIFO
     /// head (an idle shard's KV pool is fully free, and `submit`

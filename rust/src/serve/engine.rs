@@ -22,7 +22,7 @@
 use std::sync::{Arc, Mutex};
 
 use crate::model::kv::{kv_positions_needed, sample_decode, DecodeScratch,
-                       PagedKvCache};
+                       PagedKvCache, PrefixAdmit};
 use crate::model::sample::Sampler;
 use crate::model::Model;
 
@@ -119,6 +119,7 @@ pub(crate) fn continuous_loop(
     let mut cache = PagedKvCache::new(
         &model, policy.slots, policy.kv_blocks, policy.kv_block_size,
     );
+    cache.set_prefix_cache(policy.prefix_cache);
     let mut slots: Vec<Option<Slot>> =
         (0..policy.slots).map(|_| None).collect();
     let mut active = 0usize;
@@ -135,8 +136,9 @@ pub(crate) fn continuous_loop(
     scratch.route.enabled = policy.route_density > 0.0;
     scratch.route.max_density = policy.route_density;
     enum Admit {
-        /// answered or installed this wave
-        Take,
+        /// answered or installed this wave; a `Some` carries the slot
+        /// the scan reserved and the prefix-attach outcome
+        Take(Option<(usize, PrefixAdmit)>),
         /// worst case exceeds the whole pool: can never be served
         Reject,
         /// head of the queue waits for blocks / a slot to free up —
@@ -144,44 +146,62 @@ pub(crate) fn continuous_loop(
         Wait,
     }
     loop {
-        // ---- admission wave: pull queued requests in FIFO order while
-        // this shard's block budget and slot pool cover them.  The scan
-        // runs under the queue lock (deterministic budget arithmetic
-        // only — no kernels, no other locks); an idle shard parks
-        // inside `poll` until work or shutdown arrives ----------------
+        // ---- admission wave: pull queued requests in FIFO order
+        // while this shard's block budget and slot pool cover them.
+        // The scan runs under the queue lock and *performs* each
+        // admission — `cache.admit` plans the prefix attach, charges
+        // the unshared worst case, and copy-on-writes at most one
+        // block — so the budget it checks is exactly the budget it
+        // consumes (deterministic sequential work only: no kernels,
+        // no other locks).  An idle shard parks inside `poll` until
+        // work or shutdown arrives -----------------------------------
+        // lowest-index-first placement, as `position` gave before
+        let mut free_si: Vec<usize> = (0..policy.slots)
+            .rev()
+            .filter(|&si| slots[si].is_none())
+            .collect();
+        let mut plans: Vec<Option<(usize, PrefixAdmit)>> = Vec::new();
         let wave = queue.poll(active > 0, |items| {
             let mut take = Vec::new();
-            let mut budget = cache.available_blocks();
-            let mut free_slots = policy.slots - active;
             loop {
                 let decision = match items.front() {
                     None => break,
                     // abandoned or degenerate requests take no slot or
                     // blocks, so they never have to wait for either
-                    Some(p) if p.abandoned() => Admit::Take,
+                    Some(p) if p.abandoned() => Admit::Take(None),
                     Some(p) if p.req.max_new == 0
                         || p.req.prompt.is_empty() =>
                     {
-                        Admit::Take
+                        Admit::Take(None)
                     }
                     Some(p) => {
-                        let need = cache.blocks_for(kv_positions_needed(
+                        let positions = kv_positions_needed(
                             p.req.prompt.len(),
                             p.req.max_new,
-                        ));
-                        if need > cache.num_blocks {
+                        );
+                        if cache.blocks_for(positions) > cache.num_blocks
+                        {
                             Admit::Reject
-                        } else if free_slots == 0 || need > budget {
-                            Admit::Wait
+                        } else if let Some(&si) = free_si.last() {
+                            match cache
+                                .admit(si, &p.req.prompt, positions)
+                            {
+                                Ok(info) => {
+                                    free_si.pop();
+                                    Admit::Take(Some((si, info)))
+                                }
+                                // over budget *after* sharing: wait
+                                // for blocks to free up
+                                Err(_) => Admit::Wait,
+                            }
                         } else {
-                            budget -= need;
-                            free_slots -= 1;
-                            Admit::Take
+                            Admit::Wait
                         }
                     }
                 };
                 match decision {
-                    Admit::Take => {
+                    Admit::Take(plan) => {
+                        plans.push(plan);
                         take.push(items.pop_front().unwrap());
                     }
                     Admit::Reject => {
@@ -206,16 +226,28 @@ pub(crate) fn continuous_loop(
             Wave::Admitted(v) => v,
             Wave::Stopped => return,
         };
-        for p in admitted {
+        // a true backfill: some already-admitted sequence has made
+        // progress, i.e. this wave lands mid-decode.  Computed against
+        // the pre-wave state: installs from this same wave don't make
+        // each other "backfills", even when a prefix hit starts one
+        // mid-prompt.
+        let backfill = slots.iter().flatten().any(|s| {
+            s.prompt_pos > 0 || !s.tokens.is_empty()
+        });
+        for (p, plan) in admitted.into_iter().zip(plans) {
             // queue time ends here, at dequeue — measured exactly once
             let queue_ms = p.enqueued.elapsed().as_secs_f64() * 1e3;
             if p.abandoned() {
-                // the caller vanished while the request was queued:
-                // don't spend a slot (or any KV blocks) on it
+                // the caller vanished while the request was queued (or
+                // between the scan and this install): release whatever
+                // the scan attached — don't strand the slot or blocks
+                if let Some((si, _)) = plan {
+                    cache.release_slot(si);
+                }
                 stats.lock().unwrap().abandoned += 1;
                 continue;
             }
-            if p.req.max_new == 0 || p.req.prompt.is_empty() {
+            let Some((si, info)) = plan else {
                 // nothing to generate — an empty prompt has no logits
                 // to sample (see `argmax`): empty completion, no slot.
                 // Stats land before the send (see `serve_one`).
@@ -230,26 +262,16 @@ pub(crate) fn continuous_loop(
                     prefill_tokens: p.req.prompt.len(),
                 });
                 continue;
-            }
-            let si = slots
-                .iter()
-                .position(|s| s.is_none())
-                .expect("admission beyond free slots");
-            cache.reserve(
-                si,
-                kv_positions_needed(p.req.prompt.len(), p.req.max_new),
-            );
-            // a true backfill: some already-admitted sequence has made
-            // progress, i.e. this admission lands mid-decode (not in
-            // the same first wave into an idle shard)
-            let backfill = slots.iter().flatten().any(|s| {
-                s.prompt_pos > 0 || !s.tokens.is_empty()
-            });
+            };
+            debug_assert!(slots[si].is_none());
             let sampler = Sampler::new(p.req.params);
             slots[si] = Some(Slot {
                 p,
                 queue_ms,
-                prompt_pos: 0,
+                // chunked prefill skips straight past the prefix the
+                // pool already held — on a full hit the very next step
+                // feeds the final prompt token and samples
+                prompt_pos: info.cached_positions,
                 tokens: Vec::new(),
                 next_feed: 0,
                 first_token_ms: None,
@@ -258,6 +280,13 @@ pub(crate) fn continuous_loop(
             active += 1;
             let mut st = stats.lock().unwrap();
             st.admissions += 1;
+            if info.cached_positions > 0 {
+                st.prefix_hits += 1;
+            }
+            st.prefix_blocks_shared += info.shared_blocks as u64;
+            if info.cow_rows > 0 {
+                st.cow_copies += 1;
+            }
             if backfill {
                 st.backfilled += 1;
             }
@@ -312,6 +341,8 @@ pub(crate) fn continuous_loop(
             let mut st = stats.lock().unwrap();
             st.steps += 1;
             st.prefill_chunks += prefilling;
+            st.kv_blocks_peak =
+                st.kv_blocks_peak.max(cache.blocks_in_use());
             let r = scratch.route.stats.take();
             st.ffn_row += r.row;
             st.ffn_col += r.col;

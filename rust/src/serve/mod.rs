@@ -226,6 +226,15 @@ pub struct ServePolicy {
     /// capacity and one engine thread; see the module docs for the
     /// topology and placement policy.
     pub shards: usize,
+    /// Copy-on-write prefix caching over the paged KV pool
+    /// (continuous mode): admissions whose prompt prefix matches
+    /// blocks an earlier sequence wrote attach those blocks by
+    /// refcount instead of recomputing them, collapsing TTFT for hot
+    /// system prompts.  Decoded streams are bit-identical either way
+    /// (same kernels, same accumulation order — only block placement
+    /// changes), so this defaults to on; turn it off to pin the
+    /// historical allocator behaviour.
+    pub prefix_cache: bool,
     pub mode: ServeMode,
 }
 
@@ -239,6 +248,7 @@ impl Default for ServePolicy {
             prefill_chunk: 16,
             route_density: crate::sparse::route::DEFAULT_ROUTE_DENSITY,
             shards: 1,
+            prefix_cache: true,
             mode: ServeMode::Continuous,
         }
     }
@@ -439,6 +449,7 @@ mod tests {
             prefill_chunk: 8,
             route_density: 0.25,
             shards: 1,
+            prefix_cache: true,
             mode,
         }
     }
@@ -998,6 +1009,7 @@ mod tests {
             prefill_chunk: 4,
             route_density: 0.25,
             shards: 1,
+            prefix_cache: true,
             mode: ServeMode::Continuous,
         });
         let (_, rx) = server.submit(prompt, 3).unwrap();
@@ -1052,6 +1064,7 @@ mod tests {
             prefill_chunk: 16,
             route_density: 0.25,
             shards: 1,
+            prefix_cache: true,
             mode: ServeMode::Continuous,
         });
         let (_, rx_a) = server.submit(vec![1, 2, 3], 500).unwrap();
@@ -1077,6 +1090,7 @@ mod tests {
             prefill_chunk: 8,
             route_density: 0.25,
             shards: 1,
+            prefix_cache: true,
             mode: ServeMode::Sequential,
         });
         let (_, rx) = server.submit(vec![1, 2], 3).unwrap();
@@ -1161,6 +1175,7 @@ mod tests {
             prefill_chunk: 8,
             route_density: 0.25,
             shards: 1,
+            prefix_cache: true,
             mode: ServeMode::Continuous,
         });
         let (_, rx) = server.submit(long_prompt, 3).unwrap();
@@ -1204,6 +1219,7 @@ mod tests {
             prefill_chunk: 4,
             route_density: 0.25,
             shards: 1,
+            prefix_cache: true,
             mode: ServeMode::Continuous,
         });
         let (_, rx) = server.submit(prompt, 4).unwrap();
@@ -1231,6 +1247,7 @@ mod tests {
             prefill_chunk: 4,
             route_density: 0.25,
             shards: 1,
+            prefix_cache: true,
             mode: ServeMode::Continuous,
         });
         let rxs: Vec<_> = (0..5u32)
@@ -1325,5 +1342,175 @@ mod tests {
             server.shutdown();
             Ok(())
         });
+    }
+
+    /// The tentpole acceptance criterion: the same prompt set produces
+    /// bit-identical token streams with prefix caching on and off —
+    /// Dense and TwELL, shards {1, 2} — because sharing changes block
+    /// *placement* only, never kernels or accumulation order.  The
+    /// workload is built to genuinely engage sharing: a donor request
+    /// completes alone (its blocks retire into the cache), then a wave
+    /// reuses the same multi-block prefix with divergent tails.
+    fn prefix_cache_on_off_bit_identical(backend: FfnBackend) {
+        let prefix: Vec<u32> = (0..20).map(|i| (i * 5 + 2) % 32).collect();
+        let tails: Vec<Vec<u32>> =
+            vec![vec![], vec![1, 2, 3], vec![9], vec![30, 4, 17, 8]];
+        let prompts: Vec<Vec<u32>> = tails
+            .iter()
+            .map(|t| prefix.iter().chain(t.iter()).copied().collect())
+            .collect();
+        let reference_model = toy_model(backend);
+        let expected: Vec<Vec<u32>> = prompts
+            .iter()
+            .map(|p| reference_model.generate(p, 4))
+            .collect();
+        let run = |shards: usize, prefix_cache: bool| -> Vec<Vec<u32>> {
+            let server = Server::start(toy_model(backend), ServePolicy {
+                shards,
+                prefix_cache,
+                ..policy(2, ServeMode::Continuous)
+            });
+            // donor first, alone, so the prefix is already cached when
+            // the wave arrives
+            let (_, rx) = server.submit(prompts[0].clone(), 4).unwrap();
+            let donor = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+            let mut out = vec![donor.tokens];
+            let rxs: Vec<_> = prompts[1..]
+                .iter()
+                .map(|p| server.submit(p.clone(), 4).unwrap().1)
+                .collect();
+            for rx in rxs {
+                let c = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+                out.push(c.tokens);
+            }
+            let st = server.stats();
+            if prefix_cache && shards == 1 {
+                // one shard sees every request: the donor's cached
+                // prefix must be found (at 2 shards placement decides
+                // which cache a request lands in, so no hit guarantee)
+                assert!(st.prefix_hits > 0,
+                        "sharing never engaged: {st:?}");
+                assert!(st.prefix_blocks_shared > 0, "{st:?}");
+            }
+            if !prefix_cache {
+                assert_eq!(st.prefix_hits, 0, "{st:?}");
+                assert_eq!(st.prefix_blocks_shared, 0, "{st:?}");
+                assert_eq!(st.cow_copies, 0, "{st:?}");
+            }
+            server.shutdown();
+            out
+        };
+        for shards in [1usize, 2] {
+            let on = run(shards, true);
+            let off = run(shards, false);
+            assert_eq!(on, off,
+                       "prefix cache on/off diverged at {shards} shards \
+                        ({backend:?})");
+            assert_eq!(on, expected,
+                       "served != generate at {shards} shards ({backend:?})");
+        }
+    }
+
+    #[test]
+    fn prefix_cache_on_off_bit_identical_dense() {
+        prefix_cache_on_off_bit_identical(FfnBackend::Dense);
+    }
+
+    #[test]
+    fn prefix_cache_on_off_bit_identical_twell() {
+        prefix_cache_on_off_bit_identical(FfnBackend::Twell);
+    }
+
+    #[test]
+    fn full_prefix_hit_skips_straight_to_the_last_token() {
+        // 24-token prompt, block = chunk = 8: request A prefills cold
+        // in ceil(24/8) = 3 chunks and retires its blocks into the
+        // cache.  An identical request B attaches blocks 0-1 (16
+        // positions) and copies 7 rows of block 2 (the copy budget
+        // keeps one row back so the final prompt token recomputes and
+        // yields B's first logits): B's whole prefill is one 1-token
+        // chunk, and its latency ordering still holds.
+        let model = toy_model(FfnBackend::Dense);
+        let prompt: Vec<u32> = (0..24).map(|i| (i * 3 + 1) % 32).collect();
+        let reference = model.generate(&prompt, 3);
+        let server = Server::start(model, policy(2, ServeMode::Continuous));
+        let (_, rx_a) = server.submit(prompt.clone(), 3).unwrap();
+        let a = rx_a.recv_timeout(Duration::from_secs(60)).unwrap();
+        assert_eq!(a.tokens, reference);
+        assert_eq!(server.stats().prefill_chunks, 3,
+                   "cold prefill takes ceil(24 / 8) chunks");
+        let (_, rx_b) = server.submit(prompt, 3).unwrap();
+        let b = rx_b.recv_timeout(Duration::from_secs(60)).unwrap();
+        assert_eq!(b.tokens, reference, "warm stream != cold stream");
+        assert_eq!(b.prefill_tokens, 24);
+        assert!(b.queue_ms <= b.first_token_ms,
+                "queue {} > first {}", b.queue_ms, b.first_token_ms);
+        assert!(b.first_token_ms <= b.total_ms,
+                "first {} > total {}", b.first_token_ms, b.total_ms);
+        let st = server.stats();
+        assert_eq!(st.prefill_chunks, 4,
+                   "the warm prefill collapses to a single chunk: {st:?}");
+        assert_eq!(st.prefix_hits, 1, "{st:?}");
+        assert_eq!(st.prefix_blocks_shared, 2, "{st:?}");
+        assert_eq!(st.cow_copies, 1, "{st:?}");
+        assert!(st.kv_blocks_peak >= 4, "{st:?}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn abandoned_sharing_sequence_releases_its_refcounts() {
+        // donor A seeds the cache; sharer B attaches to A's retired
+        // blocks and its caller vanishes immediately.  The engine must
+        // retire B — dropping the shared refcounts back to zero — and
+        // still serve an identical later request C correctly off the
+        // same cached prefix.
+        let model = toy_model(FfnBackend::Dense);
+        let prompt: Vec<u32> = (0..24).map(|i| (i * 7 + 5) % 32).collect();
+        let reference = model.generate(&prompt, 4);
+        let server = Server::start(model, policy(2, ServeMode::Continuous));
+        let (_, rx_a) = server.submit(prompt.clone(), 4).unwrap();
+        let a = rx_a.recv_timeout(Duration::from_secs(60)).unwrap();
+        assert_eq!(a.tokens, reference);
+        let (_, rx_b) = server.submit(prompt.clone(), 200).unwrap();
+        drop(rx_b); // the caller abandons a sequence that shares blocks
+        let (_, rx_c) = server.submit(prompt, 4).unwrap();
+        let c = rx_c.recv_timeout(Duration::from_secs(60)).unwrap();
+        assert_eq!(c.tokens, reference);
+        let st = server.stats();
+        assert_eq!(st.abandoned, 1, "{st:?}");
+        // C must still find the prefix (B, if it counted a hit before
+        // being reaped, adds at most one more)
+        assert!(st.prefix_hits >= 1, "{st:?}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn one_thread_total_across_four_shards_still_serves() {
+        // the `--threads 1 --shards 4` CLI combination: the per-shard
+        // budget clamps to one partition per shard instead of a
+        // zero-thread pool, and the served streams stay pinned to
+        // `generate`
+        let _g = crate::sparse::par::test_guard();
+        let orig = crate::sparse::par::num_threads();
+        let per = crate::sparse::par::threads_per_shard(1, 4);
+        assert_eq!(per, 1, "budget below the shard count clamps to 1");
+        crate::sparse::par::set_threads(per);
+        let model = toy_model(FfnBackend::Twell);
+        let expected: Vec<Vec<u32>> = (0..8u32)
+            .map(|i| model.generate(&[i % 32, 5, 9], 4))
+            .collect();
+        let server = Server::start(model, ServePolicy {
+            shards: 4,
+            ..policy(2, ServeMode::Continuous)
+        });
+        let rxs: Vec<_> = (0..8u32)
+            .map(|i| server.submit(vec![i % 32, 5, 9], 4).unwrap().1)
+            .collect();
+        for (rx, exp) in rxs.into_iter().zip(&expected) {
+            let c = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+            assert_eq!(&c.tokens, exp);
+        }
+        server.shutdown();
+        crate::sparse::par::set_threads(orig);
     }
 }

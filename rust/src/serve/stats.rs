@@ -75,6 +75,18 @@ pub struct EngineStats {
     /// number of union-density measurements folded into
     /// `union_density_sum`
     pub union_density_calls: u64,
+    /// admissions whose prompt prefix was (partly) served from the
+    /// prefix cache — attached blocks and/or a copy-on-write copy
+    pub prefix_hits: u64,
+    /// full KV blocks attached by refcount instead of recomputed,
+    /// summed over admissions
+    pub prefix_blocks_shared: u64,
+    /// copy-on-write block copies performed at admission (the first
+    /// divergent or partially-matched block of a prefix hit)
+    pub cow_copies: u64,
+    /// most KV blocks held by live sequences at once on this shard's
+    /// pool (gauge: merge takes the max — each shard owns its pool)
+    pub kv_blocks_peak: usize,
     /// power-of-two request-latency histogram over `total_ms`: bucket
     /// `i` counts completions in `[2^(i-1), 2^i)` ms (see
     /// [`LATENCY_BUCKETS`]); merged element-wise across shards
@@ -93,7 +105,18 @@ impl EngineStats {
     }
 
     /// Fold one completed request's latency into `latency_hist`.
+    ///
+    /// Hardened against clock anomalies: a NaN sample is dropped (with
+    /// a debug assertion — it means a timestamp was fabricated
+    /// upstream) and a negative sample clamps to 0 (a backwards clock
+    /// step is still a "fast" completion).  Both used to land silently
+    /// in bucket 0, corrupting the histogram.
     pub fn record_latency(&mut self, total_ms: f64) {
+        if total_ms.is_nan() {
+            debug_assert!(false, "NaN latency sample");
+            return;
+        }
+        let total_ms = total_ms.max(0.0);
         let mut b = 0usize;
         while b + 1 < LATENCY_BUCKETS
             && total_ms >= (1u64 << b) as f64
@@ -123,8 +146,12 @@ impl EngineStats {
         self.ffn_fallback += other.ffn_fallback;
         self.union_density_sum += other.union_density_sum;
         self.union_density_calls += other.union_density_calls;
+        self.prefix_hits += other.prefix_hits;
+        self.prefix_blocks_shared += other.prefix_blocks_shared;
+        self.cow_copies += other.cow_copies;
         self.max_active = self.max_active.max(other.max_active);
         self.queue_peak = self.queue_peak.max(other.queue_peak);
+        self.kv_blocks_peak = self.kv_blocks_peak.max(other.kv_blocks_peak);
         for (a, b) in
             self.latency_hist.iter_mut().zip(&other.latency_hist)
         {
@@ -221,6 +248,10 @@ mod tests {
             ffn_fallback: 3,
             union_density_sum: 0.5,
             union_density_calls: 6,
+            prefix_hits: 2,
+            prefix_blocks_shared: 8,
+            cow_copies: 1,
+            kv_blocks_peak: 5,
             ..EngineStats::default()
         };
         s.record_latency(0.5);
@@ -244,6 +275,10 @@ mod tests {
             ffn_fallback: 1,
             union_density_sum: 0.25,
             union_density_calls: 2,
+            prefix_hits: 1,
+            prefix_blocks_shared: 3,
+            cow_copies: 0,
+            kv_blocks_peak: 9,
             ..EngineStats::default()
         };
         s.record_latency(3.5);
@@ -266,9 +301,13 @@ mod tests {
         assert_eq!(m.ffn_fallback, 4);
         assert_eq!(m.union_density_calls, 8);
         assert!((m.union_density_sum - 0.75).abs() < 1e-12);
+        assert_eq!(m.prefix_hits, 3);
+        assert_eq!(m.prefix_blocks_shared, 11);
+        assert_eq!(m.cow_copies, 1);
         // gauges: max across shards, never the sum
         assert_eq!(m.max_active, 4);
         assert_eq!(m.queue_peak, 5);
+        assert_eq!(m.kv_blocks_peak, 9);
         assert_eq!(m.latency_samples(), 4);
     }
 
@@ -318,6 +357,35 @@ mod tests {
         assert_eq!(s.latency_hist[2], 1);
         assert_eq!(s.latency_hist[LATENCY_BUCKETS - 1], 1);
         assert_eq!(s.latency_samples(), 5);
+    }
+
+    #[test]
+    fn negative_latency_clamps_to_the_fast_bucket() {
+        // a backwards clock step must not corrupt the histogram: the
+        // sample lands in bucket 0 (a "fast" completion), deliberately
+        // — the same bucket 0.0 lands in
+        let mut s = EngineStats::default();
+        s.record_latency(-3.0);
+        s.record_latency(-0.0);
+        assert_eq!(s.latency_hist[0], 2);
+        assert_eq!(s.latency_samples(), 2);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "NaN latency sample")]
+    fn nan_latency_trips_the_debug_assertion() {
+        EngineStats::default().record_latency(f64::NAN);
+    }
+
+    #[cfg(not(debug_assertions))]
+    #[test]
+    fn nan_latency_is_dropped_in_release() {
+        // release builds skip the sample entirely instead of filing it
+        // in bucket 0
+        let mut s = EngineStats::default();
+        s.record_latency(f64::NAN);
+        assert_eq!(s.latency_samples(), 0);
     }
 
     #[test]

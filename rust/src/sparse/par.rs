@@ -586,6 +586,7 @@ mod tests {
         assert_eq!(threads_per_shard(8, 2), 4);
         assert_eq!(threads_per_shard(8, 3), 2); // remainder stays idle
         assert_eq!(threads_per_shard(1, 4), 1); // never below one
+        assert_eq!(threads_per_shard(3, 4), 1); // budget < shards clamps
         assert_eq!(threads_per_shard(0, 2), 1);
         assert_eq!(threads_per_shard(8, 0), 8); // shards clamps to 1
     }

@@ -11,7 +11,10 @@ The routing A/B sweep must land in the persisted report with a measured
 union density and a dispatch label on every row, for all three paths
 (routed union-gather, TwELL row fallback, dense baseline) — the
 trajectory tooling indexes on these.  The shard sweep must cover shard
-counts {1, 2, 4} with a queue_peak gauge on every row.
+counts {1, 2, 4} with a queue_peak gauge on every row.  The
+prefix-cache sweep must carry the sharing counters on every row and
+show the 80%-shared trace actually winning: TTFT and the peak block
+footprint strictly better with the cache on, hits only when it is on.
 """
 import json
 import sys
@@ -41,6 +44,37 @@ def check(report_path):
         f"shard counts {shard_counts} missing {want_shards - shard_counts}"
     )
     print(f"{len(srows)} shard_sweep rows ok; shards: {sorted(shard_counts)}")
+
+    prows = [r for r in report["rows"] if r.get("section") == "prefix_cache"]
+    assert prows, "no section=prefix_cache rows in the report"
+    for r in prows:
+        for field in ("prefix", "prefix_hits", "prefix_blocks_shared",
+                      "cow_copies", "kv_blocks_peak", "first_token_ms"):
+            assert field in r, f"missing {field}: {r}"
+    by_prefix = {r["prefix"]: r for r in prows}
+    assert set(by_prefix) == {"on", "off"}, (
+        f"expected one on and one off row, got {sorted(by_prefix)}"
+    )
+    on, off = by_prefix["on"], by_prefix["off"]
+    assert on["prefix_hits"] > 0, f"sharing never engaged: {on}"
+    assert off["prefix_hits"] == 0, f"hits counted with the cache off: {off}"
+    assert off["prefix_blocks_shared"] == 0 and off["cow_copies"] == 0, (
+        f"sharing work counted with the cache off: {off}"
+    )
+    assert on["first_token_ms"] < off["first_token_ms"], (
+        "the 80%-shared trace must improve TTFT: "
+        f"on {on['first_token_ms']} >= off {off['first_token_ms']}"
+    )
+    assert on["kv_blocks_peak"] < off["kv_blocks_peak"], (
+        "sharing must shrink the peak block footprint: "
+        f"on {on['kv_blocks_peak']} >= off {off['kv_blocks_peak']}"
+    )
+    print(
+        f"{len(prows)} prefix_cache rows ok; ttft on "
+        f"{on['first_token_ms']:.1f} ms vs off "
+        f"{off['first_token_ms']:.1f} ms, peak blocks "
+        f"{int(on['kv_blocks_peak'])} vs {int(off['kv_blocks_peak'])}"
+    )
 
 
 if __name__ == "__main__":
