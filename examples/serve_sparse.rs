@@ -9,7 +9,8 @@
 //!        [--kv-blocks 128] [--kv-block-size 16] [--prefill-chunk 16] \
 //!        [--route-density 0.25] [--prefix-cache on|off] \
 //!        [--temperature 0.8] [--top-k 40] [--top-p 0.95] [--seed 0] \
-//!        [--threads N] [--shards 1]
+//!        [--threads N] [--shards 1] \
+//!        [--max-queue 0] [--deadline-ms 0]
 //! (trains a quick tiny model if the run does not exist yet;
 //! temperature 0 — the default — decodes greedily, request i samples
 //! with seed `--seed + i` so runs stay reproducible, --threads pins
@@ -27,7 +28,9 @@ use repro::data::corpus::CorpusSpec;
 use repro::model::sample::SamplingParams;
 use repro::model::{FfnBackend, Model};
 use repro::runtime::Runtime;
-use repro::serve::{ServeMetrics, ServeMode, ServePolicy, Server};
+use repro::serve::{
+    ServeMetrics, ServeMode, ServePolicy, Server, SubmitOptions,
+};
 use repro::util::json::Json;
 
 fn main() -> anyhow::Result<()> {
@@ -58,6 +61,16 @@ fn main() -> anyhow::Result<()> {
     let prefill_chunk = args.get_usize("prefill-chunk", kv_block_size)?;
     // union-density threshold for routed decode FFN (twell backend)
     let route_density = args.get_f64("route-density", 0.25)? as f32;
+    // overload QoS: bounded admission queue (0 = unbounded) and an
+    // optional per-request deadline measured from submit (0 = none)
+    let max_queue = args.get_usize("max-queue", 0)?;
+    let deadline_ms = args.get_f64("deadline-ms", 0.0)?;
+    let opts_for = || SubmitOptions {
+        deadline: (deadline_ms > 0.0).then(|| {
+            Instant::now() + Duration::from_secs_f64(deadline_ms / 1e3)
+        }),
+        max_queue_wait: None,
+    };
     // copy-on-write prefix caching in the paged KV pool — token
     // streams are bit-identical on or off (placement only)
     let prefix_cache = match args.get_or("prefix-cache", "on").as_str() {
@@ -118,6 +131,7 @@ fn main() -> anyhow::Result<()> {
                 prefill_chunk,
                 route_density,
                 prefix_cache,
+                max_queue,
                 mode,
                 shards,
             };
@@ -126,12 +140,14 @@ fn main() -> anyhow::Result<()> {
             let rxs: Vec<_> = (0..n_requests)
                 .map(|i| {
                     server
-                        .submit_sampled(
+                        .submit_opts(
                             bpe.encode(prompts[i % prompts.len()]),
                             max_new,
                             params_for(i),
+                            opts_for(),
                         )
                         .map(|(_, rx)| rx)
+                        .map_err(anyhow::Error::new)
                 })
                 .collect::<anyhow::Result<_>>()?;
             let mut metrics = ServeMetrics::default();
@@ -163,6 +179,18 @@ fn main() -> anyhow::Result<()> {
                 stats.prefix_blocks_shared,
                 stats.kv_blocks_peak,
             );
+            if max_queue > 0 || deadline_ms > 0.0 {
+                println!(
+                    "        overload: {} shed at deadline, {} deadline \
+                     aborts, {} busy-shed, {} queue rejections, \
+                     {} shard restarts",
+                    stats.shed_deadline,
+                    stats.deadline_aborts,
+                    stats.shed_busy,
+                    stats.queue_rejections,
+                    stats.shard_restarts,
+                );
+            }
             if shards > 1 {
                 for (i, st) in per_shard.iter().enumerate() {
                     println!(
@@ -189,6 +217,7 @@ fn main() -> anyhow::Result<()> {
         prefill_chunk,
         route_density,
         prefix_cache,
+        max_queue,
         mode: ServeMode::Continuous,
         shards,
     });

@@ -42,8 +42,8 @@ use repro::model::kv::{argmax, kv_positions_needed, DecodeScratch,
                        PagedKvCache};
 use repro::model::sample::SamplingParams;
 use repro::model::{FfnBackend, Layer, Model};
-use repro::serve::{EngineStats, ServeMetrics, ServeMode, ServePolicy,
-                   Server};
+use repro::serve::{EngineStats, FinishReason, ServeMetrics, ServeMode,
+                   ServePolicy, Server, SubmitError, SubmitOptions};
 use repro::sparse::ffn::synth_sparse_ffn;
 use repro::sparse::par;
 use repro::sparse::route::RouteStats;
@@ -126,6 +126,7 @@ fn run_wave(backend: FfnBackend, shards: usize, slots: usize,
         // engage, so keep it off and the historical sections exactly
         // comparable across PRs (the prefix_cache section measures it)
         prefix_cache: false,
+        max_queue: 0,
         mode: ServeMode::Continuous,
         shards,
     });
@@ -192,6 +193,7 @@ fn run_prefix_wave(
         prefill_chunk: kv_block_size,
         route_density: 0.25,
         prefix_cache,
+        max_queue: 0,
         mode: ServeMode::Continuous,
         shards: 1,
     });
@@ -243,6 +245,106 @@ fn run_prefix_wave(
         stats,
         streams,
     );
+    server.shutdown();
+    out
+}
+
+/// One overload wave: a burst far above the 2-slot engine's capacity,
+/// with or without the QoS layer.  Shedding on means a bounded queue
+/// (`max_queue = slots`), a 2 ms cap on how long each submit waits for
+/// queue space, and a per-request deadline of `deadline_ms` from
+/// submit — except every 4th request, which arrives with its deadline
+/// already spent (a client that gave up), so the admission scan's
+/// deadline shedding provably engages.  Shedding off is the historical
+/// behaviour: unbounded queue, no deadlines, everyone waits.
+///
+/// Returns (goodput tok/s, p99 TTFT ms over served requests, merged
+/// stats, served count).  *Goodput* counts only tokens from requests
+/// that ran to completion within the `deadline_ms` budget — the
+/// shed-off run is judged against the same budget it ignored, which is
+/// exactly the comparison: under overload, serving everyone late is
+/// worth less than serving fewer on time.
+fn run_overload_wave(
+    shed: bool, n_requests: usize, prompt_len: usize, max_new: usize,
+    deadline_ms: f64,
+) -> (f64, f64, EngineStats, usize) {
+    let model = synthetic_model(4, 30.0, FfnBackend::Twell);
+    let vocab = model.cfg.vocab_size;
+    let slots = 2usize;
+    let kv_block_size = 16usize;
+    let kv_blocks = slots
+        * kv_positions_needed(prompt_len, max_new).div_ceil(kv_block_size);
+    let server = Server::start(model, ServePolicy {
+        slots,
+        max_wait: Duration::from_millis(2),
+        kv_block_size,
+        kv_blocks,
+        prefill_chunk: kv_block_size,
+        route_density: 0.25,
+        prefix_cache: false,
+        max_queue: if shed { slots } else { 0 },
+        mode: ServeMode::Continuous,
+        shards: 1,
+    });
+    let t0 = Instant::now();
+    let mut rxs = Vec::new();
+    for i in 0..n_requests {
+        let prompt: Vec<u32> = (0..prompt_len)
+            .map(|j| ((i * 131 + j * 31) % vocab) as u32)
+            .collect();
+        let params = SamplingParams {
+            seed: i as u64,
+            ..SamplingParams::greedy()
+        };
+        if shed {
+            let deadline = if i % 4 == 0 {
+                Instant::now() // already expired on arrival
+            } else {
+                Instant::now()
+                    + Duration::from_secs_f64(deadline_ms / 1e3)
+            };
+            let opts = SubmitOptions {
+                deadline: Some(deadline),
+                max_queue_wait: Some(Duration::from_millis(2)),
+            };
+            match server.submit_opts(prompt, max_new, params, opts) {
+                Ok((_, rx)) => rxs.push(rx),
+                Err(SubmitError::Busy) => {} // shed at the boundary
+                Err(e) => panic!("unexpected submit error: {e}"),
+            }
+        } else {
+            let (_, rx) = server
+                .submit_sampled(prompt, max_new, params)
+                .expect("request fits pool");
+            rxs.push(rx);
+        }
+    }
+    let mut metrics = ServeMetrics::default();
+    for rx in rxs {
+        metrics.record(rx.recv().expect("worker dropped"));
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = server.stats();
+    let good_toks: usize = metrics
+        .completions
+        .iter()
+        .filter(|c| {
+            c.finish == FinishReason::Length && c.total_ms <= deadline_ms
+        })
+        .map(|c| c.tokens.len() + c.prefill_tokens)
+        .sum();
+    let ttfts: Vec<f64> = metrics
+        .completions
+        .iter()
+        .filter(|c| c.finish == FinishReason::Length)
+        .map(|c| c.first_token_ms)
+        .collect();
+    let p99_ttft = if ttfts.is_empty() {
+        0.0
+    } else {
+        repro::util::stats::percentile(&ttfts, 99.0)
+    };
+    let out = (good_toks as f64 / wall, p99_ttft, stats, ttfts.len());
     server.shutdown();
     out
 }
@@ -752,6 +854,76 @@ fn main() {
          prefill and the pool stores the hot prefix once; streams are \
          asserted bit-identical either way.",
         pc_prefix / kv_block_size
+    );
+
+    // ---- overload sweep: a burst tens of requests deep at a 2-slot
+    // engine, with the QoS layer (bounded queue + bounded submit
+    // wait + per-request deadlines) on vs off.  Goodput counts only
+    // within-deadline completions, so "serve everyone, late" loses to
+    // "serve fewer, on time" --------------------------------------------
+    let (ov_requests, ov_prompt, ov_max_new) =
+        if smoke { (24usize, 4usize, 4usize) } else { (48usize, 8, 16) };
+    // calibrate the deadline budget off an uncontended request, so the
+    // sweep's shape survives machine-speed differences: an accepted
+    // request at queue depth <= max_queue always fits the budget, a
+    // request queued tens deep never does
+    let (_, single_ms, _, _, _) = run_wave(
+        FfnBackend::Twell, 1, 1, 1, ov_prompt, ov_max_new,
+        kv_block_size, kv_block_size, SamplingParams::greedy(),
+    );
+    let ov_deadline_ms = (4.0 * single_ms).max(2.0);
+    println!(
+        "\n== overload sweep: load shedding on vs off ==\n\
+         {ov_requests} requests burst at a 2-slot engine, prompt \
+         {ov_prompt}, max_new {ov_max_new}, deadline {ov_deadline_ms:.1} \
+         ms (4x an uncontended request); shed=on bounds the queue at 2, \
+         caps the submit wait at 2 ms, and every 4th request arrives \
+         already expired\n"
+    );
+    let mut ov_table = Table::new(&[
+        "shed", "goodput tok/s", "p99 ttft ms", "served",
+        "shed busy", "shed deadline", "rejections", "aborts",
+    ]);
+    for shed in [true, false] {
+        let (goodput, p99_ttft, stats, served) = run_overload_wave(
+            shed, ov_requests, ov_prompt, ov_max_new, ov_deadline_ms,
+        );
+        let label = if shed { "on" } else { "off" };
+        ov_table.row(&[
+            label.to_string(),
+            format!("{goodput:.0}"),
+            format!("{p99_ttft:.1}"),
+            served.to_string(),
+            stats.shed_busy.to_string(),
+            stats.shed_deadline.to_string(),
+            stats.queue_rejections.to_string(),
+            stats.deadline_aborts.to_string(),
+        ]);
+        rows.push(Json::obj(vec![
+            ("section", Json::str("overload")),
+            ("backend", Json::str("twell")),
+            ("shed", Json::str(label)),
+            ("requests", Json::Num(ov_requests as f64)),
+            ("deadline_ms", Json::Num(ov_deadline_ms)),
+            ("threads", Json::Num(threads as f64)),
+            ("goodput_tok_s", Json::Num(goodput)),
+            ("p99_ttft_ms", Json::Num(p99_ttft)),
+            ("served", Json::Num(served as f64)),
+            ("shed_busy", Json::Num(stats.shed_busy as f64)),
+            ("shed_deadline", Json::Num(stats.shed_deadline as f64)),
+            ("queue_rejections",
+             Json::Num(stats.queue_rejections as f64)),
+            ("deadline_aborts",
+             Json::Num(stats.deadline_aborts as f64)),
+            ("shard_restarts", Json::Num(stats.shard_restarts as f64)),
+        ]));
+    }
+    ov_table.print();
+    println!(
+        "\nshape check: with shedding on, goodput and p99 TTFT should \
+         both beat the unbounded run — backpressure keeps queue time \
+         off the clock of every accepted request, while the unbounded \
+         queue serves everyone but serves the tail hopelessly late."
     );
 
     let report = Json::obj(vec![

@@ -239,6 +239,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // union-density threshold for batch-contextual FFN routing on the
     // TwELL backend (0 disables the routed path entirely)
     let route_density = args.get_f64("route-density", 0.25)? as f32;
+    // overload QoS: bound the admission queue (0 = unbounded, the
+    // historical behaviour) and optionally give every request a
+    // deadline measured from submit (0 = none)
+    let max_queue = args.get_usize("max-queue", 0)?;
+    let deadline_ms = args.get_f64("deadline-ms", 0.0)?;
     // per-request sampling: temperature 0 (the default) is greedy;
     // request i gets seed `--seed + i`, so the run is reproducible
     // while streams still diverge across requests
@@ -282,6 +287,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         route_density,
         shards,
         prefix_cache,
+        max_queue,
         mode,
     };
     let server = repro::serve::Server::start(model, policy);
@@ -297,18 +303,30 @@ fn cmd_serve(args: &Args) -> Result<()> {
         seed: seed.wrapping_add(i as u64),
         ..base_params
     };
+    // fresh options per request: the deadline clock starts at submit
+    let opts_for = || repro::serve::SubmitOptions {
+        deadline: (deadline_ms > 0.0).then(|| {
+            std::time::Instant::now()
+                + std::time::Duration::from_secs_f64(deadline_ms / 1e3)
+        }),
+        max_queue_wait: None,
+    };
     // stream the first request's tokens to show the per-token channel
-    let (_, stream_rx, first_rx) = server.submit_streaming_sampled(
-        bpe.encode(prompts[0]),
-        max_new,
-        params_for(0),
-    )?;
+    let (_, stream_rx, first_rx) = server
+        .submit_streaming_opts(
+            bpe.encode(prompts[0]),
+            max_new,
+            params_for(0),
+            opts_for(),
+        )
+        .map_err(anyhow::Error::new)?;
     let rxs: Vec<_> = (1..n_requests)
         .map(|i| {
             let prompt = bpe.encode(prompts[i % prompts.len()]);
             server
-                .submit_sampled(prompt, max_new, params_for(i))
+                .submit_opts(prompt, max_new, params_for(i), opts_for())
                 .map(|(_, rx)| rx)
+                .map_err(anyhow::Error::new)
         })
         .collect::<Result<_>>()?;
     for t in stream_rx.iter() {
@@ -320,13 +338,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let c = rx.recv().context("worker dropped")?;
         println!(
             "req {} ({} prefill): {:?} [queue {:.1} ms, first token \
-             {:.1} ms, total {:.1} ms]",
+             {:.1} ms, total {:.1} ms, {:?}]",
             c.id,
             c.prefill_tokens,
             bpe.decode(&c.tokens),
             c.queue_ms,
             c.first_token_ms,
-            c.total_ms
+            c.total_ms,
+            c.finish
         );
         metrics.record(c);
     }
@@ -369,6 +388,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
         stats.queue_peak,
         stats.abandoned,
         stats.fallbacks
+    );
+    let deadline_desc = if deadline_ms > 0.0 {
+        format!("{deadline_ms} ms")
+    } else {
+        "none".to_string()
+    };
+    println!(
+        "overload (max queue {max_queue}, deadline {deadline_desc}): \
+         {} shed at deadline, {} deadline aborts, {} busy-shed, \
+         {} queue rejections, {} shard restarts",
+        stats.shed_deadline,
+        stats.deadline_aborts,
+        stats.shed_busy,
+        stats.queue_rejections,
+        stats.shard_restarts
     );
     println!(
         "ffn dispatch: {} routed, {} fallback, {} col-parallel, \

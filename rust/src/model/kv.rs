@@ -323,6 +323,10 @@ impl PagedKvCache {
     pub fn reserve(
         &mut self, slot: usize, positions: usize,
     ) -> Result<(), ReserveError> {
+        // chaos-suite injection point: a panic here models an
+        // allocator fault inside the admission scan, with the queue
+        // lock held and requests already popped (no-op unless armed)
+        crate::fail_point!("kv-reserve");
         assert!(self.len[slot] == 0 && self.reserved[slot] == 0,
                 "slot {slot} still holds a sequence");
         let need = self.blocks_for(positions);

@@ -8,17 +8,31 @@
 //!
 //! ## Protocol
 //!
-//! One mutex guards the FIFO plus the stop flag; one condvar carries
-//! "queue became non-empty" and "shutdown began".  Producers
-//! ([`AdmissionQueue::push`], called from `Server::submit*`) append and
-//! `notify_all`; waking *all* shards instead of one is deliberate —
-//! `notify_one` could hand the wakeup to a shard whose scan then
-//! declines the head for lack of blocks, losing the wakeup while a
-//! shard with capacity sleeps.  Placement is pull-based work stealing:
-//! whichever shard wins the lock scans the FIFO head under its own
-//! capacity budget, so requests drain to whichever shard has free
-//! slots/blocks first, and a head that must wait for one shard's
-//! blocks can still be taken by an idler shard on its next wave.
+//! One mutex guards the FIFO plus the stop flag; the `cv` condvar
+//! carries "queue became non-empty" and "shutdown began", and a second
+//! condvar (`cv_space`) carries "the queue shrank" to producers parked
+//! in [`AdmissionQueue::push_wait`].  Producers (called from
+//! `Server::submit*`) append and `notify_all`; waking *all* shards
+//! instead of one is deliberate — `notify_one` could hand the wakeup
+//! to a shard whose scan then declines the head for lack of blocks,
+//! losing the wakeup while a shard with capacity sleeps.  Placement is
+//! pull-based work stealing: whichever shard wins the lock scans the
+//! FIFO head under its own capacity budget, so requests drain to
+//! whichever shard has free slots/blocks first, and a head that must
+//! wait for one shard's blocks can still be taken by an idler shard on
+//! its next wave.
+//!
+//! ## Bounded admission (`max_queue`)
+//!
+//! The FIFO is capped at `cap` entries (0 = unbounded, the historical
+//! behaviour).  [`AdmissionQueue::try_push`] refuses a full queue
+//! immediately (`PushOutcome::Full`, counted under `queue_rejections`)
+//! — the non-blocking shed path.  [`AdmissionQueue::push_wait`] parks
+//! on `cv_space` until a scan pops or sheds an entry; with a
+//! `max_wait` it gives up after that long (counted under `shed_busy`).
+//! Every path that shrinks the FIFO (`poll`'s scan, `collect_batch`,
+//! shutdown) notifies `cv_space`, so a parked producer cannot miss the
+//! space it is waiting for — the bounded-queue loom models pin this.
 //!
 //! ## Invariants (the loom models pin these)
 //!
@@ -50,6 +64,10 @@ use crate::util::sync::{self, Condvar, Mutex, MutexGuard};
 pub(crate) struct Pending {
     pub(crate) req: Request,
     pub(crate) enqueued: Instant,
+    /// absolute completion deadline (`SubmitOptions::deadline`): the
+    /// admission scan sheds a queued request once it passes, and the
+    /// engine aborts an in-flight sequence at it
+    pub(crate) deadline: Option<Instant>,
     pub(crate) tx: Sender<Completion>,
     pub(crate) stream: Option<Sender<Token>>,
     /// liveness of the caller-side receivers (completion + optional
@@ -73,30 +91,58 @@ pub(crate) enum Wave {
     Stopped,
 }
 
+/// Result of a producer-side push against the bounded FIFO.
+#[derive(Debug, PartialEq, Eq)]
+pub(crate) enum PushOutcome {
+    Pushed,
+    /// the queue was at `max_queue` — immediately (`try_push`) or for
+    /// the whole `max_wait` (`push_wait`)
+    Full,
+    /// shutdown began: no new requests
+    Stopped,
+}
+
 struct State {
     items: VecDeque<Pending>,
     stop: bool,
     /// high-water mark of `items.len()`, updated at every push —
     /// surfaced as the `queue_peak` gauge on `EngineStats`
     peak: usize,
+    /// non-blocking pushes refused at capacity (`queue_rejections`)
+    rejections: u64,
+    /// blocking pushes that timed out waiting for space (`shed_busy`)
+    shed_busy: u64,
 }
 
 /// The shared FIFO + stop flag all shard engines pull from.
 pub(crate) struct AdmissionQueue {
     state: Mutex<State>,
+    /// "queue became non-empty / shutdown began" — shards park here
     cv: Condvar,
+    /// "the queue shrank / shutdown began" — producers park here
+    cv_space: Condvar,
+    /// max queued entries; 0 = unbounded
+    cap: usize,
 }
 
 impl AdmissionQueue {
-    pub(crate) fn new() -> AdmissionQueue {
+    pub(crate) fn new(max_queue: usize) -> AdmissionQueue {
         AdmissionQueue {
             state: Mutex::new(State {
                 items: VecDeque::new(),
                 stop: false,
                 peak: 0,
+                rejections: 0,
+                shed_busy: 0,
             }),
             cv: Condvar::new(),
+            cv_space: Condvar::new(),
+            cap: max_queue,
         }
+    }
+
+    fn full(&self, st: &State) -> bool {
+        self.cap != 0 && st.items.len() >= self.cap
     }
 
     /// Lock the queue state.  A poisoned lock is benign here — the
@@ -107,14 +153,65 @@ impl AdmissionQueue {
         self.state.lock().unwrap_or_else(|e| e.into_inner())
     }
 
-    /// Append a request and wake every parked shard (see the module
-    /// docs for why `notify_all`).
-    pub(crate) fn push(&self, p: Pending) {
-        let mut st = self.lock();
+    fn push_locked(&self, mut st: MutexGuard<'_, State>, p: Pending) {
         st.items.push_back(p);
         st.peak = st.peak.max(st.items.len());
         drop(st);
+        // wake every parked shard (see the module docs for why
+        // `notify_all`)
         self.cv.notify_all();
+    }
+
+    /// Non-blocking push: refuse a full (or stopped) queue instead of
+    /// waiting.  A refusal at capacity counts under `queue_rejections`.
+    pub(crate) fn try_push(&self, p: Pending) -> PushOutcome {
+        let mut st = self.lock();
+        if st.stop {
+            return PushOutcome::Stopped;
+        }
+        if self.full(&st) {
+            st.rejections += 1;
+            return PushOutcome::Full;
+        }
+        self.push_locked(st, p);
+        PushOutcome::Pushed
+    }
+
+    /// Blocking push with backpressure: park on `cv_space` while the
+    /// queue is at capacity.  `max_wait` bounds the wait (`None` waits
+    /// until space or shutdown); giving up counts under `shed_busy`.
+    pub(crate) fn push_wait(
+        &self, p: Pending, max_wait: Option<Duration>,
+    ) -> PushOutcome {
+        let mut st = self.lock();
+        // the deadline is computed lazily so the loom models (which
+        // always pass `None`) never touch the clock
+        let give_up = max_wait.map(|d| Instant::now() + d);
+        while !st.stop && self.full(&st) {
+            match give_up {
+                None => {
+                    st = self
+                        .cv_space
+                        .wait(st)
+                        .unwrap_or_else(|e| e.into_inner());
+                }
+                Some(dl) => {
+                    let now = Instant::now();
+                    if now >= dl {
+                        st.shed_busy += 1;
+                        return PushOutcome::Full;
+                    }
+                    let (guard, _) =
+                        sync::wait_timeout(&self.cv_space, st, dl - now);
+                    st = guard;
+                }
+            }
+        }
+        if st.stop {
+            return PushOutcome::Stopped;
+        }
+        self.push_locked(st, p);
+        PushOutcome::Pushed
     }
 
     pub(crate) fn len(&self) -> usize {
@@ -126,10 +223,24 @@ impl AdmissionQueue {
         self.lock().peak
     }
 
-    /// Begin shutdown: shards drain the remaining FIFO, then exit.
+    /// Non-blocking pushes refused at capacity so far (the
+    /// `queue_rejections` counter).
+    pub(crate) fn rejections(&self) -> u64 {
+        self.lock().rejections
+    }
+
+    /// Blocking pushes that timed out waiting for space so far (the
+    /// `shed_busy` counter).
+    pub(crate) fn shed_busy(&self) -> u64 {
+        self.lock().shed_busy
+    }
+
+    /// Begin shutdown: shards drain the remaining FIFO, then exit;
+    /// producers parked for space give up with `Stopped`.
     pub(crate) fn shutdown(&self) {
         self.lock().stop = true;
         self.cv.notify_all();
+        self.cv_space.notify_all();
     }
 
     /// One admission wave for a continuous-mode shard.  An idle shard
@@ -163,7 +274,16 @@ impl AdmissionQueue {
             }
             st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
         }
-        Wave::Admitted(scan(&mut st.items))
+        let before = st.items.len();
+        let taken = scan(&mut st.items);
+        let shrank = st.items.len() < before;
+        drop(st);
+        if shrank {
+            // anything the scan popped *or shed* opened queue space:
+            // wake producers parked in `push_wait`
+            self.cv_space.notify_all();
+        }
+        Wave::Admitted(taken)
     }
 
     /// Dequeue one batch for a sequential-mode shard: wait for the
@@ -195,7 +315,12 @@ impl AdmissionQueue {
             }
         }
         let take = st.items.len().min(max);
-        Some(st.items.drain(..take).collect())
+        let batch = st.items.drain(..take).collect();
+        drop(st);
+        if take > 0 {
+            self.cv_space.notify_all();
+        }
+        Some(batch)
     }
 }
 
@@ -229,10 +354,16 @@ mod loom_tests {
                 params: SamplingParams::greedy(),
             },
             enqueued: Instant::now(),
+            deadline: None,
             tx,
             stream: None,
             watch: Vec::new(),
         }
+    }
+
+    /// Unbounded-queue push for the models that predate the cap.
+    fn push(q: &AdmissionQueue, p: Pending) {
+        assert_eq!(q.push_wait(p, None), PushOutcome::Pushed);
     }
 
     /// A shard stand-in: poll until `Stopped`, claiming at most
@@ -263,9 +394,9 @@ mod loom_tests {
     #[test]
     fn loom_two_shards_steal_exactly_once() {
         loom::model(|| {
-            let q = Arc::new(AdmissionQueue::new());
-            q.push(pending(0));
-            q.push(pending(1));
+            let q = Arc::new(AdmissionQueue::new(0));
+            push(&q, pending(0));
+            push(&q, pending(1));
             let got = Arc::new(Mutex::new(Vec::new()));
             let handles: Vec<_> = (0..2)
                 .map(|_| {
@@ -291,11 +422,11 @@ mod loom_tests {
     #[test]
     fn loom_push_shutdown_race_delivers_exactly_once() {
         loom::model(|| {
-            let q = Arc::new(AdmissionQueue::new());
+            let q = Arc::new(AdmissionQueue::new(0));
             let got = Arc::new(Mutex::new(Vec::new()));
             let (q2, g2) = (q.clone(), got.clone());
             let h = spawn_named("shard", move || run_shard(&q2, 8, &g2));
-            q.push(pending(7));
+            push(&q, pending(7));
             q.shutdown();
             h.join().unwrap();
             let ids = got.lock().unwrap_or_else(|e| e.into_inner());
@@ -309,8 +440,8 @@ mod loom_tests {
     #[test]
     fn loom_declined_head_is_not_lost() {
         loom::model(|| {
-            let q = Arc::new(AdmissionQueue::new());
-            q.push(pending(3));
+            let q = Arc::new(AdmissionQueue::new(0));
+            push(&q, pending(3));
             let got = Arc::new(Mutex::new(Vec::new()));
             let (q2, g2) = (q.clone(), got.clone());
             let h = spawn_named("shard", move || {
@@ -347,7 +478,7 @@ mod loom_tests {
     #[test]
     fn loom_poll_with_active_never_blocks() {
         loom::model(|| {
-            let q = AdmissionQueue::new();
+            let q = AdmissionQueue::new(0);
             match q.poll(true, |items| {
                 assert!(items.is_empty());
                 Vec::new()
@@ -357,6 +488,134 @@ mod loom_tests {
                     panic!("stop reported without shutdown")
                 }
             }
+        });
+    }
+
+    /// Bounded queue, producer blocked at capacity vs a popping shard:
+    /// the space wakeup must never be lost.  cap = 1, item 0 fills the
+    /// queue; a producer parks in `push_wait(item 1)` while a shard
+    /// drains.  Every interleaving must dispatch *both* items — if a
+    /// scan's pop failed to notify `cv_space`, the producer would park
+    /// forever and loom would report the deadlock.
+    #[test]
+    fn loom_push_at_capacity_vs_pop_never_loses_wakeup() {
+        loom::model(|| {
+            let q = Arc::new(AdmissionQueue::new(1));
+            push(&q, pending(0)); // queue now at capacity
+            let got = Arc::new(Mutex::new(Vec::new()));
+            let (q2, g2) = (q.clone(), got.clone());
+            let shard = spawn_named("shard", move || run_shard(&q2, 1, &g2));
+            let q3 = q.clone();
+            let producer = spawn_named("producer", move || {
+                assert_eq!(
+                    q3.push_wait(pending(1), None),
+                    PushOutcome::Pushed,
+                    "blocking push must wait for space, not give up"
+                );
+            });
+            producer.join().unwrap();
+            // only after item 1 is in: drain and stop the shard
+            q.shutdown();
+            shard.join().unwrap();
+            let mut ids =
+                got.lock().unwrap_or_else(|e| e.into_inner()).clone();
+            ids.sort_unstable();
+            assert_eq!(ids, vec![0, 1], "an item or a wakeup was lost");
+        });
+    }
+
+    /// Shutdown with a full queue: the queued item drains exactly
+    /// once, and a producer parked for space gives up with `Stopped`
+    /// instead of parking forever or sneaking its item in after stop.
+    #[test]
+    fn loom_shutdown_with_full_queue_drains_exactly_once() {
+        loom::model(|| {
+            let q = Arc::new(AdmissionQueue::new(1));
+            push(&q, pending(0)); // queue now at capacity
+            let got = Arc::new(Mutex::new(Vec::new()));
+            let (q2, g2) = (q.clone(), got.clone());
+            let shard = spawn_named("shard", move || run_shard(&q2, 1, &g2));
+            let q3 = q.clone();
+            let outcome = Arc::new(Mutex::new(None));
+            let o3 = outcome.clone();
+            let producer = spawn_named("producer", move || {
+                // races the shard's pop and the shutdown: space may
+                // open before stop lands (Pushed) or not (Stopped) —
+                // but a Pushed item must then be dispatched
+                let r = q3.push_wait(pending(1), None);
+                *o3.lock().unwrap_or_else(|e| e.into_inner()) = Some(r);
+            });
+            q.shutdown();
+            producer.join().unwrap();
+            shard.join().unwrap();
+            let outcome = outcome
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .take()
+                .unwrap();
+            let mut ids =
+                got.lock().unwrap_or_else(|e| e.into_inner()).clone();
+            ids.sort_unstable();
+            match outcome {
+                PushOutcome::Pushed => {
+                    assert_eq!(ids, vec![0, 1], "accepted item was lost")
+                }
+                PushOutcome::Stopped => {
+                    assert_eq!(ids, vec![0], "queue drained != exactly once")
+                }
+                PushOutcome::Full => {
+                    panic!("push_wait(None) can never report Full")
+                }
+            }
+        });
+    }
+
+    /// Deadline-shed vs steal: one queued request, one shard whose
+    /// scan *sheds* the head (the deadline-passed path: pop without
+    /// dispatch) racing one that admits normally.  The request must
+    /// land exactly once — shed or admitted, never both, never lost.
+    #[test]
+    fn loom_deadline_shed_vs_steal_dispatches_once() {
+        loom::model(|| {
+            let q = Arc::new(AdmissionQueue::new(0));
+            push(&q, pending(5));
+            let admitted = Arc::new(Mutex::new(Vec::new()));
+            let shed = Arc::new(Mutex::new(Vec::new()));
+            let (q2, a2) = (q.clone(), admitted.clone());
+            let stealer = spawn_named("shard", move || run_shard(&q2, 1, &a2));
+            let (q3, s3) = (q.clone(), shed.clone());
+            let shedder = spawn_named("shard", move || {
+                loop {
+                    match q3.poll(false, |items| {
+                        // the deadline sweep: drop the head from the
+                        // FIFO, recording it as shed — it is never
+                        // part of the returned (admitted) wave
+                        if let Some(p) = items.pop_front() {
+                            let mut g = s3
+                                .lock()
+                                .unwrap_or_else(|e| e.into_inner());
+                            g.push(p.req.id);
+                        }
+                        Vec::new()
+                    }) {
+                        Wave::Stopped => return,
+                        Wave::Admitted(v) => assert!(v.is_empty()),
+                    }
+                }
+            });
+            q.shutdown();
+            stealer.join().unwrap();
+            shedder.join().unwrap();
+            let a = admitted.lock().unwrap_or_else(|e| e.into_inner());
+            let s = shed.lock().unwrap_or_else(|e| e.into_inner());
+            assert_eq!(
+                a.len() + s.len(),
+                1,
+                "request must be shed or admitted exactly once \
+                 (admitted {a:?}, shed {s:?})"
+            );
+            let seen = a.first().or(s.first()).copied();
+            assert_eq!(seen, Some(5));
         });
     }
 }

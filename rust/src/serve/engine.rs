@@ -18,8 +18,39 @@
 //! kernels over the same per-request state as a single-shard engine
 //! would, and each request's seeded sampler consumes draws only for
 //! its own tokens, so placement cannot perturb any stream.
+//!
+//! ## Panic isolation ([`run_shard`])
+//!
+//! The loops do not run bare on the shard thread: [`run_shard`] wraps
+//! them in `catch_unwind`.  A panic anywhere inside an engine
+//! iteration — a kernel panic re-raised off the worker pool, a bug in
+//! the scheduler, an armed failpoint — unwinds to the supervisor,
+//! which (1) drains the shard's *roster* (every request popped from
+//! the queue but not yet answered, tracked from the instant the scan
+//! claims it) and fails each one with a `FinishReason::ShardFailed`
+//! completion, (2) bumps `shard_restarts`, and (3) re-enters the loop,
+//! which rebuilds the `PagedKvCache`, slots and `DecodeScratch` from
+//! scratch.  The other shards keep serving off the shared queue the
+//! whole time, so the server degrades to N−1 shards during the
+//! restart instead of stranding callers.  Every mutex the dead loop
+//! may have poisoned (queue, stats, roster) is locked with poison
+//! recovery — the guarded state is plain data a half-applied update
+//! cannot corrupt (`EngineStats` is `Copy`; the roster maps ids to
+//! channel ends).
+//!
+//! Lock order: the queue lock is taken first and the roster lock is a
+//! leaf *inside the scan* (track-at-pop closes the window where a
+//! popped-but-unanswered request could die untracked); the supervisor
+//! takes the roster lock with no other lock held.  The stats lock
+//! stays a leaf.  `catch_unwind` is confined to this file and the
+//! worker pool (`sparse/par.rs`) by an `xtask check` rule, so the
+//! panic-isolation policy stays auditable.
 
-use std::sync::{Arc, Mutex};
+use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Instant;
 
 use crate::model::kv::{kv_positions_needed, sample_decode, DecodeScratch,
                        PagedKvCache, PrefixAdmit};
@@ -28,7 +59,75 @@ use crate::model::Model;
 
 use super::admission::{AdmissionQueue, Pending, Wave};
 use super::stats::EngineStats;
-use super::{Completion, ServePolicy, Token};
+use super::{Completion, FinishReason, ServeMode, ServePolicy, Token};
+
+/// What the supervisor needs to fail a request the dead loop was
+/// holding: the caller's completion channel plus enough metadata for
+/// an honest `Completion`.  Tracked from the moment the admission scan
+/// pops the request, removed when its completion is sent (or the
+/// request is dropped as abandoned).
+pub(crate) struct InFlight {
+    id: u64,
+    tx: Sender<Completion>,
+    enqueued: Instant,
+    prefill_tokens: usize,
+}
+
+/// Shard-local map of popped-but-unanswered requests (see
+/// [`InFlight`]).  Shared only between the loop and its supervisor —
+/// never across shards.
+pub(crate) type Roster = Arc<Mutex<HashMap<u64, InFlight>>>;
+
+/// Poison-recovering stats lock: a shard that panicked mid-update
+/// leaves counters at worst one event off, never structurally broken
+/// (`EngineStats` is `Copy` plain data).
+fn lock(stats: &Mutex<EngineStats>) -> MutexGuard<'_, EngineStats> {
+    stats.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn track(roster: &Roster, p: &Pending) {
+    let mut g = roster.lock().unwrap_or_else(|e| e.into_inner());
+    g.insert(p.req.id, InFlight {
+        id: p.req.id,
+        tx: p.tx.clone(),
+        enqueued: p.enqueued,
+        prefill_tokens: p.req.prompt.len(),
+    });
+}
+
+fn untrack(roster: &Roster, id: u64) {
+    roster.lock().unwrap_or_else(|e| e.into_inner()).remove(&id);
+}
+
+/// Send `p`'s completion and drop it from the roster — the one way a
+/// tracked request leaves the shard.  The send is best-effort: an
+/// abandoned caller's receiver is gone and the failure is harmless.
+fn finish(
+    roster: &Roster, tx: &Sender<Completion>, c: Completion,
+) {
+    untrack(roster, c.id);
+    let _ = tx.send(c);
+}
+
+/// A queued request is hopeless when its deadline has already passed,
+/// or when the per-position service-time estimate says the remaining
+/// budget cannot cover its worst-case prefill+decode.  The estimate
+/// warms up from observed retirements (EWMA); while cold, only the
+/// already-passed check applies — shedding must never be speculative.
+fn hopeless(p: &Pending, now: Instant, est_ms_per_pos: Option<f64>) -> bool {
+    let Some(deadline) = p.deadline else { return false };
+    if now >= deadline {
+        return true;
+    }
+    // degenerate requests are answered instantly: never doomed
+    if p.req.prompt.is_empty() || p.req.max_new == 0 {
+        return false;
+    }
+    let Some(est) = est_ms_per_pos else { return false };
+    let need = kv_positions_needed(p.req.prompt.len(), p.req.max_new);
+    let remaining_ms = (deadline - now).as_secs_f64() * 1e3;
+    remaining_ms < est * need as f64
+}
 
 /// Serve one request start-to-finish on the sequential path.
 /// `queue_ms` was measured once, at dequeue.  Stats are recorded
@@ -37,7 +136,7 @@ use super::{Completion, ServePolicy, Token};
 /// request already counted.
 fn serve_one(
     model: &Model, p: Pending, queue_ms: f64,
-    stats: &Mutex<EngineStats>,
+    stats: &Mutex<EngineStats>, roster: &Roster,
 ) {
     let mut first_token_ms = None;
     let tokens = sample_decode(model, &p.req.prompt, p.req.max_new,
@@ -52,33 +151,40 @@ fn serve_one(
     });
     let total_ms = p.enqueued.elapsed().as_secs_f64() * 1e3;
     {
-        let mut st = stats.lock().unwrap();
+        let mut st = lock(stats);
         st.admissions += 1;
         st.record_latency(total_ms);
     }
-    let _ = p.tx.send(Completion {
+    finish(roster, &p.tx, Completion {
         id: p.req.id,
         tokens,
         queue_ms,
         first_token_ms: first_token_ms.unwrap_or(total_ms),
         total_ms,
         prefill_tokens: p.req.prompt.len(),
+        finish: FinishReason::Length,
     });
 }
 
 /// Legacy shard loop: collect a batch (waiting up to `max_wait` for it
-/// to fill), then serve each request sequentially.
+/// to fill), then serve each request sequentially.  Deadlines are
+/// enforced at dequeue only — `serve_one` is atomic, so there is no
+/// mid-flight abort on this path (the continuous loop has one).
 pub(crate) fn sequential_loop(
     model: Arc<Model>, queue: Arc<AdmissionQueue>, policy: ServePolicy,
-    stats: Arc<Mutex<EngineStats>>,
+    stats: Arc<Mutex<EngineStats>>, roster: &Roster,
 ) {
     while let Some(batch) =
         queue.collect_batch(policy.slots, policy.max_wait)
     {
-        // queue time ends here, at dequeue — measured exactly once
+        // queue time ends here, at dequeue — measured exactly once.
+        // Tracking starts here too: the window between the queue's
+        // drain and this loop is a few instructions with no kernel or
+        // failpoint in it.
         let dequeued: Vec<(Pending, f64)> = batch
             .into_iter()
             .map(|p| {
+                track(roster, &p);
                 let q_ms = p.enqueued.elapsed().as_secs_f64() * 1e3;
                 (p, q_ms)
             })
@@ -86,10 +192,25 @@ pub(crate) fn sequential_loop(
         for (p, q_ms) in dequeued {
             if p.abandoned() {
                 // every receiver is gone: nobody can observe a result
-                stats.lock().unwrap().abandoned += 1;
+                lock(&stats).abandoned += 1;
+                untrack(roster, p.req.id);
                 continue;
             }
-            serve_one(&model, p, q_ms, &stats);
+            if p.deadline.is_some_and(|d| Instant::now() >= d) {
+                lock(&stats).shed_deadline += 1;
+                let total_ms = p.enqueued.elapsed().as_secs_f64() * 1e3;
+                finish(roster, &p.tx, Completion {
+                    id: p.req.id,
+                    tokens: Vec::new(),
+                    queue_ms: q_ms,
+                    first_token_ms: total_ms,
+                    total_ms,
+                    prefill_tokens: p.req.prompt.len(),
+                    finish: FinishReason::DeadlineExceeded,
+                });
+                continue;
+            }
+            serve_one(&model, p, q_ms, &stats, roster);
         }
     }
 }
@@ -111,10 +232,26 @@ struct Slot {
     sampler: Sampler,
 }
 
+/// What the admission scan decided for each popped request, in pop
+/// order.  Everything popped is resolved in the install phase — there
+/// is no silent drop.
+enum Plan {
+    /// reserved a slot; carries the prefix-attach outcome
+    Install(usize, PrefixAdmit),
+    /// degenerate (empty prompt / max_new 0): answer empty, no slot
+    Empty,
+    /// every receiver dropped while queued: count + drop, no KV ever
+    /// reserved (the whole-queue sweep claims these from any position)
+    Abandoned,
+    /// deadline passed or budget-doomed while queued: fail with
+    /// `DeadlineExceeded`, no KV ever reserved
+    ShedDeadline,
+}
+
 /// The continuous-batching shard loop over this shard's paged KV pool.
 pub(crate) fn continuous_loop(
     model: Arc<Model>, queue: Arc<AdmissionQueue>, policy: ServePolicy,
-    stats: Arc<Mutex<EngineStats>>,
+    stats: Arc<Mutex<EngineStats>>, roster: &Roster,
 ) {
     let mut cache = PagedKvCache::new(
         &model, policy.slots, policy.kv_blocks, policy.kv_block_size,
@@ -135,10 +272,11 @@ pub(crate) fn continuous_loop(
     // after every step
     scratch.route.enabled = policy.route_density > 0.0;
     scratch.route.max_density = policy.route_density;
+    // per-position service-time estimate (EWMA over retirements),
+    // feeding the budget-doomed half of the deadline shed
+    let mut est_ms_per_pos: Option<f64> = None;
     enum Admit {
-        /// answered or installed this wave; a `Some` carries the slot
-        /// the scan reserved and the prefix-attach outcome
-        Take(Option<(usize, PrefixAdmit)>),
+        Take(Plan),
         /// worst case exceeds the whole pool: can never be served
         Reject,
         /// head of the queue waits for blocks / a slot to free up —
@@ -152,27 +290,53 @@ pub(crate) fn continuous_loop(
         // admission — `cache.admit` plans the prefix attach, charges
         // the unshared worst case, and copy-on-writes at most one
         // block — so the budget it checks is exactly the budget it
-        // consumes (deterministic sequential work only: no kernels,
-        // no other locks).  An idle shard parks inside `poll` until
-        // work or shutdown arrives -----------------------------------
+        // consumes (deterministic sequential work only: no kernels;
+        // the roster lock is the scan's one leaf lock).  An idle
+        // shard parks inside `poll` until work or shutdown arrives ----
         // lowest-index-first placement, as `position` gave before
         let mut free_si: Vec<usize> = (0..policy.slots)
             .rev()
             .filter(|&si| slots[si].is_none())
             .collect();
-        let mut plans: Vec<Option<(usize, PrefixAdmit)>> = Vec::new();
+        let mut plans: Vec<Plan> = Vec::new();
+        let now = Instant::now();
         let wave = queue.poll(active > 0, |items| {
+            crate::fail_point!("admission-scan");
             let mut take = Vec::new();
+            // whole-queue sweep first: abandoned and deadline-hopeless
+            // requests are claimed from *any* position — they take no
+            // slot or blocks, so they never wait behind a head that
+            // does, and an abandoned entry can no longer linger
+            // queued behind one
+            let mut i = 0;
+            while i < items.len() {
+                let verdict = if items[i].abandoned() {
+                    Some(Plan::Abandoned)
+                } else if hopeless(&items[i], now, est_ms_per_pos) {
+                    Some(Plan::ShedDeadline)
+                } else {
+                    None
+                };
+                match verdict {
+                    Some(plan) => {
+                        let p = items.remove(i).unwrap();
+                        track(roster, &p);
+                        plans.push(plan);
+                        take.push(p);
+                    }
+                    None => i += 1,
+                }
+            }
+            // then FIFO head admission under this shard's capacity
             loop {
                 let decision = match items.front() {
                     None => break,
-                    // abandoned or degenerate requests take no slot or
-                    // blocks, so they never have to wait for either
-                    Some(p) if p.abandoned() => Admit::Take(None),
+                    // degenerate requests take no slot or blocks, so
+                    // they never have to wait for either
                     Some(p) if p.req.max_new == 0
                         || p.req.prompt.is_empty() =>
                     {
-                        Admit::Take(None)
+                        Admit::Take(Plan::Empty)
                     }
                     Some(p) => {
                         let positions = kv_positions_needed(
@@ -188,7 +352,7 @@ pub(crate) fn continuous_loop(
                             {
                                 Ok(info) => {
                                     free_si.pop();
-                                    Admit::Take(Some((si, info)))
+                                    Admit::Take(Plan::Install(si, info))
                                 }
                                 // over budget *after* sharing: wait
                                 // for blocks to free up
@@ -201,8 +365,10 @@ pub(crate) fn continuous_loop(
                 };
                 match decision {
                     Admit::Take(plan) => {
+                        let p = items.pop_front().unwrap();
+                        track(roster, &p);
                         plans.push(plan);
-                        take.push(items.pop_front().unwrap());
+                        take.push(p);
                     }
                     Admit::Reject => {
                         // unreachable through submit (which validates
@@ -237,29 +403,54 @@ pub(crate) fn continuous_loop(
         for (p, plan) in admitted.into_iter().zip(plans) {
             // queue time ends here, at dequeue — measured exactly once
             let queue_ms = p.enqueued.elapsed().as_secs_f64() * 1e3;
+            let total_ms = p.enqueued.elapsed().as_secs_f64() * 1e3;
+            match plan {
+                Plan::Abandoned => {
+                    // claimed by the sweep: no KV was ever reserved
+                    lock(&stats).abandoned += 1;
+                    untrack(roster, p.req.id);
+                    continue;
+                }
+                Plan::ShedDeadline => {
+                    lock(&stats).shed_deadline += 1;
+                    finish(roster, &p.tx, Completion {
+                        id: p.req.id,
+                        tokens: Vec::new(),
+                        queue_ms,
+                        first_token_ms: total_ms,
+                        total_ms,
+                        prefill_tokens: p.req.prompt.len(),
+                        finish: FinishReason::DeadlineExceeded,
+                    });
+                    continue;
+                }
+                _ => {}
+            }
             if p.abandoned() {
-                // the caller vanished while the request was queued (or
-                // between the scan and this install): release whatever
-                // the scan attached — don't strand the slot or blocks
-                if let Some((si, _)) = plan {
+                // the caller vanished between the scan and this
+                // install: release whatever the scan attached — don't
+                // strand the slot or blocks
+                if let Plan::Install(si, _) = plan {
                     cache.release_slot(si);
                 }
-                stats.lock().unwrap().abandoned += 1;
+                lock(&stats).abandoned += 1;
+                untrack(roster, p.req.id);
                 continue;
             }
-            let Some((si, info)) = plan else {
-                // nothing to generate — an empty prompt has no logits
-                // to sample (see `argmax`): empty completion, no slot.
-                // Stats land before the send (see `serve_one`).
-                let total_ms = p.enqueued.elapsed().as_secs_f64() * 1e3;
-                stats.lock().unwrap().record_latency(total_ms);
-                let _ = p.tx.send(Completion {
+            let Plan::Install(si, info) = plan else {
+                // Plan::Empty — nothing to generate: an empty prompt
+                // has no logits to sample (see `argmax`): empty
+                // completion, no slot.  Stats land before the send
+                // (see `serve_one`).
+                lock(&stats).record_latency(total_ms);
+                finish(roster, &p.tx, Completion {
                     id: p.req.id,
                     tokens: Vec::new(),
                     queue_ms,
                     first_token_ms: total_ms,
                     total_ms,
                     prefill_tokens: p.req.prompt.len(),
+                    finish: FinishReason::Length,
                 });
                 continue;
             };
@@ -278,7 +469,7 @@ pub(crate) fn continuous_loop(
                 sampler,
             });
             active += 1;
-            let mut st = stats.lock().unwrap();
+            let mut st = lock(&stats);
             st.admissions += 1;
             if info.cached_positions > 0 {
                 st.prefix_hits += 1;
@@ -292,15 +483,49 @@ pub(crate) fn continuous_loop(
             }
             st.max_active = st.max_active.max(active);
         }
-        // ---- reap abandoned sequences: a caller that dropped every
-        // receiver can never observe the result, so decoding on would
-        // only burn compute and strand KV blocks --------------------------
+        // ---- reap abandoned or deadline-passed sequences: decoding
+        // on for a dead channel would only burn compute; decoding past
+        // the deadline would burn it on an answer the caller already
+        // wrote off.  Both free their KV blocks immediately -------------
+        let now = Instant::now();
         for (si, entry) in slots.iter_mut().enumerate() {
-            if entry.as_ref().is_some_and(|s| s.p.abandoned()) {
-                *entry = None;
+            let Some(s) = entry.as_ref() else { continue };
+            if s.p.abandoned() {
+                let s = entry.take().unwrap();
                 cache.release_slot(si);
                 active -= 1;
-                stats.lock().unwrap().abandoned += 1;
+                lock(&stats).abandoned += 1;
+                // best-effort notification (the receiver is gone; the
+                // send keeps the roster bookkeeping uniform)
+                let total_ms =
+                    s.p.enqueued.elapsed().as_secs_f64() * 1e3;
+                finish(roster, &s.p.tx, Completion {
+                    id: s.p.req.id,
+                    tokens: s.tokens,
+                    queue_ms: s.queue_ms,
+                    first_token_ms: s.first_token_ms.unwrap_or(total_ms),
+                    total_ms,
+                    prefill_tokens: s.p.req.prompt.len(),
+                    finish: FinishReason::Abandoned,
+                });
+            } else if s.p.deadline.is_some_and(|d| now >= d) {
+                // in-flight deadline abort: deliver the partial stream
+                // (whatever was already sampled) and free the blocks
+                let s = entry.take().unwrap();
+                cache.release_slot(si);
+                active -= 1;
+                lock(&stats).deadline_aborts += 1;
+                let total_ms =
+                    s.p.enqueued.elapsed().as_secs_f64() * 1e3;
+                finish(roster, &s.p.tx, Completion {
+                    id: s.p.req.id,
+                    tokens: s.tokens,
+                    queue_ms: s.queue_ms,
+                    first_token_ms: s.first_token_ms.unwrap_or(total_ms),
+                    total_ms,
+                    prefill_tokens: s.p.req.prompt.len(),
+                    finish: FinishReason::DeadlineExceeded,
+                });
             }
         }
         if active == 0 {
@@ -310,6 +535,7 @@ pub(crate) fn continuous_loop(
         // ---- one batched engine step over every active slot: a
         // prefilling slot feeds its next prompt chunk (up to one KV
         // block by default), a decoding slot feeds its last sample ----
+        crate::fail_point!("engine-step");
         let prefilling = slots
             .iter()
             .flatten()
@@ -338,7 +564,7 @@ pub(crate) fn continuous_loop(
             feeds.iter().map(|&(si, span)| (si, span.len())).collect();
         drop(feeds);
         {
-            let mut st = stats.lock().unwrap();
+            let mut st = lock(&stats);
             st.steps += 1;
             st.prefill_chunks += prefilling;
             st.kv_blocks_peak =
@@ -386,19 +612,101 @@ pub(crate) fn continuous_loop(
                 active -= 1;
                 let total_ms =
                     s.p.enqueued.elapsed().as_secs_f64() * 1e3;
+                // feed the deadline-doom estimator: service time per
+                // position actually processed, smoothed
+                let positions =
+                    (s.p.req.prompt.len() + s.tokens.len()) as f64;
+                if positions > 0.0 {
+                    let per =
+                        ((total_ms - s.queue_ms).max(0.0)) / positions;
+                    est_ms_per_pos = Some(match est_ms_per_pos {
+                        None => per,
+                        Some(e) => 0.8 * e + 0.2 * per,
+                    });
+                }
                 // stats land before the send (see `serve_one`)
-                stats.lock().unwrap().record_latency(total_ms);
-                let _ = s.p.tx.send(Completion {
+                lock(&stats).record_latency(total_ms);
+                finish(roster, &s.p.tx, Completion {
                     id: s.p.req.id,
                     tokens: s.tokens,
                     queue_ms: s.queue_ms,
                     first_token_ms: s.first_token_ms.unwrap_or(total_ms),
                     total_ms,
                     prefill_tokens: s.p.req.prompt.len(),
+                    finish: FinishReason::Length,
                 });
             } else {
                 slot.next_feed = next;
             }
         }
     }
+}
+
+/// Shard supervisor: run the policy's loop under `catch_unwind`,
+/// converting a shard panic into failed-but-answered requests and a
+/// fresh restart instead of a silently dead thread (module docs have
+/// the full protocol).  Returns only on clean shutdown.
+pub(crate) fn run_shard(
+    model: Arc<Model>, queue: Arc<AdmissionQueue>, policy: ServePolicy,
+    stats: Arc<Mutex<EngineStats>>,
+) {
+    let roster: Roster = Arc::new(Mutex::new(HashMap::new()));
+    loop {
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            match policy.mode {
+                ServeMode::Sequential => sequential_loop(
+                    model.clone(), queue.clone(), policy, stats.clone(),
+                    &roster,
+                ),
+                ServeMode::Continuous => continuous_loop(
+                    model.clone(), queue.clone(), policy, stats.clone(),
+                    &roster,
+                ),
+            }
+        }));
+        match outcome {
+            // clean shutdown: the loop drained the queue and exited;
+            // nothing can be left on the roster
+            Ok(()) => return,
+            Err(payload) => {
+                log::error!(
+                    "serve shard panicked ({}); failing its in-flight \
+                     requests and restarting with a fresh KV pool",
+                    panic_message(payload.as_ref())
+                );
+                let failed: Vec<InFlight> = {
+                    let mut g = roster
+                        .lock()
+                        .unwrap_or_else(|e| e.into_inner());
+                    g.drain().map(|(_, f)| f).collect()
+                };
+                lock(&stats).shard_restarts += 1;
+                for f in failed {
+                    let total_ms =
+                        f.enqueued.elapsed().as_secs_f64() * 1e3;
+                    // queue_ms is unknowable after the loop's state
+                    // died with it; 0 keeps the ordering invariant
+                    // queue_ms <= first_token_ms <= total_ms
+                    let _ = f.tx.send(Completion {
+                        id: f.id,
+                        tokens: Vec::new(),
+                        queue_ms: 0.0,
+                        first_token_ms: total_ms,
+                        total_ms,
+                        prefill_tokens: f.prefill_tokens,
+                        finish: FinishReason::ShardFailed,
+                    });
+                }
+                // fall through: restart the loop with a fresh cache
+            }
+        }
+    }
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+    payload
+        .downcast_ref::<&'static str>()
+        .copied()
+        .or_else(|| payload.downcast_ref::<String>().map(String::as_str))
+        .unwrap_or("non-string panic payload")
 }

@@ -15,6 +15,11 @@
 //!   exactly the histogram of the concatenated per-shard samples
 //!   (`util::stats::merge_histograms` is the same identity for the
 //!   analysis-side `Vec` histograms).
+//! * **Queue-scope counters** (`shed_busy`, `queue_rejections`) are
+//!   counted at the shared admission queue, not on any shard; the
+//!   facade stamps the same value onto every shard snapshot (like
+//!   `queue_peak`) and the merge takes the **max**, so the merged view
+//!   reports the true count instead of `shards ×` it.
 //!
 //! The merged-equals-sum/max contract is pinned by the tests below and
 //! by the live `Server::stats` vs `Server::shard_stats` test in
@@ -87,6 +92,26 @@ pub struct EngineStats {
     /// most KV blocks held by live sequences at once on this shard's
     /// pool (gauge: merge takes the max — each shard owns its pool)
     pub kv_blocks_peak: usize,
+    /// queued requests shed by an admission scan because their
+    /// deadline had already passed or the remaining budget could not
+    /// cover the estimated prefill+decode (never admitted; no KV was
+    /// ever reserved for them)
+    pub shed_deadline: u64,
+    /// blocking submits that gave up waiting for queue space
+    /// (`max_queue_wait` expired with the queue still full).  Queue-
+    /// scope like `queue_peak`: every shard snapshot carries the same
+    /// value and the merge's max preserves it.
+    pub shed_busy: u64,
+    /// in-flight sequences aborted mid-decode at their deadline; their
+    /// partial tokens were delivered and their KV blocks freed
+    pub deadline_aborts: u64,
+    /// shard engine loops restarted by the panic supervisor — each one
+    /// is a shard that panicked, failed its in-flight requests with
+    /// `FinishReason::ShardFailed`, and came back with a fresh pool
+    pub shard_restarts: u64,
+    /// non-blocking submits refused with `SubmitError::Busy` because
+    /// the queue was at `max_queue`.  Queue-scope (see `shed_busy`).
+    pub queue_rejections: u64,
     /// power-of-two request-latency histogram over `total_ms`: bucket
     /// `i` counts completions in `[2^(i-1), 2^i)` ms (see
     /// [`LATENCY_BUCKETS`]); merged element-wise across shards
@@ -149,6 +174,15 @@ impl EngineStats {
         self.prefix_hits += other.prefix_hits;
         self.prefix_blocks_shared += other.prefix_blocks_shared;
         self.cow_copies += other.cow_copies;
+        self.shed_deadline += other.shed_deadline;
+        self.deadline_aborts += other.deadline_aborts;
+        self.shard_restarts += other.shard_restarts;
+        // queue-scope counters: the queue belongs to no single shard,
+        // so every snapshot carries the same value — max preserves it
+        // (summing would multiply it by the shard count)
+        self.shed_busy = self.shed_busy.max(other.shed_busy);
+        self.queue_rejections =
+            self.queue_rejections.max(other.queue_rejections);
         self.max_active = self.max_active.max(other.max_active);
         self.queue_peak = self.queue_peak.max(other.queue_peak);
         self.kv_blocks_peak = self.kv_blocks_peak.max(other.kv_blocks_peak);
@@ -252,6 +286,11 @@ mod tests {
             prefix_blocks_shared: 8,
             cow_copies: 1,
             kv_blocks_peak: 5,
+            shed_deadline: 2,
+            shed_busy: 4,
+            deadline_aborts: 1,
+            shard_restarts: 1,
+            queue_rejections: 4,
             ..EngineStats::default()
         };
         s.record_latency(0.5);
@@ -279,6 +318,13 @@ mod tests {
             prefix_blocks_shared: 3,
             cow_copies: 0,
             kv_blocks_peak: 9,
+            shed_deadline: 3,
+            // queue-scope: shard B's snapshot carries the same shared
+            // queue values as shard A's (the facade stamps them)
+            shed_busy: 4,
+            deadline_aborts: 2,
+            shard_restarts: 0,
+            queue_rejections: 4,
             ..EngineStats::default()
         };
         s.record_latency(3.5);
@@ -304,10 +350,17 @@ mod tests {
         assert_eq!(m.prefix_hits, 3);
         assert_eq!(m.prefix_blocks_shared, 11);
         assert_eq!(m.cow_copies, 1);
+        assert_eq!(m.shed_deadline, 5);
+        assert_eq!(m.deadline_aborts, 3);
+        assert_eq!(m.shard_restarts, 1);
         // gauges: max across shards, never the sum
         assert_eq!(m.max_active, 4);
         assert_eq!(m.queue_peak, 5);
         assert_eq!(m.kv_blocks_peak, 9);
+        // queue-scope counters: every shard snapshot carries the same
+        // shared-queue value — the merge must report it, not 2x it
+        assert_eq!(m.shed_busy, 4);
+        assert_eq!(m.queue_rejections, 4);
         assert_eq!(m.latency_samples(), 4);
     }
 

@@ -1,0 +1,241 @@
+//! Deterministic fault injection for the chaos suite.
+//!
+//! A *failpoint* is a named site in production code (`fail_point!`)
+//! that does nothing until a test *arms* it, after which the matching
+//! [`hit`] panics on a precisely chosen occurrence — turning "what if
+//! the shard dies mid-decode?" into a reproducible unit test instead
+//! of a hope about rare crashes.  The whole module only exists under
+//! `cfg(any(test, feature = "failpoints"))`; in ordinary builds the
+//! `fail_point!` macro expands to nothing, so the hot paths carry
+//! zero cost.  Even when compiled in, an unarmed process takes one
+//! relaxed atomic load per site visit.
+//!
+//! Arming is **site-keyed and counted**: [`arm`]`(site, n)` fires on
+//! the n-th future visit to `site` and then disarms itself (one-shot),
+//! so a test gets exactly one injected fault at an exact point in the
+//! schedule.  [`arm_random`] instead flips a seeded coin on every
+//! visit — same seed, same schedule of faults — for soak-style runs.
+//!
+//! The registry is **process-global**.  Tests that arm a site used by
+//! live engine code must not run concurrently with other tests
+//! touching that code path: the chaos tests that inject panics are
+//! gated behind `feature = "failpoints"` and run single-threaded in
+//! the dedicated analysis job (see `.github/workflows/analysis.yml`),
+//! never in tier-1's parallel test run.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+/// What an armed site does on each visit.
+enum Plan {
+    /// Fire on the n-th future visit (1 = the very next), then disarm.
+    CountDown(u64),
+    /// Seeded coin flip per visit: fire with probability `p`.  Stays
+    /// armed after firing — the seed alone determines the schedule.
+    Random { rng: u64, p: f64 },
+}
+
+struct SiteState {
+    site: &'static str,
+    plan: Plan,
+    /// visits observed *while armed* (diagnostics for tests)
+    hits: u64,
+}
+
+/// Fast path: skip the registry lock entirely while nothing is armed.
+static ARMED: AtomicBool = AtomicBool::new(false);
+static SITES: Mutex<Vec<SiteState>> = Mutex::new(Vec::new());
+
+fn with_sites<T>(f: impl FnOnce(&mut Vec<SiteState>) -> T) -> T {
+    // a panic raised by `hit` never holds this lock (the guard is
+    // dropped first), but recover poison anyway: the registry is plain
+    // data with no invariant a panicking test could half-apply
+    let mut g = SITES.lock().unwrap_or_else(|e| e.into_inner());
+    f(&mut g)
+}
+
+/// splitmix64 step — the crate's stock dependency-free generator.
+fn next_u64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Arm `site` to panic on its `after_hits`-th future visit
+/// (`after_hits == 1` fires on the very next one), then disarm.
+/// Re-arming an already-armed site replaces its plan.
+pub fn arm(site: &'static str, after_hits: u64) {
+    assert!(after_hits > 0, "after_hits is 1-based");
+    with_sites(|sites| {
+        sites.retain(|s| s.site != site);
+        sites.push(SiteState {
+            site,
+            plan: Plan::CountDown(after_hits),
+            hits: 0,
+        });
+    });
+    ARMED.store(true, Ordering::Release);
+}
+
+/// Arm `site` to panic with probability `p` on every visit, driven by
+/// a private splitmix64 stream seeded with `seed` — the same seed
+/// reproduces the same fault schedule.  Stays armed after firing.
+pub fn arm_random(site: &'static str, seed: u64, p: f64) {
+    assert!((0.0..=1.0).contains(&p), "probability out of range: {p}");
+    with_sites(|sites| {
+        sites.retain(|s| s.site != site);
+        sites.push(SiteState {
+            site,
+            plan: Plan::Random { rng: seed, p },
+            hits: 0,
+        });
+    });
+    ARMED.store(true, Ordering::Release);
+}
+
+/// Disarm one site (a site that already fired its one-shot is gone).
+pub fn disarm(site: &str) {
+    with_sites(|sites| {
+        sites.retain(|s| s.site != site);
+        if sites.is_empty() {
+            ARMED.store(false, Ordering::Release);
+        }
+    });
+}
+
+/// Disarm everything — call at the start and end of any test that
+/// arms, so a failed assertion cannot leak faults into later tests.
+pub fn reset() {
+    with_sites(|sites| sites.clear());
+    ARMED.store(false, Ordering::Release);
+}
+
+/// Visits to `site` observed while it was armed (0 if never armed or
+/// already disarmed — the one-shot clears its state when it fires).
+pub fn observed_hits(site: &str) -> u64 {
+    with_sites(|sites| {
+        sites.iter().find(|s| s.site == site).map_or(0, |s| s.hits)
+    })
+}
+
+/// The call `fail_point!` expands to: panic here if this site is
+/// armed and its plan says this visit is the one.  The panic payload
+/// names the site so supervisors/logs can attribute the fault.
+pub fn hit(site: &str) {
+    if !ARMED.load(Ordering::Acquire) {
+        return;
+    }
+    let fire = with_sites(|sites| {
+        let Some(i) = sites.iter().position(|s| s.site == site) else {
+            return false;
+        };
+        sites[i].hits += 1;
+        match &mut sites[i].plan {
+            Plan::CountDown(n) => {
+                *n -= 1;
+                if *n == 0 {
+                    sites.remove(i); // one-shot: disarm before firing
+                    if sites.is_empty() {
+                        ARMED.store(false, Ordering::Release);
+                    }
+                    true
+                } else {
+                    false
+                }
+            }
+            Plan::Random { rng, p } => {
+                // top 53 bits → uniform in [0, 1)
+                let u = (next_u64(rng) >> 11) as f64 / (1u64 << 53) as f64;
+                u < *p
+            }
+        }
+    });
+    // the registry lock is released before unwinding
+    if fire {
+        panic!("failpoint '{site}' fired");
+    }
+}
+
+/// Compile-time no-op unless failpoints are compiled in; otherwise a
+/// maybe-panic at the named site (see [`hit`]).
+#[macro_export]
+macro_rules! fail_point {
+    ($site:expr) => {{
+        #[cfg(any(test, feature = "failpoints"))]
+        $crate::util::failpoint::hit($site);
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    // Site names here are private to these tests (never referenced by
+    // engine code), so arming them cannot perturb concurrently running
+    // serve tests.
+
+    #[test]
+    fn countdown_fires_on_exactly_the_nth_hit_then_disarms() {
+        arm("fp-test-countdown", 3);
+        hit("fp-test-countdown");
+        hit("fp-test-countdown");
+        let err = catch_unwind(AssertUnwindSafe(|| {
+            hit("fp-test-countdown");
+        }))
+        .unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("fp-test-countdown"), "{msg}");
+        // one-shot: the site disarmed itself before firing
+        hit("fp-test-countdown");
+        assert_eq!(observed_hits("fp-test-countdown"), 0);
+    }
+
+    #[test]
+    fn unarmed_sites_never_fire_and_disarm_clears() {
+        hit("fp-test-unarmed");
+        arm("fp-test-disarm", 1);
+        disarm("fp-test-disarm");
+        hit("fp-test-disarm"); // would panic if still armed
+    }
+
+    #[test]
+    fn random_plan_is_seed_deterministic() {
+        let schedule = |seed: u64| -> Vec<bool> {
+            arm_random("fp-test-random", seed, 0.5);
+            let out = (0..32)
+                .map(|_| {
+                    catch_unwind(AssertUnwindSafe(|| {
+                        hit("fp-test-random")
+                    }))
+                    .is_err()
+                })
+                .collect();
+            disarm("fp-test-random");
+            out
+        };
+        let a = schedule(42);
+        let b = schedule(42);
+        let c = schedule(43);
+        assert_eq!(a, b, "same seed must replay the same faults");
+        assert!(a.iter().any(|&f| f), "p=0.5 over 32 draws never fired");
+        assert!(a.iter().any(|&f| !f), "p=0.5 over 32 draws always fired");
+        assert_ne!(a, c, "different seeds should diverge (32 draws)");
+    }
+
+    #[test]
+    fn probability_bounds_are_respected() {
+        arm_random("fp-test-p0", 7, 0.0);
+        for _ in 0..64 {
+            hit("fp-test-p0"); // p = 0: must never fire
+        }
+        assert_eq!(observed_hits("fp-test-p0"), 64);
+        disarm("fp-test-p0");
+        arm_random("fp-test-p1", 7, 1.0);
+        let fired = catch_unwind(AssertUnwindSafe(|| hit("fp-test-p1")));
+        assert!(fired.is_err(), "p = 1 must fire on the first visit");
+        disarm("fp-test-p1");
+    }
+}

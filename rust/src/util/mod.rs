@@ -5,6 +5,8 @@
 //! shim every thread in the process is created through.
 
 pub mod bench;
+#[cfg(any(test, feature = "failpoints"))]
+pub mod failpoint;
 pub mod json;
 pub mod prop;
 pub mod rng;

@@ -15,6 +15,11 @@ counts {1, 2, 4} with a queue_peak gauge on every row.  The
 prefix-cache sweep must carry the sharing counters on every row and
 show the 80%-shared trace actually winning: TTFT and the peak block
 footprint strictly better with the cache on, hits only when it is on.
+The overload sweep must cover shed on and off, carry the shedding
+counters on every row, and show the QoS layer earning its keep:
+goodput and p99 TTFT strictly better with shedding on, deadline
+shedding provably engaged, and nothing shed when the queue is
+unbounded and deadline-free.
 """
 import json
 import sys
@@ -74,6 +79,50 @@ def check(report_path):
         f"{on['first_token_ms']:.1f} ms vs off "
         f"{off['first_token_ms']:.1f} ms, peak blocks "
         f"{int(on['kv_blocks_peak'])} vs {int(off['kv_blocks_peak'])}"
+    )
+
+    orows = [r for r in report["rows"] if r.get("section") == "overload"]
+    assert orows, "no section=overload rows in the report"
+    for r in orows:
+        for field in ("shed", "goodput_tok_s", "p99_ttft_ms", "served",
+                      "shed_busy", "shed_deadline", "queue_rejections",
+                      "deadline_aborts", "deadline_ms"):
+            assert field in r, f"missing {field}: {r}"
+    by_shed = {r["shed"]: r for r in orows}
+    assert set(by_shed) == {"on", "off"}, (
+        f"expected one shed=on and one shed=off row, got {sorted(by_shed)}"
+    )
+    on, off = by_shed["on"], by_shed["off"]
+    assert on["served"] > 0 and off["served"] > 0, (
+        f"an overload wave served nothing: on {on['served']}, "
+        f"off {off['served']}"
+    )
+    assert on["shed_deadline"] > 0, (
+        f"deadline shedding never engaged with the QoS layer on: {on}"
+    )
+    assert on["served"] < on["requests"], (
+        f"shed=on served the whole burst — no overload exercised: {on}"
+    )
+    for field in ("shed_busy", "shed_deadline", "queue_rejections",
+                  "deadline_aborts"):
+        assert off[field] == 0, (
+            f"{field} counted with shedding off: {off}"
+        )
+    assert on["goodput_tok_s"] > off["goodput_tok_s"], (
+        "shedding must improve within-deadline goodput under overload: "
+        f"on {on['goodput_tok_s']} <= off {off['goodput_tok_s']}"
+    )
+    assert on["p99_ttft_ms"] < off["p99_ttft_ms"], (
+        "shedding must improve p99 TTFT under overload: "
+        f"on {on['p99_ttft_ms']} >= off {off['p99_ttft_ms']}"
+    )
+    print(
+        f"{len(orows)} overload rows ok; goodput on "
+        f"{on['goodput_tok_s']:.0f} vs off {off['goodput_tok_s']:.0f} "
+        f"tok/s, p99 ttft on {on['p99_ttft_ms']:.1f} ms vs off "
+        f"{off['p99_ttft_ms']:.1f} ms, shed "
+        f"{int(on['shed_busy'])} busy / {int(on['shed_deadline'])} "
+        f"deadline / {int(on['queue_rejections'])} rejected"
     )
 
 

@@ -23,6 +23,13 @@
 //!    queue) name no `std::sync::{Mutex, Condvar, MutexGuard}`
 //!    directly — they go through the `util::sync` shim, so the loom
 //!    model checks the exact synchronization the release build runs.
+//! 5. **Panic-recovery confinement.**  `catch_unwind` appears only at
+//!    the audited recovery boundaries: the kernel worker pool
+//!    (`sparse/par.rs`, which re-raises on the submitting thread), the
+//!    shard supervisor (`serve/engine.rs`, which fails in-flight
+//!    requests and restarts the shard), and the failpoint unit tests
+//!    (`util/failpoint.rs`, which assert injected faults unwind).
+//!    Anywhere else, swallowing a panic hides bugs.
 //!
 //! Prints the full `unsafe` inventory either way; exits non-zero with
 //! a violation list when the gate fails.
@@ -86,6 +93,7 @@ fn check() -> ExitCode {
         scan_threads(&rel, &lines, &mut violations);
         scan_kernel_purity(&rel, &lines, &mut violations);
         scan_sync_shim(&rel, &lines, &mut violations);
+        scan_catch_unwind(&rel, &lines, &mut violations);
     }
     check_deny_attr(&root, &mut violations);
 
@@ -461,6 +469,43 @@ fn scan_sync_shim(
                     ),
                 });
             }
+        }
+    }
+}
+
+/// Panic-recovery boundaries are deliberate, audited design points —
+/// each allowlisted file either re-raises (the worker pool hands the
+/// payload back to the submitting shard thread), compensates (the
+/// shard supervisor fails every in-flight request and restarts the
+/// shard on a fresh pool), or is a test asserting that an injected
+/// fault really unwinds.  A `catch_unwind` anywhere else is almost
+/// certainly a bug being swallowed.
+const CATCH_UNWIND_ALLOWED: [&str; 3] = [
+    "rust/src/sparse/par.rs",
+    "rust/src/serve/engine.rs",
+    "rust/src/util/failpoint.rs",
+];
+
+fn scan_catch_unwind(
+    file: &str,
+    lines: &[Line],
+    violations: &mut Vec<Violation>,
+) {
+    if CATCH_UNWIND_ALLOWED.contains(&file) {
+        return;
+    }
+    for (li, line) in lines.iter().enumerate() {
+        if line.code.contains("catch_unwind") {
+            violations.push(Violation {
+                file: file.to_string(),
+                line: li + 1,
+                msg: "`catch_unwind` outside the audited recovery \
+                      boundaries (sparse/par.rs worker pool, \
+                      serve/engine.rs shard supervisor, \
+                      util/failpoint.rs tests) — recover or re-raise \
+                      there, never swallow panics elsewhere"
+                    .to_string(),
+            });
         }
     }
 }
